@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing. Every benchmark prints CSV rows:
+    name,us_per_call,derived
+where ``derived`` is the figure-relevant metric (speedup, Gbps, $/GB, ...).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class timed:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        self.us = (time.time() - self.t0) * 1e6
+        return False

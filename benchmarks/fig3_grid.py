@@ -1,0 +1,34 @@
+"""Fig. 3: intra-cloud vs inter-cloud link throughput per source provider."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timed
+
+
+def run():
+    from repro.core import default_topology
+
+    with timed() as t:
+        top = default_topology()
+    providers = ["aws", "azure", "gcp"]
+    prov = np.array([r.provider for r in top.regions])
+    for p in providers:
+        src = prov == p
+        for q in providers:
+            dst = prov == q
+            block = top.tput[np.ix_(src, dst)]
+            mask = block > 0
+            med = float(np.median(block[mask]))
+            p90 = float(np.quantile(block[mask], 0.9))
+            kind = "intra" if p == q else "inter"
+            emit(f"fig3/{p}->{q}/{kind}_median_gbps", t.us, round(med, 2))
+            emit(f"fig3/{p}->{q}/{kind}_p90_gbps", t.us, round(p90, 2))
+    # the paper's headline observation: inter-cloud consistently slower
+    intra = [top.tput[np.ix_(prov == p, prov == p)] for p in providers]
+    inter = [top.tput[np.ix_(prov == p, prov != p)] for p in providers]
+    med_intra = np.median(np.concatenate([b[b > 0].ravel() for b in intra]))
+    med_inter = np.median(np.concatenate([b[b > 0].ravel() for b in inter]))
+    emit("fig3/intra_over_inter_median", t.us, round(float(med_intra / med_inter), 2))
+    assert med_intra > med_inter

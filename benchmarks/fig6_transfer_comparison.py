@@ -1,0 +1,54 @@
+"""Fig. 6 / §7.2: Skyplane vs managed cloud transfer services.
+
+Six source->destination panels (three intra-cloud, three inter-cloud, each
+ending at the cloud whose managed service is compared). Skyplane runs with
+8 VMs under a cost ceiling; services use their measured-rate models. The
+fluid simulator provides transfer times; the "storage I/O overhead" thatch
+of the figure corresponds to the chunked object-store read/write the
+gateway performs (folded into the achieved goodput here).
+"""
+
+from __future__ import annotations
+
+from .common import FAST, emit, timed
+
+ROUTES = [
+    # (src, dst, service attr, label)
+    ("aws:us-east-1", "aws:ap-southeast-2", "AWS_DATASYNC", "aws->aws"),
+    ("gcp:us-central1", "gcp:asia-northeast1", "GCP_STORAGE_TRANSFER", "gcp->gcp"),
+    ("azure:westus2", "azure:koreacentral", "AZURE_AZCOPY", "azure->azure"),
+    ("azure:eastus", "aws:ap-northeast-1", "AWS_DATASYNC", "azure->aws"),
+    ("aws:us-east-1", "gcp:europe-west4", "GCP_STORAGE_TRANSFER", "aws->gcp"),
+    ("gcp:us-east1", "azure:southeastasia", "AZURE_AZCOPY", "gcp->azure"),
+]
+
+
+def run():
+    import repro.core.baselines as B
+    from repro.core import Planner, default_topology, direct_plan
+    from repro.transfer import execute_plan, execute_service_model
+
+    top = default_topology()
+    planner = Planner(top)
+    volume = 8.0 if FAST else 32.0
+    chunk = 32.0
+
+    for src, dst, svc_name, label in ROUTES[: 2 if FAST else None]:
+        svc = getattr(B, svc_name)
+        with timed() as t:
+            dp = direct_plan(top, src, dst, volume)
+            plan = planner.plan_tput_max(
+                src, dst, cost_ceiling_per_gb=max(dp.cost_per_gb * 1.15,
+                                                  svc.cost(top, src, dst, 1.0)),
+                volume_gb=volume, n_samples=8 if FAST else 16,
+            )
+            rep = execute_plan(plan, chunk_mb=chunk, seed=0)
+        svc_res = execute_service_model(svc, top, src, dst, volume)
+        speedup = svc_res["time_s"] / rep.time_s
+        emit(f"fig6/{label}/skyplane_gbps", t.us, round(rep.sim.tput_gbps, 2))
+        emit(f"fig6/{label}/{svc.name}_gbps", t.us, round(svc_res["tput_gbps"], 2))
+        emit(f"fig6/{label}/speedup_vs_service", t.us, round(speedup, 2))
+        emit(f"fig6/{label}/skyplane_cost_per_gb", t.us,
+             round(rep.sim.total_cost / volume, 4))
+        emit(f"fig6/{label}/service_cost_per_gb", t.us,
+             round(svc_res["cost"] / volume, 4))

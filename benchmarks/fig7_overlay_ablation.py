@@ -1,0 +1,53 @@
+"""Fig. 7 / §7.3: predicted throughput, direct vs overlay, across region
+pairs grouped by (source cloud -> dest cloud). The paper evaluates all 5184
+pairs with the planner (not live transfers); we sample pairs per cloud-pair
+block and report the distribution of overlay speedups.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import FAST, emit, timed
+
+
+def run():
+    from repro.core import Planner, default_topology, direct_plan
+
+    top = default_topology()
+    planner = Planner(top, max_relays=8)
+    rng = np.random.default_rng(7)
+    prov = np.array([r.provider for r in top.regions])
+    keys = top.keys()
+    per_block = 2 if FAST else 5
+
+    speedups_all = []
+    for p in ("aws", "azure", "gcp"):
+        for q in ("aws", "azure", "gcp"):
+            src_ix = np.where(prov == p)[0]
+            dst_ix = np.where(prov == q)[0]
+            pairs = []
+            while len(pairs) < per_block:
+                s, d = rng.choice(src_ix), rng.choice(dst_ix)
+                if s != d:
+                    pairs.append((int(s), int(d)))
+            sp = []
+            with timed() as t:
+                for s, d in pairs:
+                    dp = direct_plan(top, keys[s], keys[d], 50.0)
+                    plan = planner.plan_tput_max(
+                        keys[s], keys[d], dp.cost_per_gb * 1.25, 50.0,
+                        n_samples=8,
+                    )
+                    sp.append(plan.throughput / max(dp.throughput, 1e-9))
+            sp = np.array(sp)
+            speedups_all.extend(sp.tolist())
+            emit(f"fig7/{p}->{q}/median_speedup",
+                 t.us / len(pairs), round(float(np.median(sp)), 2))
+            emit(f"fig7/{p}->{q}/max_speedup",
+                 t.us / len(pairs), round(float(sp.max()), 2))
+    arr = np.array(speedups_all)
+    emit("fig7/all/median_speedup", 0.0, round(float(np.median(arr)), 2))
+    emit("fig7/all/frac_pairs_speedup_gt_1.5x", 0.0,
+         round(float((arr > 1.5).mean()), 2))
+    emit("fig7/all/max_speedup", 0.0, round(float(arr.max()), 2))

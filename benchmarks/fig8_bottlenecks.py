@@ -1,0 +1,54 @@
+"""Fig. 8 / §7.4: where are transfers bottlenecked (>=99% utilization),
+with and without the overlay. Uses the fluid simulator's per-resource
+utilization attribution."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import FAST, emit, timed
+
+
+def run():
+    from repro.core import Planner, default_topology, direct_plan
+    from repro.transfer import simulate_transfer
+
+    top = default_topology()
+    planner = Planner(top, max_relays=8)
+    rng = np.random.default_rng(8)
+    keys = top.keys()
+    n_pairs = 4 if FAST else 10
+    volume = 4.0
+
+    counts = {"direct": {}, "overlay": {}}
+    totals = {"direct": 0, "overlay": 0}
+    with timed() as t:
+        done = 0
+        while done < n_pairs:
+            s, d = rng.integers(0, top.num_regions, 2)
+            if s == d:
+                continue
+            done += 1
+            dp = direct_plan(top, keys[s], keys[d], volume, num_vms=2)
+            op = planner.plan_tput_max(keys[s], keys[d],
+                                       dp.cost_per_gb * 1.3, volume,
+                                       n_samples=6)
+            for mode, plan in (("direct", dp), ("overlay", op)):
+                res = simulate_transfer(plan, chunk_mb=16, seed=done,
+                                        straggler_prob=0.0)
+                totals[mode] += 1
+                # paper counts locations at >99% utilization; a fluid sim
+                # with ramp/tail phases never averages that high, so we
+                # attribute the *most utilized* resource(s): everything
+                # within 5% of the max (>=1 bottleneck per transfer).
+                peak = max(res.utilization.values())
+                for loc, u in res.utilization.items():
+                    if u >= peak * 0.95:
+                        counts[mode][loc] = counts[mode].get(loc, 0) + 1
+    for mode in ("direct", "overlay"):
+        for loc in ("source_vm", "source_link", "overlay_vm", "overlay_link",
+                    "dest_vm"):
+            frac = counts[mode].get(loc, 0) / max(totals[mode], 1)
+            emit(f"fig8/{mode}/{loc}_bottleneck_frac",
+                 t.us / max(totals["direct"] + totals["overlay"], 1),
+                 round(frac, 2))

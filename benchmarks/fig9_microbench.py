@@ -1,0 +1,74 @@
+"""Fig. 9 microbenchmarks: (a) parallel-TCP scaling, (b) parallel-VM
+scaling, (c) the cost-throughput Pareto frontier."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import FAST, emit, timed
+
+
+def _forced_conn_plan(top, src, dst, n_conn: int, volume: float):
+    """Direct 1-VM-per-region plan with exactly n_conn connections."""
+    from repro.core.plan import TransferPlan
+
+    s, t = top.index(src), top.index(dst)
+    v = top.num_regions
+    F = np.zeros((v, v))
+    M = np.zeros((v, v))
+    N = np.zeros(v)
+    from repro.transfer.flowsim import conn_efficiency
+
+    tput = top.tput[s, t] * conn_efficiency(n_conn, top.limit_conn)
+    F[s, t] = min(tput, top.limit_egress[s], top.limit_ingress[t])
+    M[s, t] = n_conn
+    N[s] = N[t] = 1
+    return TransferPlan(top=top, src=s, dst=t, tput_goal=F[s, t],
+                        volume_gb=volume, F=F, N=N, M=M)
+
+
+def run():
+    from repro.core import Planner, default_topology, direct_plan
+    from repro.transfer import simulate_transfer
+
+    top = default_topology()
+    volume = 2.0 if FAST else 8.0
+
+    # ---- 9a: throughput vs parallel TCP connections (paper: ap-northeast-1
+    # -> eu-central-1, 1 VM, plateau near but below the 5 Gbps AWS cap)
+    src, dst = "aws:ap-northeast-1", "aws:eu-central-1"
+    for n in ([8, 64] if FAST else [1, 4, 16, 32, 64]):
+        plan = _forced_conn_plan(top, src, dst, n, volume)
+        with timed() as t:
+            res = simulate_transfer(plan, chunk_mb=16, seed=0,
+                                    straggler_prob=0.0)
+        emit(f"fig9a/conns={n}/gbps", t.us, round(res.tput_gbps, 3))
+    assert _forced_conn_plan(top, src, dst, 64, 1.0).throughput <= 5.0
+
+    # ---- 9b: throughput vs parallel VMs (direct path)
+    for n_vm in ([2, 8] if FAST else [1, 2, 4, 8]):
+        plan = direct_plan(top, src, dst, volume, num_vms=n_vm)
+        with timed() as t:
+            res = simulate_transfer(plan, chunk_mb=16, seed=0,
+                                    straggler_prob=0.0)
+        emit(f"fig9b/vms={n_vm}/gbps", t.us, round(res.tput_gbps, 3))
+
+    # ---- 9c: cost-throughput trade-off (three routes of the paper)
+    routes = [
+        ("azure:westus", "aws:eu-west-1", "considerable"),
+        ("gcp:asia-east1", "aws:sa-east-1", "good"),
+        ("aws:af-south-1", "aws:ap-southeast-2", "minimal"),
+    ]
+    planner = Planner(top)
+    for s, d, label in routes[: 1 if FAST else None]:
+        with timed() as t:
+            pts = planner.pareto_frontier(s, d, 50.0,
+                                          n_samples=6 if FAST else 14)
+        base = pts[0].cost_per_gb
+        for p in pts[:: max(len(pts) // 5, 1)]:
+            emit(
+                f"fig9c/{label}/budget={p.cost_per_gb/base:.2f}x",
+                t.us / len(pts), round(p.plan.throughput, 2),
+            )
+        dmax = max(p.plan.throughput for p in pts)
+        emit(f"fig9c/{label}/max_gbps", t.us / len(pts), round(dmax, 2))

@@ -1,0 +1,60 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape x
+mesh) three-term roofline table. Reads artifacts/dryrun/*.json (produced by
+`python -m repro.launch.dryrun --all`)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def iter_artifacts(mesh: str = "single", variant: str | None = None):
+    for f in sorted(ART.glob("*.json")):
+        parts = f.stem.split("__")
+        if len(parts) < 3 or parts[2] != mesh:
+            continue
+        if variant is None and len(parts) > 3:
+            continue
+        if variant is not None and (len(parts) < 4 or parts[3] != variant):
+            continue
+        yield json.loads(f.read_text())
+
+
+def run():
+    if not ART.exists():
+        emit("roofline/missing_artifacts", 0.0, "run repro.launch.dryrun first")
+        return
+    worst = None
+    most_coll = None
+    for a in iter_artifacts("single"):
+        name = f"{a['arch']}/{a['shape']}"
+        if a["status"] == "skipped":
+            emit(f"roofline/{name}/skipped", 0.0, a["skip_reason"][:40])
+            continue
+        r = a.get("roofline")
+        if not r:
+            continue
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = r["compute_s"] / max(total, 1e-12)
+        emit(f"roofline/{name}/compute_s", 0.0, f"{r['compute_s']:.4f}")
+        emit(f"roofline/{name}/memory_s", 0.0, f"{r['memory_s']:.4f}")
+        emit(f"roofline/{name}/collective_s", 0.0, f"{r['collective_s']:.4f}")
+        emit(f"roofline/{name}/dominant", 0.0, r["dominant"])
+        emit(f"roofline/{name}/compute_fraction", 0.0, f"{frac:.3f}")
+        emit(f"roofline/{name}/useful_flops_ratio", 0.0,
+             f"{r['useful_flops_ratio']:.3f}")
+        if worst is None or frac < worst[1]:
+            worst = (name, frac)
+        cfrac = r["collective_s"] / max(total, 1e-12)
+        if most_coll is None or cfrac > most_coll[1]:
+            most_coll = (name, cfrac)
+    if worst:
+        emit("roofline/worst_compute_fraction_cell", 0.0,
+             f"{worst[0]}:{worst[1]:.3f}")
+    if most_coll:
+        emit("roofline/most_collective_bound_cell", 0.0,
+             f"{most_coll[0]}:{most_coll[1]:.3f}")

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,table2]
+
+Prints ``name,us_per_call,derived`` CSV rows (common.emit). Set
+REPRO_BENCH_FAST=1 for the abbreviated suite used in CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (  # noqa: F401
+    fig3_grid,
+    fig6_transfer_comparison,
+    fig7_overlay_ablation,
+    fig8_bottlenecks,
+    fig9_microbench,
+    fig10_overlay_vs_vms,
+    roofline,
+    solver_bench,
+    table2_academic,
+)
+
+MODULES = {
+    "fig3": fig3_grid,
+    "fig6": fig6_transfer_comparison,
+    "fig7": fig7_overlay_ablation,
+    "fig8": fig8_bottlenecks,
+    "fig9": fig9_microbench,
+    "fig10": fig10_overlay_vs_vms,
+    "table2": table2_academic,
+    "solver": solver_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (default: all)")
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

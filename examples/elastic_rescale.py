@@ -1,0 +1,55 @@
+"""Elastic fleet rescale: price the state movement for a pod joining the
+fleet (a Skyplane flow job), then re-mesh the training state and keep
+training.
+
+    PYTHONPATH=src python examples/elastic_rescale.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch, reduced  # noqa: E402
+from repro.core import default_topology  # noqa: E402
+from repro.launch.elastic import plan_reshard, reshard_state  # noqa: E402
+from repro.models import init_params, loss_fn  # noqa: E402
+from repro.sharding.specs import ShardingRules  # noqa: E402
+from repro.train.optimizer import init_opt_state  # noqa: E402
+
+
+def main():
+    cfg = reduced(get_arch("qwen2-7b"))
+    top = default_topology()
+
+    pods_old = ["aws:us-west-2", "gcp:us-central1"]
+    pods_new = pods_old + ["azure:westeurope"]
+    plan = plan_reshard(cfg, top, pods_old, pods_new, tput_floor_gbps=5.0)
+    print(f"pod join: {plan.old_pods} -> {plan.new_pods} pods")
+    for src, dst, gb, tput, cost in plan.moves:
+        print(f"  bootstrap {dst} from {src}: {gb:.3f} GB at "
+              f"{tput:.1f} Gbps, ${cost:.4f} (est {plan.est_time_s:.1f}s)")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": init_opt_state(params)}
+    mesh, state2 = reshard_state(cfg, state, new_pods=1, data=1, model=1)
+    print(f"state re-meshed onto {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    # training continues on the new mesh
+    rules = ShardingRules(batch=None, fsdp=None, tp=None)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                     cfg.vocab_size),
+    }
+    loss, _ = jax.jit(lambda p, b: loss_fn(cfg, rules, p, b))(
+        state2["params"], batch
+    )
+    print(f"post-rescale loss: {float(loss):.3f} (finite => state intact)")
+
+
+if __name__ == "__main__":
+    main()

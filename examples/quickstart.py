@@ -1,0 +1,54 @@
+"""Quickstart: plan and execute a cloud bulk transfer with Skyplane's
+planner (paper Fig. 1 route), then run it on the simulated data plane.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses  # noqa: E402
+
+from repro.core import Planner, default_topology, direct_plan  # noqa: E402
+from repro.transfer import execute_plan  # noqa: E402
+
+
+def main():
+    # 4-VM service limit keeps this quick; drop the replace() for the full
+    # 8-VM plans used in the benchmarks.
+    top = dataclasses.replace(default_topology(), limit_vm=4)
+    planner = Planner(top)
+    src, dst = "azure:canadacentral", "gcp:asia-northeast1"
+    volume_gb = 16.0
+
+    # ----- the naive baseline: direct path, max VMs
+    direct = direct_plan(top, src, dst, volume_gb, num_vms=4)
+    print(f"direct path:  {direct.throughput:6.2f} Gbps "
+          f"at ${direct.cost_per_gb:.4f}/GB")
+
+    # ----- Skyplane mode 2: maximize throughput under a 1.25x price ceiling
+    plan = planner.plan_tput_max(
+        src, dst, cost_ceiling_per_gb=direct.cost_per_gb * 1.25,
+        volume_gb=volume_gb,
+    )
+    print(plan.describe())
+    print(f"-> {plan.throughput / direct.throughput:.2f}x faster for "
+          f"{plan.cost_per_gb / direct.cost_per_gb:.2f}x the price")
+
+    # ----- Skyplane mode 1: cheapest plan that sustains 20 Gbps
+    cheap = planner.plan_cost_min(src, dst, 20.0, volume_gb)
+    print(f"cost-min @20Gbps: ${cheap.cost_per_gb:.4f}/GB "
+          f"({cheap.throughput:.1f} Gbps planned)")
+
+    # ----- execute on the fluid data plane (chunks, stragglers, flow ctrl)
+    rep = execute_plan(plan, chunk_mb=16, seed=0)
+    print(f"simulated: {rep.sim.tput_gbps:.2f} Gbps achieved "
+          f"({rep.tput_ratio:.0%} of plan), realized cost "
+          f"${rep.sim.total_cost:.2f} vs planned ${plan.total_cost:.2f}")
+    assert rep.tput_ratio > 0.6
+
+
+if __name__ == "__main__":
+    main()

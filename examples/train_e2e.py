@@ -1,0 +1,18 @@
+"""End-to-end training driver (thin wrapper over repro.launch.train).
+
+Default: a 0.25-scale smollm derivative for ~50 steps on CPU. The full
+~135M-parameter run of the brief:
+
+    PYTHONPATH=src python examples/train_e2e.py --scale 1.0 --steps 200 \
+        --batch 8 --seq 256
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

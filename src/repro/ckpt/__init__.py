@@ -1,0 +1,6 @@
+from .checkpoint import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+from .replicate import replicate_checkpoint  # noqa: F401

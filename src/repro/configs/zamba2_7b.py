@@ -1,0 +1,5 @@
+"""--arch config module (exact dims in archs.py)."""
+from .archs import ZAMBA2_7B as CONFIG  # noqa: F401
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,15 @@
+"""Skyplane's contribution: cost/throughput-optimal overlay planning (paper §4-§5)."""
+
+from .topology import Region, Topology, GBIT_PER_GB  # noqa: F401
+from .profiles import default_topology, toy_topology  # noqa: F401
+from .plan import TransferPlan  # noqa: F401
+from .planner import Planner, ParetoPoint  # noqa: F401
+from .ron import ron_plan  # noqa: F401
+from .baselines import (  # noqa: F401
+    AWS_DATASYNC,
+    AZURE_AZCOPY,
+    GCP_STORAGE_TRANSFER,
+    CloudServiceModel,
+    direct_plan,
+    gridftp_plan,
+)

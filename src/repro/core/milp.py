@@ -1,0 +1,270 @@
+"""Skyplane's MILP formulation (paper §5.1.4, Eq. 4a-4j) as LP matrices.
+
+Decision vector layout:  x = [ F (E), N (V), M (E) ]
+  F_e  >= 0  flow on directed edge e (Gbit/s)
+  N_v  >= 0  VMs provisioned in region v         (integer in the MILP)
+  M_e  >= 0  TCP connections on edge e (pooled across the region pair;
+             integer in the MILP)
+
+Objective (Eq. 4a): minimize  (VOLUME / TPUT_GOAL) * (<F, Cost_egress> + <N, Cost_vm>)
+The leading factor is a positive constant after the paper's linear
+reformulation (transfer time == VOLUME / TPUT_GOAL), so the LP minimizes the
+unscaled "cost per second" and the caller scales afterwards.
+
+Constraints (paper numbering):
+  4b  F_e <= (Limit_link_e / Limit_conn) * M_e      per-connection throughput
+  4c  sum_v F_{s,v} >= TPUT_GOAL                    source egress meets goal
+  4d  sum_u F_{u,t} >= TPUT_GOAL                    dest ingress meets goal
+  4e  flow conservation at every v not in {s, t}
+  4f  sum_u F_{u,v} <= Limit_ingress_v * N_v        per-VM ingress scaled by VMs
+  4g  sum_w F_{u,w} <= Limit_egress_u * N_u         per-VM egress scaled by VMs
+  4h  sum_w M_{u,w} <= Limit_conn * N_u             outgoing conns per region
+  4i  sum_u M_{u,v} <= Limit_conn * N_v             incoming conns per region
+  4j  N_v <= Limit_vm
+
+ERRATUM NOTE: the paper's printed 4h/4i bound region u's outgoing connections
+by N_v and incoming by N_u — a typesetting slip (the text of §5.1.2 says "the
+maximum number of egress TCP connections per region [scales] by the number of
+VMs provisioned in each region"). We implement the semantically consistent
+version above.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import GBIT_PER_GB, Topology
+
+
+@dataclasses.dataclass
+class LPData:
+    """min c@x  s.t.  A_ub@x <= b_ub,  A_eq@x = b_eq,  x >= 0."""
+
+    c: np.ndarray
+    A_ub: np.ndarray
+    b_ub: np.ndarray
+    A_eq: np.ndarray
+    b_eq: np.ndarray
+    integer_mask: np.ndarray  # True where x must be integral in the MILP
+    # bookkeeping for unpacking solutions
+    edges: list[tuple[int, int]]
+    num_regions: int
+    src: int
+    dst: int
+    tput_goal: float
+    row_4c: int  # row index of the source-egress constraint in A_ub
+    row_4d: int
+    # fixed-variable elimination (round-down refits): full-space values for
+    # pinned variables; solver variables are the free columns only. F columns
+    # come first and are never pinned, so F indices are stable.
+    fixed_values: np.ndarray | None = None  # [nx_full] nan where free
+    trivially_infeasible: bool = False
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    def _full_x(self, x: np.ndarray) -> np.ndarray:
+        if self.fixed_values is None:
+            return x
+        full = self.fixed_values.copy()
+        full[np.isnan(self.fixed_values)] = x
+        return full
+
+    def split(self, x: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """solver x -> (F [V,V], N [V], M [V,V])."""
+        x = self._full_x(np.asarray(x, dtype=float))
+        e, v = self.n_edges, self.num_regions
+        F = np.zeros((v, v))
+        M = np.zeros((v, v))
+        for k, (u, w) in enumerate(self.edges):
+            F[u, w] = x[k]
+            M[u, w] = x[e + v + k]
+        N = np.asarray(x[e : e + v], dtype=float).copy()
+        return F, N, M
+
+
+def build_lp(
+    top: Topology,
+    src: int,
+    dst: int,
+    tput_goal: float,
+    *,
+    fixed_n: np.ndarray | None = None,
+    fixed_m: np.ndarray | None = None,
+    extra_ub: list[tuple[np.ndarray, float]] | None = None,
+) -> LPData:
+    """Build Eq. 4a-4j for a single s->t job on ``top``.
+
+    fixed_n: if given, adds N_v == fixed_n[v] equality rows (used when
+      re-fitting F, M after integer rounding of N).
+    fixed_m: if given, adds M_e == fixed_m[u,w] equality rows (round-down
+      refit of F with both integer allocations pinned, §5.1.3).
+    extra_ub: extra inequality rows (used by branch & bound for bound cuts).
+    """
+    v = top.num_regions
+    edges = top.edge_list(src, dst)
+    e = len(edges)
+    nx = 2 * e + v
+    iF = lambda k: k
+    iN = lambda r: e + r
+    iM = lambda k: e + v + k
+
+    # ---- objective: $/s of the running transfer (Eq. 4a without the constant)
+    c = np.zeros(nx)
+    for k, (u, w) in enumerate(edges):
+        c[iF(k)] = top.price_egress[u, w] / GBIT_PER_GB  # $/Gbit * Gbit/s = $/s
+    for r in range(v):
+        c[iN(r)] = top.price_vm[r]
+
+    rows_ub: list[np.ndarray] = []
+    b_ub: list[float] = []
+
+    def add_ub(row: np.ndarray, b: float) -> int:
+        rows_ub.append(row)
+        b_ub.append(b)
+        return len(b_ub) - 1
+
+    # ---- 4b: per-connection throughput cap
+    for k, (u, w) in enumerate(edges):
+        row = np.zeros(nx)
+        row[iF(k)] = 1.0
+        row[iM(k)] = -top.tput[u, w] / top.limit_conn
+        add_ub(row, 0.0)
+
+    # ---- 4c / 4d: goal throughput at the endpoints (>=, negated into <=)
+    row = np.zeros(nx)
+    for k, (u, w) in enumerate(edges):
+        if u == src:
+            row[iF(k)] = -1.0
+    row_4c = add_ub(row, -tput_goal)
+
+    row = np.zeros(nx)
+    for k, (u, w) in enumerate(edges):
+        if w == dst:
+            row[iF(k)] = -1.0
+    row_4d = add_ub(row, -tput_goal)
+
+    # ---- 4f / 4g: per-region ingress/egress scaled by VM count
+    for r in range(v):
+        row = np.zeros(nx)
+        for k, (u, w) in enumerate(edges):
+            if w == r:
+                row[iF(k)] = 1.0
+        row[iN(r)] = -top.limit_ingress[r]
+        add_ub(row, 0.0)
+    for r in range(v):
+        row = np.zeros(nx)
+        for k, (u, w) in enumerate(edges):
+            if u == r:
+                row[iF(k)] = 1.0
+        row[iN(r)] = -top.limit_egress[r]
+        add_ub(row, 0.0)
+
+    # ---- 4h / 4i: connection count scaled by VM count (erratum-corrected)
+    for r in range(v):
+        row = np.zeros(nx)
+        for k, (u, w) in enumerate(edges):
+            if u == r:
+                row[iM(k)] = 1.0
+        row[iN(r)] = -float(top.limit_conn)
+        add_ub(row, 0.0)
+    for r in range(v):
+        row = np.zeros(nx)
+        for k, (u, w) in enumerate(edges):
+            if w == r:
+                row[iM(k)] = 1.0
+        row[iN(r)] = -float(top.limit_conn)
+        add_ub(row, 0.0)
+
+    # ---- 4j: per-region VM limit
+    for r in range(v):
+        row = np.zeros(nx)
+        row[iN(r)] = 1.0
+        add_ub(row, float(top.limit_vm))
+
+    if extra_ub:
+        for row, b in extra_ub:
+            add_ub(np.asarray(row, dtype=float), float(b))
+
+    # ---- 4e: flow conservation at relays
+    rows_eq: list[np.ndarray] = []
+    b_eq: list[float] = []
+    for r in range(v):
+        if r in (src, dst):
+            continue
+        row = np.zeros(nx)
+        touched = False
+        for k, (u, w) in enumerate(edges):
+            if w == r:
+                row[iF(k)] += 1.0
+                touched = True
+            if u == r:
+                row[iF(k)] -= 1.0
+                touched = True
+        if touched:
+            rows_eq.append(row)
+            b_eq.append(0.0)
+
+    integer_mask = np.zeros(nx, dtype=bool)
+    integer_mask[e : e + v] = True  # N
+    integer_mask[e + v :] = True  # M
+
+    A_ub = np.array(rows_ub) if rows_ub else np.zeros((0, nx))
+    b_ub_arr = np.array(b_ub)
+    A_eq = np.array(rows_eq) if rows_eq else np.zeros((0, nx))
+    b_eq_arr = np.array(b_eq)
+
+    # ---- eliminate pinned variables (numerically cleaner than eq rows)
+    fixed_values = None
+    trivially_infeasible = False
+    if fixed_n is not None or fixed_m is not None:
+        fixed_values = np.full(nx, np.nan)
+        if fixed_n is not None:
+            fixed_values[e : e + v] = np.asarray(fixed_n, dtype=float)
+        if fixed_m is not None:
+            for k, (u, w) in enumerate(edges):
+                fixed_values[iM(k)] = float(fixed_m[u, w])
+        pinned = ~np.isnan(fixed_values)
+        xb = np.where(pinned, fixed_values, 0.0)
+        if A_ub.size:
+            b_ub_arr = b_ub_arr - A_ub @ xb
+            A_ub = A_ub[:, ~pinned]
+        if A_eq.size:
+            b_eq_arr = b_eq_arr - A_eq @ xb
+            A_eq = A_eq[:, ~pinned]
+        c = c[~pinned]
+        integer_mask = integer_mask[~pinned]
+        # drop rows that became vacuous; detect trivial infeasibility
+        if A_ub.size:
+            zero = np.abs(A_ub).max(axis=1) < 1e-12
+            if (b_ub_arr[zero] < -1e-9).any():
+                trivially_infeasible = True
+            A_ub = A_ub[~zero]
+            b_ub_arr = b_ub_arr[~zero]
+        if A_eq.size:
+            zero = np.abs(A_eq).max(axis=1) < 1e-12
+            if (np.abs(b_eq_arr[zero]) > 1e-9).any():
+                trivially_infeasible = True
+            A_eq = A_eq[~zero]
+            b_eq_arr = b_eq_arr[~zero]
+
+    return LPData(
+        c=c,
+        A_ub=A_ub,
+        b_ub=b_ub_arr,
+        A_eq=A_eq,
+        b_eq=b_eq_arr,
+        integer_mask=integer_mask,
+        edges=edges,
+        num_regions=v,
+        src=src,
+        dst=dst,
+        tput_goal=tput_goal,
+        row_4c=row_4c,
+        row_4d=row_4d,
+        fixed_values=fixed_values,
+        trivially_infeasible=trivially_infeasible,
+    )

@@ -1,0 +1,168 @@
+"""TransferPlan: the output of Skyplane's planner (paper Fig. 5).
+
+A plan pins down the overlay topology (F), resource allocation (N VMs per
+region, M connections per region pair) and exposes the paper's cost model:
+
+  egress cost = sum_e  (bytes through e) * price_e          [volume-billed, §2]
+  vm cost     = sum_v  N_v * price_vm_v * transfer_time
+  transfer_time = VOLUME / TPUT_GOAL                        [linear reformulation]
+
+``validate`` re-checks every constraint 4b-4j so tests (and hypothesis
+properties) can assert that any plan the solver emits is feasible.
+``paths`` decomposes F into weighted s->t paths for the data plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import GBIT_PER_GB, Topology
+
+_TOL = 1e-5
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    top: Topology
+    src: int
+    dst: int
+    tput_goal: float  # Gbit/s
+    volume_gb: float  # GB to move
+    F: np.ndarray  # [V,V] Gbit/s
+    N: np.ndarray  # [V] VMs (int)
+    M: np.ndarray  # [V,V] TCP connections (int)
+    solver_status: str = "optimal"
+
+    # ------------------------------------------------------------------ costs
+    @property
+    def throughput(self) -> float:
+        """Planned end-to-end throughput (Gbit/s)."""
+        return float(self.F[self.src, :].sum())
+
+    @property
+    def transfer_time_s(self) -> float:
+        return self.volume_gb * GBIT_PER_GB / max(self.throughput, 1e-9)
+
+    @property
+    def egress_cost(self) -> float:
+        t = self.transfer_time_s
+        gb_per_edge = self.F * t / GBIT_PER_GB
+        return float((gb_per_edge * self.top.price_egress).sum())
+
+    @property
+    def vm_cost(self) -> float:
+        return float(self.N @ self.top.price_vm) * self.transfer_time_s
+
+    @property
+    def total_cost(self) -> float:
+        return self.egress_cost + self.vm_cost
+
+    @property
+    def cost_per_gb(self) -> float:
+        return self.total_cost / max(self.volume_gb, 1e-9)
+
+    @property
+    def num_vms(self) -> int:
+        return int(self.N.sum())
+
+    # ------------------------------------------------------------- valididity
+    def validate(self, tol: float = _TOL) -> list[str]:
+        """Returns a list of violated-constraint descriptions (empty = valid)."""
+        top, F, N, M = self.top, self.F, self.N, self.M
+        v = top.num_regions
+        errs = []
+        scale = max(self.tput_goal, 1.0)
+        if (F < -tol).any():
+            errs.append("F has negative entries")
+        if (N < -tol).any() or (M < -tol).any():
+            errs.append("N or M has negative entries")
+        # 4b
+        cap = top.tput * M / top.limit_conn
+        if (F - cap > tol * scale).any():
+            errs.append("4b: flow exceeds per-connection capacity")
+        # 4c / 4d
+        if F[self.src, :].sum() < self.tput_goal - tol * scale:
+            errs.append("4c: source egress below goal")
+        if F[:, self.dst].sum() < self.tput_goal - tol * scale:
+            errs.append("4d: dest ingress below goal")
+        # 4e
+        for r in range(v):
+            if r in (self.src, self.dst):
+                continue
+            if abs(F[:, r].sum() - F[r, :].sum()) > tol * scale:
+                errs.append(f"4e: flow not conserved at region {r}")
+        # 4f / 4g
+        for r in range(v):
+            if F[:, r].sum() - top.limit_ingress[r] * N[r] > tol * scale:
+                errs.append(f"4f: ingress over VM limit at region {r}")
+            if F[r, :].sum() - top.limit_egress[r] * N[r] > tol * scale:
+                errs.append(f"4g: egress over VM limit at region {r}")
+        # 4h / 4i
+        for r in range(v):
+            if M[r, :].sum() - top.limit_conn * N[r] > tol:
+                errs.append(f"4h: outgoing connections over limit at region {r}")
+            if M[:, r].sum() - top.limit_conn * N[r] > tol:
+                errs.append(f"4i: incoming connections over limit at region {r}")
+        # 4j
+        if (N > top.limit_vm + tol).any():
+            errs.append("4j: VM count over service limit")
+        return errs
+
+    # ------------------------------------------------------------------ paths
+    def paths(self, max_paths: int = 32) -> list[tuple[list[int], float]]:
+        """Greedy flow decomposition of F into (region path, Gbit/s) pairs.
+
+        Repeatedly peels the widest remaining s->t path. Used by the data
+        plane to map chunk streams onto gateway chains.
+        """
+        F = self.F.copy()
+        v = self.top.num_regions
+        out: list[tuple[list[int], float]] = []
+        for _ in range(max_paths):
+            # widest path via Dijkstra-like relaxation on bottleneck capacity
+            width = np.full(v, 0.0)
+            prev = np.full(v, -1, dtype=np.int64)
+            width[self.src] = np.inf
+            visited = np.zeros(v, dtype=bool)
+            for _ in range(v):
+                u = -1
+                best = 0.0
+                for i in range(v):
+                    if not visited[i] and width[i] > best:
+                        best = width[i]
+                        u = i
+                if u < 0:
+                    break
+                visited[u] = True
+                if u == self.dst:
+                    break
+                for w in range(v):
+                    cand = min(width[u], F[u, w])
+                    if cand > width[w] + 1e-12:
+                        width[w] = cand
+                        prev[w] = u
+            if width[self.dst] <= 1e-9:
+                break
+            path = [self.dst]
+            while path[-1] != self.src:
+                path.append(int(prev[path[-1]]))
+            path.reverse()
+            flow = float(width[self.dst])
+            for a, b in zip(path[:-1], path[1:]):
+                F[a, b] -= flow
+            out.append((path, flow))
+        return out
+
+    def describe(self) -> str:
+        keys = self.top.keys()
+        lines = [
+            f"plan {keys[self.src]} -> {keys[self.dst]}: "
+            f"{self.throughput:.2f} Gbps, ${self.cost_per_gb:.4f}/GB "
+            f"({self.num_vms} VMs, {int(self.M.sum())} conns)"
+        ]
+        for path, flow in self.paths():
+            hops = " -> ".join(keys[i] for i in path)
+            lines.append(f"  {flow:6.2f} Gbps via {hops}")
+        return "\n".join(lines)

@@ -1,0 +1,215 @@
+"""Skyplane's planner (paper §4-§5): cost-min and throughput-max modes.
+
+  * ``plan_cost_min``  — minimize $ subject to a throughput floor (Eq. 4a-4j).
+  * ``plan_tput_max``  — maximize throughput subject to a price ceiling, via
+    the paper's §5.2 procedure: sweep cost-min solves over a range of
+    throughput goals, form the Pareto frontier, pick the fastest plan whose
+    cost fits the ceiling.
+
+Planning runs on a pruned candidate subgraph (src, dst + top-K relays) —
+mirroring how the open-source Skyplane keeps MILPs "solvable in under 5
+seconds" — and maps the solution back onto the full topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import milp
+from .plan import TransferPlan
+from .solver.bnb import solve_milp
+from .solver.ipm import solve_lp
+from .topology import GBIT_PER_GB, Topology
+
+
+@dataclasses.dataclass
+class ParetoPoint:
+    tput_goal: float
+    cost_per_gb: float
+    plan: TransferPlan
+
+
+class Planner:
+    def __init__(
+        self,
+        top: Topology,
+        *,
+        max_relays: int = 10,
+        mode: str = "relaxed",  # "relaxed" (round-down, §5.1.3) or "exact"
+    ):
+        self.top = top
+        self.max_relays = max_relays
+        self.mode = mode
+
+    # ----------------------------------------------------------------- bounds
+    def max_throughput(self, src: str, dst: str) -> float:
+        """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit."""
+        sub, s, t, keep = self._prune(src, dst)
+        lp = milp.build_lp(sub, s, t, 0.0, fixed_n=np.full(sub.num_regions, float(sub.limit_vm)))
+        # maximize source egress == minimize -sum F_{s,*}
+        c = np.zeros_like(lp.c)
+        for k, (u, w) in enumerate(lp.edges):
+            if u == s:
+                c[k] = -1.0
+        res = solve_lp(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+        if not res.ok:
+            return 0.0
+        return float(-res.fun)
+
+    def direct_throughput(self, src: str, dst: str, num_vms: int | None = None) -> float:
+        """Throughput of the direct path with ``num_vms`` VMs at each end."""
+        n = float(num_vms if num_vms is not None else self.top.limit_vm)
+        s, t = self.top.index(src), self.top.index(dst)
+        return float(
+            n * min(
+                self.top.tput[s, t],
+                self.top.limit_egress[s],
+                self.top.limit_ingress[t],
+            )
+        )
+
+    # ------------------------------------------------------------- public API
+    def plan_cost_min(
+        self,
+        src: str,
+        dst: str,
+        tput_goal_gbps: float,
+        volume_gb: float,
+        *,
+        mode: str | None = None,
+    ) -> TransferPlan:
+        """Paper mode 1: minimize cost subject to a throughput floor."""
+        sub, s, t, keep = self._prune(src, dst)
+        res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode)
+        return self._lift(sub, keep, src, dst, tput_goal_gbps, volume_gb, res)
+
+    def plan_tput_max(
+        self,
+        src: str,
+        dst: str,
+        cost_ceiling_per_gb: float,
+        volume_gb: float,
+        *,
+        n_samples: int = 40,
+        mode: str | None = None,
+    ) -> TransferPlan:
+        """Paper mode 2 (§5.2): Pareto sweep, pick fastest plan under ceiling."""
+        frontier = self.pareto_frontier(
+            src, dst, volume_gb, n_samples=n_samples, mode=mode
+        )
+        feasible = [p for p in frontier if p.cost_per_gb <= cost_ceiling_per_gb + 1e-9]
+        if not feasible:
+            # ceiling below even the cheapest plan: return cheapest as "best effort"
+            cheapest = min(frontier, key=lambda p: p.cost_per_gb)
+            plan = cheapest.plan
+            plan.solver_status = "cost_ceiling_infeasible"
+            return plan
+        best = max(feasible, key=lambda p: p.tput_goal)
+        return best.plan
+
+    def pareto_frontier_fast(
+        self,
+        src: str,
+        dst: str,
+        volume_gb: float,
+        *,
+        n_samples: int = 64,
+    ) -> list[ParetoPoint]:
+        """§5.2 sweep as ONE batched JAX IPM solve (solver/ipm_jax).
+
+        The N cost-min LPs differ only in the two goal rows of b, so the
+        relaxation solves as a single vmapped call; plans returned here are
+        the *continuous* relaxations (≤1% from integral per §5.1.3 — used
+        for frontier exploration; plan_tput_max integerizes the winner)."""
+        from .solver.ipm_jax import solve_lp_batched
+
+        sub, s, t, keep = self._prune(src, dst)
+        hi = self.max_throughput(src, dst)
+        if hi <= 0:
+            raise ValueError(f"no path from {src} to {dst}")
+        goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
+        lp = milp.build_lp(sub, s, t, float(goals[0]))
+        b_batch = np.tile(lp.b_ub[None, :], (n_samples, 1))
+        b_batch[:, lp.row_4c] = -goals
+        b_batch[:, lp.row_4d] = -goals
+        xs, funs, ok = solve_lp_batched(lp.c, lp.A_ub, b_batch, lp.A_eq, lp.b_eq)
+        out = []
+        for i, g in enumerate(goals):
+            if not ok[i]:
+                continue
+            F, N, M = lp.split(xs[i])
+            res = type("R", (), {})()
+            res.F, res.N, res.M = F, N, M
+            res.status = "optimal"
+            res.achieved_tput = float(g)
+            plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)
+            out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
+        if not out:
+            # numerical fallback: the exact sequential path
+            return self.pareto_frontier(src, dst, volume_gb,
+                                        n_samples=min(n_samples, 20))
+        return out
+
+    def pareto_frontier(
+        self,
+        src: str,
+        dst: str,
+        volume_gb: float,
+        *,
+        n_samples: int = 40,
+        mode: str | None = None,
+    ) -> list[ParetoPoint]:
+        """Cost-min solves across a range of throughput goals (paper §5.2)."""
+        sub, s, t, keep = self._prune(src, dst)
+        hi = self.max_throughput(src, dst)
+        if hi <= 0:
+            raise ValueError(f"no path from {src} to {dst}")
+        goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
+        out = []
+        for g in goals:
+            res = solve_milp(sub, s, t, float(g), mode=mode or self.mode)
+            if not res.ok:
+                continue
+            plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)
+            out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
+        if not out:
+            raise RuntimeError(f"planner found no feasible plan {src}->{dst}")
+        return out
+
+    # -------------------------------------------------------------- internals
+    def _prune(self, src: str, dst: str):
+        s_full, t_full = self.top.index(src), self.top.index(dst)
+        v = self.top.num_regions
+        if v <= self.max_relays + 2:
+            keep = list(range(v))
+            return self.top, s_full, t_full, keep
+        sub, s, t = self.top.candidate_subgraph(src, dst, self.max_relays)
+        # recover kept indices in full-topology space
+        keep = [self.top.index(r.key) for r in sub.regions]
+        return sub, s, t, keep
+
+    def _lift(
+        self, sub, keep, src, dst, tput_goal, volume_gb, res
+    ) -> TransferPlan:
+        v = self.top.num_regions
+        F = np.zeros((v, v))
+        M = np.zeros((v, v))
+        N = np.zeros(v)
+        ix = np.asarray(keep)
+        F[np.ix_(ix, ix)] = res.F
+        M[np.ix_(ix, ix)] = res.M
+        N[ix] = res.N
+        achieved = getattr(res, "achieved_tput", 0.0) or tput_goal
+        return TransferPlan(
+            top=self.top,
+            src=self.top.index(src),
+            dst=self.top.index(dst),
+            tput_goal=min(tput_goal, achieved),
+            volume_gb=volume_gb,
+            F=F,
+            N=N,
+            M=M,
+            solver_status=res.status,
+        )

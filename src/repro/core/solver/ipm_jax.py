@@ -1,0 +1,130 @@
+"""Batched JAX interior-point LP solver for Pareto-frontier sweeps.
+
+The paper's §5.2 throughput-max mode solves ~100 cost-min LPs at different
+throughput goals. Those LPs share every matrix except the two goal rows of
+b — a textbook vmap: one fixed-iteration Mehrotra predictor-corrector,
+jitted under scoped float64 (`jax.enable_x64` context — no global state),
+vmapped over b. On the 12-region pruned graph the whole frontier solves in
+one batched call.
+
+Fixed iteration count (no data-dependent control flow) keeps the solve
+jit/vmap-friendly; 40 iterations is ~3x the typical convergence point of
+the numpy solver on these problems. The numpy solver (ipm.py) remains the
+reference; `planner.pareto_frontier(backend="jax")` uses this one and
+falls back per-sample when a batched solve fails its KKT check.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-11
+
+
+def _build_standard(c, A_ub, b_ub, A_eq, b_eq):
+    n = c.shape[0]
+    m_ub = A_ub.shape[0] if A_ub is not None and A_ub.size else 0
+    m_eq = A_eq.shape[0] if A_eq is not None and A_eq.size else 0
+    A = np.zeros((m_ub + m_eq, n + m_ub))
+    b = np.zeros(m_ub + m_eq)
+    if m_ub:
+        A[:m_ub, :n] = A_ub
+        A[:m_ub, n:] = np.eye(m_ub)
+        b[:m_ub] = b_ub
+    if m_eq:
+        A[m_ub:, :n] = A_eq
+        b[m_ub:] = b_eq
+    cs = np.concatenate([c, np.zeros(m_ub)])
+    return A, b, cs
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _solve_batched(A, bs, c, iters: int = 40):
+    """min c@x s.t. A@x=b_i, x>=0 for a batch of b vectors. f64 inside."""
+    m, n = A.shape
+
+    def reg_solve(M, rhs):
+        tr = jnp.trace(M) / m
+        return jnp.linalg.solve(M + 1e-11 * tr * jnp.eye(m), rhs)
+
+    def one(b):
+        AAt = A @ A.T
+        x = A.T @ reg_solve(AAt, b)
+        y = reg_solve(AAt, A @ c)
+        s = c - A.T @ y
+        dx = jnp.maximum(-1.5 * jnp.min(x), 0.0)
+        ds = jnp.maximum(-1.5 * jnp.min(s), 0.0)
+        x = x + dx
+        s = s + ds
+        xs = jnp.maximum(x @ s, 1e-2)
+        x = jnp.maximum(x + 0.5 * xs / jnp.maximum(s.sum(), _EPS), 1e-4)
+        s = jnp.maximum(s + 0.5 * xs / jnp.maximum(x.sum(), _EPS), 1e-4)
+
+        def step(carry, _):
+            x, y, s = carry
+            rb = A @ x - b
+            rc = A.T @ y + s - c
+            mu = (x @ s) / n
+            d = x / s
+            AD = A * d[None, :]
+            M = AD @ A.T
+
+            r_xs = x * s
+            rhs = -rb - A @ (d * rc - r_xs / s)
+            dy_a = reg_solve(M, rhs)
+            dx_a = d * (A.T @ dy_a + rc) - r_xs / s
+            ds_a = -(r_xs + s * dx_a) / x
+
+            def maxstep(v, dv):
+                r = jnp.where(dv < 0, -v / jnp.where(dv < 0, dv, -1.0), jnp.inf)
+                return jnp.minimum(1.0, jnp.min(r))
+
+            ap = maxstep(x, dx_a)
+            ad = maxstep(s, ds_a)
+            mu_a = ((x + ap * dx_a) @ (s + ad * ds_a)) / n
+            sigma = jnp.clip((mu_a / jnp.maximum(mu, _EPS)) ** 3, 0.0, 1.0)
+
+            r_xs2 = x * s + dx_a * ds_a - sigma * mu
+            rhs2 = -rb - A @ (d * rc - r_xs2 / s)
+            dy = reg_solve(M, rhs2)
+            dx = d * (A.T @ dy + rc) - r_xs2 / s
+            dsv = -(r_xs2 + s * dx) / x
+
+            ap = 0.99 * maxstep(x, dx)
+            ad = 0.99 * maxstep(s, dsv)
+            x2 = jnp.maximum(x + ap * dx, _EPS)
+            y2 = y + ad * dy
+            s2 = jnp.maximum(s + ad * dsv, _EPS)
+            return (x2, y2, s2), None
+
+        (x, y, s), _ = jax.lax.scan(step, (x, y, s), None, length=iters)
+        pres = jnp.linalg.norm(A @ x - b) / (1.0 + jnp.linalg.norm(b))
+        gap = (x @ s) / (1.0 + jnp.abs(c @ x))
+        return x, c @ x, pres, gap
+
+    return jax.vmap(one)(bs)
+
+
+def solve_lp_batched(c, A_ub, b_ub_batch, A_eq, b_eq, *, iters: int = 40):
+    """Solve a batch of LPs differing only in b_ub. Returns
+    (x [B, n], fun [B], ok [B] bool)."""
+    with jax.enable_x64(True):
+        A, b0, cs = _build_standard(
+            np.asarray(c, np.float64),
+            np.asarray(A_ub, np.float64), np.zeros(A_ub.shape[0]),
+            np.asarray(A_eq, np.float64) if A_eq is not None else None,
+            np.asarray(b_eq, np.float64) if b_eq is not None else None,
+        )
+        m_ub = A_ub.shape[0]
+        bs = np.tile(b0[None, :], (len(b_ub_batch), 1))
+        bs[:, :m_ub] = np.asarray(b_ub_batch, np.float64)
+        x, fun, pres, gap = _solve_batched(
+            jnp.asarray(A), jnp.asarray(bs), jnp.asarray(cs), iters=iters
+        )
+        x = np.asarray(x)[:, : c.shape[0]]
+        ok = (np.asarray(pres) < 1e-7) & (np.asarray(gap) < 1e-7)
+        return x, np.asarray(fun), ok

@@ -1,0 +1,139 @@
+"""Region topology: the flow-network graph over which Skyplane plans (paper §3.1).
+
+Nodes are cloud regions; the two grids attached to the graph are exactly the
+paper's inputs:
+  * throughput grid  — achievable TCP goodput (Gbps) between each ordered region
+    pair, measured at ``limit_conn`` parallel connections (paper §3.2, Fig. 3).
+  * price grid       — egress $/GB between each ordered region pair (paper §2).
+
+Per-region constants mirror Table 1: per-VM ingress/egress limits (Gbps), VM
+price ($/s) and the per-region VM service limit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+GBIT_PER_GB = 8.0  # egress prices are $/GB; flows are Gbit/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A cloud region (one node of the overlay graph)."""
+
+    provider: str  # "aws" | "azure" | "gcp"
+    name: str  # provider-native region name, e.g. "us-west-2"
+    continent: str  # "na" | "sa" | "eu" | "ap" | "af" | "oc" | "me"
+    lat: float
+    lon: float
+
+    @property
+    def key(self) -> str:
+        return f"{self.provider}:{self.name}"
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return self.key
+
+
+@dataclasses.dataclass
+class Topology:
+    """The overlay flow network. All arrays are ordered like ``regions``."""
+
+    regions: list[Region]
+    tput: np.ndarray  # [V,V] Gbps at limit_conn connections; 0 on diagonal
+    price_egress: np.ndarray  # [V,V] $/GB for traffic u->v; 0 on diagonal
+    price_vm: np.ndarray  # [V] $/s per VM
+    limit_ingress: np.ndarray  # [V] Gbps per VM
+    limit_egress: np.ndarray  # [V] Gbps per VM
+    rtt_ms: np.ndarray | None = None  # [V,V] used by the RON baseline
+    limit_conn: int = 64  # max TCP connections per VM (paper §4.2)
+    limit_vm: int = 8  # per-region VM service limit (paper §7.2 uses 8)
+
+    def __post_init__(self) -> None:
+        v = len(self.regions)
+        assert self.tput.shape == (v, v), self.tput.shape
+        assert self.price_egress.shape == (v, v)
+        assert self.price_vm.shape == (v,)
+        assert self.limit_ingress.shape == (v,)
+        assert self.limit_egress.shape == (v,)
+        self._index = {r.key: i for i, r in enumerate(self.regions)}
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def num_regions(self) -> int:
+        return len(self.regions)
+
+    def index(self, region: str | Region) -> int:
+        key = region.key if isinstance(region, Region) else region
+        return self._index[key]
+
+    def keys(self) -> list[str]:
+        return [r.key for r in self.regions]
+
+    def subgraph(self, keep: Sequence[int]) -> "Topology":
+        """Topology restricted to region indices ``keep`` (order preserved)."""
+        keep = list(keep)
+        ix = np.asarray(keep, dtype=np.int64)
+        return Topology(
+            regions=[self.regions[i] for i in keep],
+            tput=self.tput[np.ix_(ix, ix)].copy(),
+            price_egress=self.price_egress[np.ix_(ix, ix)].copy(),
+            price_vm=self.price_vm[ix].copy(),
+            limit_ingress=self.limit_ingress[ix].copy(),
+            limit_egress=self.limit_egress[ix].copy(),
+            rtt_ms=None if self.rtt_ms is None else self.rtt_ms[np.ix_(ix, ix)].copy(),
+            limit_conn=self.limit_conn,
+            limit_vm=self.limit_vm,
+        )
+
+    def candidate_subgraph(
+        self, src: str, dst: str, max_relays: int = 10
+    ) -> tuple["Topology", int, int]:
+        """Prune to {src, dst} + the ``max_relays`` most promising relays.
+
+        Relays are ranked by the bottleneck throughput of the two-hop path
+        src->r->dst (the quantity RON's throughput heuristic optimizes), which
+        upper-bounds the usefulness of a region as a relay. Keeps the MILP tiny
+        (paper §5: "solved in under 5 seconds") without excluding any relay the
+        optimum could plausibly use.
+        """
+        s, t = self.index(src), self.index(dst)
+        v = self.num_regions
+        scores = np.minimum(self.tput[s, :], self.tput[:, t])
+        scores[[s, t]] = -np.inf
+        order = np.argsort(-scores)
+        relays = [int(i) for i in order[:max_relays] if np.isfinite(scores[i])]
+        keep = [s, t] + relays
+        sub = self.subgraph(keep)
+        return sub, 0, 1
+
+    def edge_list(
+        self, src_idx: int | None = None, dst_idx: int | None = None
+    ) -> list[tuple[int, int]]:
+        """Directed edges with nonzero capacity. Drops edges into the source
+        and out of the destination (never useful for a single s->t job)."""
+        edges = []
+        v = self.num_regions
+        for u in range(v):
+            for w in range(v):
+                if u == w or self.tput[u, w] <= 0:
+                    continue
+                if src_idx is not None and w == src_idx:
+                    continue
+                if dst_idx is not None and u == dst_idx:
+                    continue
+                edges.append((u, w))
+        return edges
+
+
+def haversine_km(lat1, lon1, lat2, lon2) -> float:
+    """Great-circle distance, used to synthesize RTTs for the embedded grid."""
+    r = 6371.0
+    p1, p2 = np.radians(lat1), np.radians(lat2)
+    dp = p2 - p1
+    dl = np.radians(lon2 - lon1)
+    a = np.sin(dp / 2) ** 2 + np.cos(p1) * np.cos(p2) * np.sin(dl / 2) ** 2
+    return float(2 * r * np.arcsin(np.sqrt(a)))

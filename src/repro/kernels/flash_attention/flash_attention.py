@@ -1,0 +1,150 @@
+"""Blockwise online-softmax (Flash) attention Pallas kernel, GQA-aware,
+causal and sliding-window, TPU-tiled.
+
+Grid: (batch, q_heads, nq, nkv) — TPU iterates the minor-most axis fastest,
+so for a fixed (b, h, iq) the kernel sees all kv blocks sequentially and
+carries the online-softmax state (m, l, acc) in VMEM scratch, initialized at
+the first visited kv block and flushed to the output on the last. Causal and
+window masking are applied per-tile with iota; fully-masked tiles are
+skipped with @pl.when (on TPU this saves the MXU work; block-level skipping
+of out-of-window tiles is what makes SWA sub-quadratic here).
+
+Block shapes default to (block_q, head_dim) x (block_k, head_dim) =
+(128, Dh) tiles — MXU-aligned (multiples of 128 on the contracting dim for
+Dh in {64, 112, 128, 192} pad to lanes) and sized so q/k/v/acc tiles fit
+comfortably in ~16 MB VMEM.
+
+Layouts (prepared by ops.py): q [B, H, S, Dh], k/v [B, Kv, S, Dh],
+out [B, H, S, Dh].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: int | None, scale: float, n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q_ids = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        q = q_ref[0, 0].astype(jnp.float32)  # [block_q, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [block_k, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [block_q, block_k]
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_ids <= q_ids)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_ids > q_ids - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [block_q, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # tile-level reachability: skip fully-masked tiles (this block-skip is
+    # what makes sliding-window attention sub-quadratic on TPU)
+    if causal or window is not None:
+        reachable = k_start <= q_start + block_q - 1 if causal else (ik >= 0)
+        if window is not None:
+            reachable = jnp.logical_and(
+                reachable, k_start + block_k - 1 > q_start - window
+            )
+        pl.when(reachable)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _flush():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "q_per_kv", "interpret"),
+)
+def flash_attention_bhsd(
+    q, k, v, *,
+    q_per_kv: int,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float = 1.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: [B,H,S,D], k/v: [B,Kv,S,D] -> out [B,H,S,D]."""
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq = s // block_q
+    nkv = s // block_k
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q, block_k=block_k, seq_len=s, causal=causal,
+        window=window, scale=scale, n_kv_blocks=nkv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik, qpk=q_per_kv: (b_, h_ // qpk, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik, qpk=q_per_kv: (b_, h_ // qpk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1)),
+            _vmem((block_q, 1)),
+            _vmem((block_q, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

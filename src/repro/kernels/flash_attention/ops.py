@@ -1,0 +1,42 @@
+"""Public flash-attention wrapper in model layout [B,S,H,D]; handles GQA
+head mapping, seq padding to block multiples, and interpret-mode fallback
+off-TPU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128):
+    """q: [B,S,H,D], k/v: [B,S,Kv,D] -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    scale = d ** -0.5 if scale is None else scale
+    bq = min(block_q, max(16, s))
+    bk = min(block_k, max(16, s))
+    pad = (-s) % max(bq, bk)
+    qt = jnp.moveaxis(q, 2, 1)  # [B,H,S,D]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad:
+        cfgpad = ((0, 0), (0, 0), (0, pad), (0, 0))
+        qt = jnp.pad(qt, cfgpad)
+        kt = jnp.pad(kt, cfgpad)
+        vt = jnp.pad(vt, cfgpad)
+    out = flash_attention_bhsd(
+        qt, kt, vt, q_per_kv=h // kvh, causal=causal, window=window,
+        scale=scale, block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    if pad:
+        out = out[:, :, :s]
+    return jnp.moveaxis(out, 1, 2)

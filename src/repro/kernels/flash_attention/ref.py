@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_bhsd_ref(q, k, v, *, q_per_kv: int, causal: bool = True,
+                       window: int | None = None, scale: float = 1.0):
+    """q: [B,H,S,D], k/v: [B,Kv,S,D] -> [B,H,S,D], f32 softmax."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    qg = q.reshape(b, kvh, q_per_kv, s, d)
+    scores = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,48 @@
+"""jit'd public wrappers: arbitrary-shape tensors <-> blocked kernel layout.
+On non-TPU backends the kernel runs in interpret mode (exact semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import dequantize_int8_2d, quantize_int8_2d
+
+_ROWS = 8
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_int8(x, *, block: int = 256):
+    """x: any shape -> (q int8 [x.shape], scales f32 [n_blocks])."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad_elems = (-n) % block
+    flat = jnp.pad(flat, (0, pad_elems))
+    x2d = flat.reshape(-1, block)
+    pad_rows = (-x2d.shape[0]) % _ROWS
+    x2d = jnp.pad(x2d, ((0, pad_rows), (0, 0)))
+    q2d, s2d = quantize_int8_2d(x2d, block=block, rows=_ROWS,
+                                interpret=_interpret())
+    n_blocks = (n + block - 1) // block
+    q = q2d.reshape(-1)[:n].reshape(x.shape)
+    return q, s2d[:n_blocks, 0]
+
+
+def dequantize_int8(q, scales, *, block: int = 256):
+    """Inverse of quantize_int8; returns f32 of q.shape."""
+    flat = q.reshape(-1)
+    n = flat.shape[0]
+    pad_elems = (-n) % block
+    flat = jnp.pad(flat, (0, pad_elems))
+    q2d = flat.reshape(-1, block)
+    s2d = scales.reshape(-1, 1)
+    pad_rows = (-q2d.shape[0]) % _ROWS
+    q2d = jnp.pad(q2d, ((0, pad_rows), (0, 0)))
+    s2d = jnp.pad(s2d, ((0, q2d.shape[0] - s2d.shape[0]), (0, 0)),
+                  constant_values=1.0)
+    x2d = dequantize_int8_2d(q2d, s2d, block=block, rows=_ROWS,
+                             interpret=_interpret())
+    return x2d.reshape(-1)[:n].reshape(q.shape)

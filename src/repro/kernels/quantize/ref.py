@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the quantize kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8_2d_ref(x2d):
+    x = x2d.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_2d_ref(q2d, scales):
+    return q2d.astype(jnp.float32) * scales

@@ -1,0 +1,35 @@
+"""Public SSD wrapper in the model layout ([B,S,H,P]); interpret off-TPU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_bhsp
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_scan(xh, dtv, a, bm, cm, *, chunk: int = 256):
+    """Model layout: xh [B,S,H,P], dtv [B,S,H], a [H], bm/cm [B,S,N]
+    -> (y [B,S,H,P], final_state [B,H,P,N]). Ragged tails padded with dt=0
+    (identity for the recurrence), mirroring the jnp reference."""
+    s_orig = xh.shape[1]
+    chunk = min(chunk, s_orig)
+    pad = (-s_orig) % chunk
+    if pad:
+        zp = lambda t, ax: jnp.pad(t, [(0, pad) if i == ax else (0, 0)
+                                       for i in range(t.ndim)])
+        xh, dtv = zp(xh, 1), zp(dtv, 1)
+        bm, cm = zp(bm, 1), zp(cm, 1)
+    x = jnp.moveaxis(xh, 2, 1)  # [B,H,S,P]
+    dt = jnp.moveaxis(dtv, 2, 1)  # [B,H,S]
+    y, state = ssd_scan_bhsp(
+        x, dt, a, bm, cm, chunk=chunk, interpret=_interpret()
+    )
+    y = jnp.moveaxis(y, 1, 2)
+    if pad:
+        y = y[:, :s_orig]
+    return y, state

@@ -1,0 +1,46 @@
+"""Self-contained pure-jnp oracle for the SSD scan kernel (mirrors
+repro.models.ssm.ssd_chunked, in the kernel's [B,H,S,P] layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_bhsp_ref(x, dt, a, bm, cm, *, chunk: int):
+    """x [B,H,S,P], dt [B,H,S], a [H], bm/cm [B,S,N]."""
+    b, h, s, p = x.shape
+    n = bm.shape[-1]
+    nc = s // chunk
+    xr = x.reshape(b, h, nc, chunk, p).astype(jnp.float32)
+    dtr = dt.reshape(b, h, nc, chunk).astype(jnp.float32)
+    br = bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cr = cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    da = dtr * a[None, :, None, None]
+    cum = jnp.cumsum(da, axis=-1)  # [b,h,nc,Q]
+    diff = cum[..., :, None] - cum[..., None, :]
+    ii = jnp.arange(chunk)
+    mask = (ii[:, None] >= ii[None, :])[None, None, None]
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)
+    scores = jnp.where(mask, cb[:, None] * jnp.exp(diff) * dtr[..., None, :], 0.0)
+    y_intra = jnp.einsum("bhcij,bhcjp->bhcip", scores, xr)
+
+    cum_last = cum[..., -1:]
+    w_end = jnp.exp(cum_last - cum) * dtr
+    s_chunk = jnp.einsum("bhcj,bhcjp,bcjn->bhcpn", w_end, xr, br)
+    dec = jnp.exp(cum_last[..., 0])  # [b,h,nc]
+
+    def step(carry, inp):
+        sc, d = inp
+        new = carry * d[..., None, None] + sc
+        return new, carry
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (s_chunk.transpose(2, 0, 1, 3, 4), dec.transpose(2, 0, 1))
+    )
+    s_prevs = s_prevs.transpose(1, 2, 0, 3, 4)  # [b,h,nc,p,n]
+    y_inter = jnp.einsum("bcin,bhcpn->bhcip", cr, s_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, h, s, p).astype(x.dtype)
+    return y, s_final

@@ -1,0 +1,158 @@
+"""Extract roofline terms from AOT-compiled artifacts.
+
+  * FLOPs / bytes: ``compiled.cost_analysis()`` (per-device, post-SPMD).
+  * collective bytes: parsed from ``compiled.as_text()`` — the result-shape
+    bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute op, with ring-algorithm wire-byte estimates.
+
+CAVEAT (measured, see DESIGN.md): XLA cost analysis and a flat text parse
+count a while-loop body ONCE, but a scanned layer stack executes it
+``num_groups`` times. ``launch.dryrun`` therefore lowers two scanned probes
+(2 and 3 layer-groups) and extrapolates: total = S(2) + (G-2) * (S(3)-S(2)).
+Everything in this module reports raw single-pass numbers; the probe-delta
+arithmetic lives in dryrun.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# v5e-class hardware constants (per brief)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'f32[16,128]' or '(f32[2], s32[4])' -> total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict  # op kind -> count
+    result_bytes: dict  # op kind -> total result bytes (per device)
+    wire_bytes: float  # estimated bytes moved on the interconnect per device
+
+    def as_dict(self):
+        return {
+            "counts": self.counts,
+            "result_bytes": self.result_bytes,
+            "wire_bytes": self.wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Collect per-device collective traffic from the compiled HLO text.
+
+    Ring-algorithm wire estimates (bytes leaving/entering one device):
+      all-gather:          result * (g-1)/g     (receives all other shards)
+      reduce-scatter:      input  * (g-1)/g  == result * (g-1)
+      all-reduce:          2 * shard * (g-1)/g  ~= 2 * result * (g-1)/g
+      all-to-all:          result * (g-1)/g
+      collective-permute:  result               (send + receive one buffer)
+    """
+    counts: dict = {}
+    result_bytes: dict = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or " = " not in line:
+            continue
+        kind = m.group(1)
+        # result type sits between '=' and the op name:
+        #   %all-gather.1 = f32[96,576]{0,1} all-gather(%x), replica_groups=...
+        rhs = line.split(" = ", 1)[1]
+        type_seg = rhs.split(kind, 1)[0]
+        rb = _shape_bytes(type_seg)
+        if rb == 0:
+            continue
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = int(gm.group(2))
+        else:
+            gm2 = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            gsize = len(gm2.group(1).split(",")) if gm2 else 2
+        counts[kind] = counts.get(kind, 0) + 1
+        result_bytes[kind] = result_bytes.get(kind, 0) + rb
+        if gsize <= 1:
+            continue
+        frac = (gsize - 1) / gsize
+        if kind == "all-gather":
+            wire += rb * frac
+        elif kind == "reduce-scatter":
+            wire += rb * (gsize - 1)
+        elif kind == "all-reduce":
+            wire += 2 * rb * frac
+        elif kind == "all-to-all":
+            wire += rb * frac
+        else:  # collective-permute
+            wire += rb
+    return CollectiveStats(counts, result_bytes, wire)
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    """The three roofline terms in seconds (per-device program, so chips
+    cancel out of the brief's formulas)."""
+    return {
+        "compute_s": flops_per_dev / PEAK_FLOPS,
+        "memory_s": bytes_per_dev / HBM_BW,
+        "collective_s": wire_bytes_per_dev / ICI_BW,
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    key = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms.get(k, 0.0)
+    )
+    return {"compute_s": "compute", "memory_s": "memory",
+            "collective_s": "collective"}[key]

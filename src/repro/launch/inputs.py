@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation),
+plus their logical sharding trees — the ``input_specs()`` of the brief.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import init_decode_state, param_shape_dtypes
+from repro.models.model import decode_state_logical
+
+
+def train_batch_sds(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.is_vlm:
+        sds["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.is_enc_dec:
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return sds
+
+
+def train_batch_logical(cfg: ModelConfig) -> dict:
+    spec = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.is_vlm:
+        spec["vision"] = ("batch", None, None)
+    if cfg.is_enc_dec:
+        spec["frames"] = ("batch", None, None)
+    return spec
+
+
+def decode_state_sds(cfg: ModelConfig, shape: ShapeSpec):
+    """Decode state stand-in with a KV/SSM context of shape.seq_len."""
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def decode_tokens_sds(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def decode_logical(cfg: ModelConfig) -> dict:
+    return decode_state_logical(cfg)
+
+
+def param_sds(cfg: ModelConfig, dtype=None):
+    sds = param_shape_dtypes(cfg)
+    if dtype is None:
+        return sds
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), sds)

@@ -1,0 +1,12 @@
+from .model import (  # noqa: F401
+    abstract_params,
+    count_params,
+    init_params,
+    param_logical,
+    param_shape_dtypes,
+    forward,
+    loss_fn,
+    init_decode_state,
+    decode_step,
+    prefill,
+)

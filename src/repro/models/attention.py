@@ -1,0 +1,226 @@
+"""Attention: GQA/MHA, causal + sliding-window masks, cross-attention,
+functional KV caches for decode. Reference einsum path everywhere; the
+Pallas flash kernel (repro.kernels.flash_attention) is switched in for
+training/prefill when cfg.use_pallas is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import ShardingRules, shard_constraint
+from .layers import rope
+from .params import ParamDef
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- param defs
+def attn_defs(cfg: ModelConfig, lead: tuple[int, ...] = (), cross: bool = False) -> dict:
+    d = cfg.d_model
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ll = tuple(["layers"] * len(lead))
+    defs = {
+        "wq": ParamDef(lead + (d, h, dh), ll + ("fsdp", "tp", None), fan_in=d),
+        "wk": ParamDef(lead + (d, kv, dh), ll + ("fsdp", "tp", None), fan_in=d),
+        "wv": ParamDef(lead + (d, kv, dh), ll + ("fsdp", "tp", None), fan_in=d),
+        "wo": ParamDef(lead + (h, dh, d), ll + ("tp", None, "fsdp"), fan_in=h * dh),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef(lead + (h, dh), ll + ("tp", None), init="zeros")
+        defs["bk"] = ParamDef(lead + (kv, dh), ll + ("tp", None), init="zeros")
+        defs["bv"] = ParamDef(lead + (kv, dh), ll + ("tp", None), init="zeros")
+    return defs
+
+
+# ------------------------------------------------------------------ core math
+def _scores_constraint(scores, rules: ShardingRules):
+    """Shard the [B,H,Sq,Sk] score/weight buffer: prefer heads over the TP
+    axis; when the head count doesn't divide it (qwen2: 28H, smollm: 9H),
+    shard the query-sequence dim instead so the O(S^2) buffer never
+    replicates."""
+    from repro.sharding.specs import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return scores
+    tp = rules.filter_for_mesh(mesh).tp
+    if tp is None:
+        return scores
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    size = names.get(tp if isinstance(tp, str) else tp[0], 1)
+    b, h, sq, sk = scores.shape
+    if h % size == 0:
+        return shard_constraint(scores, rules, "batch", "tp", None, None)
+    if sq % size == 0:
+        return shard_constraint(scores, rules, "batch", None, "tp", None)
+    return scores
+
+
+def _gqa_scores(q, k, q_per_kv, acc_dtype=jnp.float32):
+    """q: [B,Sq,H,Dh], k: [B,Sk,Kv,Dh] -> [B,H,Sq,Sk] (flat heads)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, sq, kvh, q_per_kv, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=acc_dtype)
+    return s.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_combine(w, v, q_per_kv):
+    """w: [B,H,Sq,Sk] f32, v: [B,Sk,Kv,Dh] -> [B,Sq,H,Dh]."""
+    b, h, sq, sk = w.shape
+    kvh = v.shape[2]
+    w = w.reshape(b, kvh, q_per_kv, sq, sk)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def attend(q, k, v, *, q_per_kv: int, mask=None, scale: float,
+           rules: ShardingRules | None = None, scores_bf16: bool = False):
+    """Masked GQA attention. mask: broadcastable [B|1,H|1,Sq,Sk] with True =
+    attend. scores_bf16 (§Perf): keep the O(S^2) score/weight buffers in
+    bf16 (row max in f32, sums in f32) — halves attention HBM bytes."""
+    if scores_bf16:
+        # every O(S^2) buffer stays bf16; row max/sum reductions are f32
+        scores = _gqa_scores(q, k, q_per_kv, acc_dtype=jnp.bfloat16)
+        scores = scores * jnp.bfloat16(scale)
+        if rules is not None:
+            scores = _scores_constraint(scores, rules)
+        if mask is not None:
+            scores = jnp.where(mask, scores, jnp.bfloat16(-3e38))
+        m = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+        p = jnp.exp(scores - m.astype(jnp.bfloat16))  # bf16 [.., Sq, Sk]
+        if rules is not None:
+            p = _scores_constraint(p, rules)
+        denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+        w = p / jnp.maximum(denom, 1e-20).astype(jnp.bfloat16)
+        return _gqa_combine(w, v, q_per_kv)
+    scores = _gqa_scores(q, k, q_per_kv) * scale
+    if rules is not None:
+        scores = _scores_constraint(scores, rules)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if rules is not None:
+        w = _scores_constraint(w, rules)
+    return _gqa_combine(w, v, q_per_kv)
+
+
+def causal_mask(sq: int, sk: int, *, window: int | None, q_offset=0):
+    """[1,1,Sq,Sk] boolean; window = sliding-window width if any."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m[None, None]
+
+
+# ----------------------------------------------------------------- full layer
+def _pad_seq(x, t_max: int):
+    """[B,S,...] -> [B,t_max,...] zero-padded."""
+    s = x.shape[1]
+    if s == t_max:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, t_max - s)
+    return jnp.pad(x, pad)
+
+
+def self_attention(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    p: dict,
+    x,
+    positions,
+    *,
+    cache: dict | None = None,
+    cache_len=None,  # decode: slot to write (wrapped for SWA ring buffers)
+    seen_len=None,  # decode: total tokens seen (mask horizon); default slot
+    emit_kv: int | None = None,  # prefill: emit {'k','v'} padded to this len
+    is_causal: bool = True,
+):
+    """x: [B,S,D]. Training/prefill when cache is None; single-step decode
+    when cache={'k','v'} ([B,T,Kv,Dh]) and cache_len = write slot."""
+    dt = x.dtype
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard_constraint(q, rules, "batch", "seq", "tp", None)
+    k = shard_constraint(k, rules, "batch", "seq", "tp", None)
+    scale = dh ** -0.5
+
+    if cache is None:
+        if cfg.use_pallas and is_causal:
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            out = flash_attention(
+                q, k, v, causal=True, window=cfg.sliding_window, scale=scale
+            )
+        else:
+            mask = (
+                causal_mask(q.shape[1], k.shape[1], window=cfg.sliding_window)
+                if is_causal
+                else None
+            )
+            out = attend(q, k, v, q_per_kv=cfg.q_per_kv, mask=mask, scale=scale,
+                         rules=rules, scores_bf16=cfg.attn_scores_bf16)
+        new_cache = None
+        if emit_kv is not None:
+            new_cache = {"k": _pad_seq(k, emit_kv), "v": _pad_seq(v, emit_kv)}
+    else:
+        # decode: write k/v at slot cache_len, attend over everything seen.
+        # For SWA the buffer IS the window (a ring), so once full every slot
+        # is valid; attention is permutation-invariant over keys and RoPE was
+        # applied at write time, so ring order is immaterial.
+        T = cache["k"].shape[1]
+        seen = cache_len if seen_len is None else seen_len
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
+        ck = shard_constraint(ck, rules, "batch", "seq", "tp", None)
+        cv = shard_constraint(cv, rules, "batch", "seq", "tp", None)
+        ki = jnp.arange(T)[None, :]
+        valid = ki <= jnp.minimum(seen, T - 1)
+        mask = valid[None, None]  # [1,1,1(Sq),T]
+        out = attend(q, ck, cv, q_per_kv=cfg.q_per_kv, mask=mask, scale=scale,
+                     rules=rules, scores_bf16=cfg.attn_scores_bf16)
+        new_cache = {"k": ck, "v": cv}
+
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    out = shard_constraint(out, rules, "batch", "seq", None)
+    return out, new_cache
+
+
+def cross_attention(cfg: ModelConfig, rules: ShardingRules, p: dict, x, kv_src):
+    """Cross-attention from x [B,S,D] onto kv_src [B,Skv,D] (no RoPE, no mask;
+    VLM image tokens / enc-dec memory)."""
+    dt = x.dtype
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", kv_src, p["wv"].astype(dt))
+    out = attend(q, k, v, q_per_kv=cfg.q_per_kv, mask=None, scale=dh ** -0.5,
+                 rules=rules, scores_bf16=cfg.attn_scores_bf16)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return shard_constraint(out, rules, "batch", "seq", None)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    """Stacked KV cache [n_layers, B, T, Kv, Dh] (scan-compatible)."""
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_logical() -> dict:
+    return {"k": ("layers", "batch", "seq", "tp", None),
+            "v": ("layers", "batch", "seq", "tp", None)}

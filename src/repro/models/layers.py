@@ -1,0 +1,94 @@
+"""Shared layers: RMSNorm, MLP variants, rotary embeddings, embedding/unembed."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import ShardingRules, shard_constraint
+from .params import ParamDef
+
+
+# ------------------------------------------------------------------- rmsnorm
+def rmsnorm_def(d: int) -> ParamDef:
+    return ParamDef((d,), (None,), init="ones")
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp_defs(cfg: ModelConfig, lead: tuple[int, ...] = ()) -> dict:
+    """Gated (SiLU/GELU) or squared-ReLU MLP parameter defs."""
+    d, f = cfg.d_model, cfg.d_ff
+    ll = tuple(["layers"] * len(lead))
+    defs = {
+        "wi": ParamDef(lead + (d, f), ll + ("fsdp", "tp"), fan_in=d),
+        "wo": ParamDef(lead + (f, d), ll + ("tp", "fsdp"), fan_in=f),
+    }
+    if cfg.activation != "relu2":  # gated variants carry a second in-proj
+        defs["wg"] = ParamDef(lead + (d, f), ll + ("fsdp", "tp"), fan_in=d)
+    return defs
+
+
+def mlp(cfg: ModelConfig, rules: ShardingRules, p: dict, x):
+    """x: [B, S, D] -> [B, S, D]."""
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    h = shard_constraint(h, rules, "batch", None, "tp")
+    if cfg.activation == "relu2":  # Nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+        h = act(g) * h
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return shard_constraint(out, rules, "batch", None, None)
+
+
+# ---------------------------------------------------------------------- rope
+def rope(x, positions, theta: float):
+    """Rotary position embedding. x: [..., S, H, Dh], positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- embedding
+def embed_defs(cfg: ModelConfig) -> dict:
+    # baseline: vocab over TP (paper-faithful FSDP+TP table). The gather from
+    # a vocab-sharded table makes XLA SPMD replicate the [B,S,D] lookup
+    # ("involuntary full rematerialization") — the embed_dmodel_shard variant
+    # shards d_model instead, so the indexed dim is whole and the lookup is
+    # comm-free (§Perf iteration 1).
+    tok_logical = (None, "tp") if cfg.embed_dmodel_shard else ("tp", "fsdp")
+    d = {"tok": ParamDef((cfg.vocab_size, cfg.d_model), tok_logical, init="embed")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), ("fsdp", "tp"), fan_in=cfg.d_model
+        )
+    return d
+
+
+def embed(cfg: ModelConfig, rules: ShardingRules, p: dict, tokens, dtype):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    return shard_constraint(x, rules, "batch", "seq", None)
+
+
+def unembed_matrix(cfg: ModelConfig, p: dict, dtype):
+    if cfg.tie_embeddings:
+        return p["tok"].T.astype(dtype)
+    return p["unembed"].astype(dtype)

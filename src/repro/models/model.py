@@ -1,0 +1,253 @@
+"""Top-level model API: params, forward, chunked loss, prefill, decode.
+
+``batch`` dict convention:
+  tokens  [B, S] int32      — decoder token ids (always present)
+  labels  [B, S] int32      — next-token targets (train)
+  vision  [B, Sv, D] f      — precomputed patch embeddings (VLM stub frontend)
+  frames  [B, Sf, D] f      — precomputed audio frame embeddings (audio stub)
+
+Decode state convention (functional, threaded through serve_step):
+  {"pos": int32 scalar, "kv": {...}, "ssm": {...}, "memory"/"vision": [...]}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import ShardingRules, shard_constraint
+from . import attention as attn_mod
+from . import params as P
+from . import ssm as ssm_mod
+from .layers import embed, embed_defs, rmsnorm, rmsnorm_def, unembed_matrix
+from .transformer import Aux, encoder_defs, encoder_stack, run_stack, stack_defs
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ params
+def abstract_params(cfg: ModelConfig) -> dict:
+    tree = {
+        "embed": embed_defs(cfg),
+        "decoder": stack_defs(cfg),
+        "final_norm": rmsnorm_def(cfg.d_model),
+    }
+    if cfg.is_enc_dec:
+        tree["encoder"] = encoder_defs(cfg)
+    return tree
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return P.materialize(abstract_params(cfg), key)
+
+
+def param_logical(cfg: ModelConfig) -> dict:
+    return P.logical_specs(abstract_params(cfg))
+
+
+def param_shape_dtypes(cfg: ModelConfig) -> dict:
+    return P.shape_dtypes(abstract_params(cfg))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    tree = abstract_params(cfg)
+    total = P.count(tree)
+    if not (active_only and cfg.moe):
+        return total
+    flat = jax.tree.leaves(tree, is_leaf=P.is_def)
+    expert = sum(
+        int(np.prod(pd.shape)) for pd in flat if "expert" in pd.logical
+    )
+    active = expert * cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - expert + active)
+
+
+# ----------------------------------------------------------------- forward
+def _positions(tokens):
+    s = tokens.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    return jnp.broadcast_to(pos, tokens.shape)
+
+
+def _aux(cfg: ModelConfig, rules: ShardingRules, params, batch) -> Aux:
+    memory = None
+    vision = None
+    if cfg.is_enc_dec:
+        memory = encoder_stack(
+            cfg, rules, params["encoder"], batch["frames"].astype(_dtype(cfg))
+        )
+    if cfg.is_vlm:
+        vision = batch["vision"].astype(_dtype(cfg))
+    return Aux(memory=memory, vision=vision)
+
+
+def forward(cfg: ModelConfig, rules: ShardingRules, params, batch):
+    """Train-mode forward to the final norm. Returns hidden [B, S, D]."""
+    dt = _dtype(cfg)
+    x = embed(cfg, rules, params["embed"], batch["tokens"], dt)
+    aux = _aux(cfg, rules, params, batch)
+    h, _ = run_stack(cfg, rules, params["decoder"], x, _positions(batch["tokens"]),
+                     aux, mode="train")
+    return rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, rules: ShardingRules, params, batch):
+    """Sequence-chunked cross entropy (keeps the [*, V] logits buffer small).
+
+    Returns (loss, metrics)."""
+    h = forward(cfg, rules, params, batch)
+    labels = batch["labels"]
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0, (s, c)
+    w = unembed_matrix(cfg, params["embed"], h.dtype)
+
+    hc = h.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)  # [nc, B, c, D]
+    yc = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        hx, yx = xs
+        logits = jnp.einsum(
+            "bcd,dv->bcv", hx, w, preferred_element_type=jnp.float32
+        )
+        logits = shard_constraint(logits, rules, "batch", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yx[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (hc, yc),
+                        unroll=cfg.scan_unroll or cfg.inner_unroll)
+    loss = total / (b * s)
+    return loss, {"loss": loss, "tokens": jnp.array(b * s, jnp.float32)}
+
+
+# ------------------------------------------------------------------ serving
+def _attn_cache_layers(cfg: ModelConfig) -> tuple[int, ...]:
+    """Leading stack dims of the KV cache for this family."""
+    groups, per = cfg.scan_groups()
+    if cfg.is_hybrid:
+        return (groups,)
+    if cfg.is_ssm:
+        return ()
+    if cfg.is_vlm:
+        return (groups, per - 1)
+    return (cfg.num_layers,)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int, *,
+                      dtype=None, batch_extras: dict | None = None) -> dict:
+    """Zero caches sized for a context of ``seq_len`` tokens."""
+    dt = dtype or _dtype(cfg)
+    state: dict = {"pos": jnp.zeros((), jnp.int32)}
+    lead = _attn_cache_layers(cfg)
+    if lead:
+        kv_len = seq_len
+        if cfg.sliding_window is not None:
+            kv_len = min(seq_len, cfg.sliding_window)  # SWA ring buffer
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        shape = lead + (batch, kv_len, kv, dh)
+        state["kv"] = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.ssm is not None:
+        groups, per = cfg.scan_groups()
+        n_ssm = groups * per if cfg.is_hybrid else cfg.num_layers
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        heads = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.d_state
+        ssm_lead = (groups, per) if cfg.is_hybrid else (cfg.num_layers,)
+        state["ssm"] = {
+            "conv": jnp.zeros(ssm_lead + (batch, s.d_conv - 1, conv_dim), dt),
+            "state": jnp.zeros(ssm_lead + (batch, heads, s.head_dim, s.d_state), dt),
+        }
+    if cfg.is_enc_dec:
+        extras = batch_extras or {}
+        frames = extras.get("frames")
+        state["memory"] = (
+            frames if frames is not None
+            else jnp.zeros((batch, cfg.num_frames, cfg.d_model), dt)
+        )
+    if cfg.is_vlm:
+        extras = batch_extras or {}
+        vision = extras.get("vision")
+        state["vision"] = (
+            vision if vision is not None
+            else jnp.zeros((batch, cfg.num_vision_tokens, cfg.d_model), dt)
+        )
+    return state
+
+
+def decode_state_logical(cfg: ModelConfig) -> dict:
+    """Logical sharding axes mirroring init_decode_state's structure."""
+    spec: dict = {"pos": ()}
+    lead = _attn_cache_layers(cfg)
+    if lead:
+        ax = tuple(["layers"] * len(lead)) + ("batch", "seq", "tp", None)
+        spec["kv"] = {"k": ax, "v": ax}
+    if cfg.ssm is not None:
+        nl = 2 if cfg.is_hybrid else 1
+        ll = tuple(["layers"] * nl)
+        spec["ssm"] = {
+            "conv": ll + ("batch", None, "tp"),
+            "state": ll + ("batch", "tp", None, None),
+        }
+    if cfg.is_enc_dec:
+        spec["memory"] = ("batch", None, None)
+    if cfg.is_vlm:
+        spec["vision"] = ("batch", None, None)
+    return spec
+
+
+def prefill(cfg: ModelConfig, rules: ShardingRules, params, batch, *,
+            t_max: int | None = None):
+    """Run the full prompt, build decode caches. Returns (state, last_logits)."""
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    t_max = t_max or s
+    x = embed(cfg, rules, params["embed"], tokens, dt)
+    aux = _aux(cfg, rules, params, batch)
+    h, caches = run_stack(cfg, rules, params["decoder"], x, _positions(tokens),
+                          aux, mode="prefill", t_max=t_max)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = unembed_matrix(cfg, params["embed"], dt)
+    last_logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1], w, preferred_element_type=jnp.float32
+    )
+    state: dict = {"pos": jnp.array(s, jnp.int32)}
+    state.update(caches or {})
+    if cfg.is_enc_dec:
+        state["memory"] = aux.memory
+    if cfg.is_vlm:
+        state["vision"] = aux.vision
+    return state, last_logits
+
+
+def decode_step(cfg: ModelConfig, rules: ShardingRules, params, state, tokens):
+    """One decode step. tokens: [B, 1] -> (logits [B, V], new state)."""
+    dt = _dtype(cfg)
+    pos = state["pos"]
+    x = embed(cfg, rules, params["embed"], tokens, dt)
+    positions = jnp.broadcast_to(pos[None, None], tokens.shape).astype(jnp.int32)
+    aux = Aux(memory=state.get("memory"), vision=state.get("vision"))
+    cache = {k: state[k] for k in ("kv", "ssm") if k in state}
+    kv_pos = pos
+    if cfg.sliding_window is not None and "kv" in state:
+        kv_len = jax.tree.leaves(state["kv"])[0].shape[-3]
+        kv_pos = jnp.where(kv_len < cfg.sliding_window, pos,
+                           pos % jnp.int32(kv_len))  # SWA ring buffer
+    h, new_caches = run_stack(cfg, rules, params["decoder"], x, positions, aux,
+                              mode="decode", state=cache, cache_len=kv_pos,
+                              seen_len=pos)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = unembed_matrix(cfg, params["embed"], dt)
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, 0], w, preferred_element_type=jnp.float32
+    )
+    new_state = dict(state)
+    new_state.update(new_caches or {})
+    new_state["pos"] = pos + 1
+    return logits, new_state

@@ -1,0 +1,74 @@
+"""Single-source-of-truth parameter definitions.
+
+Model code declares parameters as ``ParamDef`` pytrees (shape + logical
+sharding axes + init rule). From one abstract tree we derive:
+  * real initialized parameters (small configs, smoke tests / examples)
+  * ShapeDtypeStructs (dry-run lowering of the full-size configs)
+  * logical -> PartitionSpec shardings (repro.sharding.specs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[Any, ...]  # logical axis per dim (None | "fsdp" | "tp" | ...)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed"
+    fan_in: int | None = None  # stddev = 1/sqrt(fan_in) when set
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def materialize(tree, key: jax.Array):
+    """ParamDef tree -> initialized parameter tree (deterministic per path)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_def)[0]
+    n = len(leaves_with_paths)
+    keys = jax.random.split(key, max(n, 1))
+
+    def init_one(pd: ParamDef, k):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, pd.dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, pd.dtype)
+        if pd.init == "embed":
+            return jax.random.normal(k, pd.shape, pd.dtype) * 0.02
+        fan = pd.fan_in if pd.fan_in else (pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1])
+        std = 1.0 / np.sqrt(max(fan, 1))
+        return jax.random.normal(k, pd.shape, pd.dtype) * std
+
+    flat = [init_one(pd, keys[i]) for i, (_, pd) in enumerate(leaves_with_paths)]
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_def)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def shape_dtypes(tree):
+    """ParamDef tree -> ShapeDtypeStruct tree (for AOT lowering)."""
+    return tree_map_defs(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype), tree)
+
+
+def logical_specs(tree):
+    """ParamDef tree -> logical-axis-tuple tree (for sharding rules)."""
+    return tree_map_defs(lambda pd: tuple(pd.logical), tree)
+
+
+def count(tree) -> int:
+    flat = jax.tree.leaves(tree, is_leaf=is_def)
+    return int(sum(int(np.prod(pd.shape)) for pd in flat))

@@ -1,0 +1,230 @@
+"""Mamba2 mixer: the SSD (state-space duality) form, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via lax.scan); decode uses the O(1)-per-token
+recurrent update with a carried (conv window, SSD state) cache. The pure-jnp
+path here doubles as the oracle for the Pallas ``ssd_scan`` kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import ShardingRules, shard_constraint
+from .layers import rmsnorm
+from .params import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state  # x, B, C share the causal conv (G=1)
+    return d_inner, heads, conv_dim
+
+
+def ssm_defs(cfg: ModelConfig, lead: tuple[int, ...] = ()) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, heads, conv_dim = _dims(cfg)
+    proj = 2 * d_inner + 2 * s.d_state + heads  # z, x, B, C, dt
+    ll = tuple(["layers"] * len(lead))
+    return {
+        "in_proj": ParamDef(lead + (d, proj), ll + ("fsdp", "tp"), fan_in=d),
+        "conv_w": ParamDef(lead + (s.d_conv, conv_dim), ll + (None, "tp")),
+        "conv_b": ParamDef(lead + (conv_dim,), ll + ("tp",), init="zeros"),
+        "a_log": ParamDef(lead + (heads,), ll + ("tp",), init="ones"),
+        "d_skip": ParamDef(lead + (heads,), ll + ("tp",), init="ones"),
+        "dt_bias": ParamDef(lead + (heads,), ll + ("tp",), init="zeros"),
+        "norm": ParamDef(lead + (d_inner,), ll + ("tp",), init="ones"),
+        "out_proj": ParamDef(lead + (d_inner, d), ll + ("tp", "fsdp"), fan_in=d_inner),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, heads, _ = _dims(cfg)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.d_state, 2 * d_inner + 2 * s.d_state],
+        axis=-1,
+    )
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv. seq: [B,S,C], w: [K,C] -> [B,S,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(k):  # k is tiny (4); unrolled taps
+        out = out + pad[:, i : i + seq.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a, B, C, chunk: int, *, rules=None, unroll=False):
+    """SSD scan. x:[b,S,H,P] dt:[b,S,H] a:[H](neg) B,C:[b,S,N].
+    Returns y:[b,S,H,P] and final state [b,H,P,N].
+
+    Ragged tails (prompt lengths off the chunk grid) are padded with dt=0 —
+    zero step size leaves the recurrence invariant, so the final state is
+    exact and the padded y rows are sliced off."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+        S = S + pad
+    nc = S // chunk
+    xr = x.reshape(b, nc, chunk, H, P)
+    dtr = dt.reshape(b, nc, chunk, H)
+    Br = B.reshape(b, nc, chunk, N)
+    Cr = C.reshape(b, nc, chunk, N)
+
+    dA = dtr * a  # [b,nc,Q,H], negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic within the chunk)
+    # decay(i,j) = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,i,j,H]
+    ii = jnp.arange(chunk)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br, preferred_element_type=jnp.float32)
+    scores = cb[..., None] * decay * dtr[:, :, None, :, :]  # [b,nc,i,j,H]
+    if rules is not None:
+        scores = shard_constraint(scores, rules, "batch", None, None, None, "tp")
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(x.dtype), xr)
+
+    # ---- inter-chunk state recurrence
+    seg_end = cum[:, :, -1:, :]  # [b,nc,1,H]
+    w_end = jnp.exp(seg_end - cum) * dtr  # decay from j to chunk end
+    # inter-chunk state recurrence runs in f32 (long products of decays)
+    s_chunk = jnp.einsum(
+        "bcjh,bcjhp,bcjn->bchpn", w_end, xr.astype(jnp.float32),
+        Br.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :]).astype(jnp.float32)  # [b,nc,H]
+
+    def step(carry, inp):
+        s_prev = carry  # [b,H,P,N] f32
+        s_c, dec = inp  # [b,H,P,N], [b,H]
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step,
+        s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll,
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # [b,nc,H,P,N]
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", Cr.astype(jnp.float32), s_prevs,
+        jnp.exp(cum), preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    if pad:
+        y = y[:, :S_orig]
+    return y, s_final.astype(x.dtype)
+
+
+def ssm_prefill_mixer(cfg: ModelConfig, rules: ShardingRules, p: dict, x):
+    """Prefill: chunked SSD forward that also emits the decode cache
+    ({'conv': [B,K-1,Cd], 'state': [B,H,P,N]})."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    d_inner, heads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(dt_))
+    z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_cache = conv_in[:, -(s.d_conv - 1):, :]
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    xh = xs.reshape(*xs.shape[:2], heads, s.head_dim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, state = ssd_chunked(xh, dtv, a, Bc, Cc, chunk=s.chunk, rules=rules,
+                           unroll=cfg.inner_unroll)
+    y = y + p["d_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    out = shard_constraint(out, rules, "batch", "seq", None)
+    return out, {"conv": conv_cache, "state": state}
+
+
+def ssm_mixer(cfg: ModelConfig, rules: ShardingRules, p: dict, x, *, cache=None):
+    """Mamba2 block mixer. x: [B,S,D]. cache (decode): {'conv': [B,K-1,Cd],
+    'state': [B,H,P,N]} -> returns (y, new_cache)."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    d_inner, heads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(dt_))
+    zxbcdt = shard_constraint(zxbcdt, rules, "batch", "seq", "tp")
+    z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+
+    if cache is None:
+        conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+        conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+        xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+        xh = xs.reshape(*xs.shape[:2], heads, s.head_dim)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        if cfg.use_pallas:
+            from repro.kernels.ssd_scan.ops import ssd_scan
+
+            y, _ = ssd_scan(xh, dtv, a, Bc, Cc, chunk=s.chunk)
+        else:
+            y, _ = ssd_chunked(xh, dtv, a, Bc, Cc, chunk=s.chunk, rules=rules,
+                               unroll=cfg.inner_unroll)
+        y = y + p["d_skip"].astype(dt_)[None, None, :, None] * xh
+        new_cache = None
+    else:
+        # single-token recurrent update (S == 1)
+        conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)  # [B,1,Cd]
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,K,Cd]
+        w = p["conv_w"].astype(dt_)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(dt_)
+        )[:, None, :]
+        xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+        xh = xs.reshape(xs.shape[0], heads, s.head_dim)  # [B,H,P]
+        dtv = jax.nn.softplus(
+            dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )  # [B,H]
+        dA = jnp.exp(dtv * a)  # [B,H]
+        state = cache["state"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtv, xh.astype(jnp.float32),
+                         Bc[:, 0].astype(jnp.float32))
+        state = state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), state)
+        y = y.astype(dt_) + p["d_skip"].astype(dt_)[None, :, None] * xh
+        y = y[:, None]  # [B,1,H,P]
+        new_cache = {"conv": window[:, 1:], "state": state.astype(cache["state"].dtype)}
+
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    return shard_constraint(out, rules, "batch", "seq", None), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    s = cfg.ssm
+    d_inner, heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((n_layers, batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((n_layers, batch, heads, s.head_dim, s.d_state), dtype),
+    }
+
+
+def ssm_cache_logical() -> dict:
+    return {
+        "conv": ("layers", "batch", None, "tp"),
+        "state": ("layers", "batch", "tp", None, None),
+    }

@@ -1,0 +1,371 @@
+"""Block composition: dense / MoE / SSM / hybrid / VLM / enc-dec stacks.
+
+All stacks are ``lax.scan`` over super-blocks (parameters stacked with a
+leading group axis) so HLO size stays O(1) in depth — required to compile
+96-layer x 18k-wide configs AOT. Heterogeneous families (Zamba2 hybrid,
+VLM cross-attn interleave) scan over *groups* and unroll the tiny inner
+pattern inside the scanned body.
+
+Three execution modes share the block math:
+  train    — no caches, optional per-block remat
+  prefill  — same math, additionally emits KV/SSM caches (scan ys)
+  decode   — single token, caches threaded through the scan (xs -> ys)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import ShardingRules
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import mlp, mlp_defs, rmsnorm, rmsnorm_def
+from .params import ParamDef
+
+
+class Aux(NamedTuple):
+    """Side inputs: encoder memory (enc-dec) or vision tokens (VLM)."""
+
+    memory: Any = None  # [B, Skv, D]
+    vision: Any = None  # [B, Sv, D]
+
+
+# ------------------------------------------------------------ param defs
+def dense_block_defs(cfg: ModelConfig, lead=()) -> dict:
+    ll = tuple(["layers"] * len(lead))
+    d = {
+        "ln1": ParamDef(lead + (cfg.d_model,), ll + (None,), init="ones"),
+        "attn": attn.attn_defs(cfg, lead),
+        "ln2": ParamDef(lead + (cfg.d_model,), ll + (None,), init="ones"),
+    }
+    if cfg.moe is not None:
+        d["ffn"] = moe_mod.moe_defs(cfg, lead)
+    else:
+        d["ffn"] = mlp_defs(cfg, lead)
+    return d
+
+
+def ssm_block_defs(cfg: ModelConfig, lead=()) -> dict:
+    ll = tuple(["layers"] * len(lead))
+    return {
+        "ln1": ParamDef(lead + (cfg.d_model,), ll + (None,), init="ones"),
+        "ssm": ssm_mod.ssm_defs(cfg, lead),
+    }
+
+
+def xattn_block_defs(cfg: ModelConfig, lead=()) -> dict:
+    ll = tuple(["layers"] * len(lead))
+    return {
+        "ln1": ParamDef(lead + (cfg.d_model,), ll + (None,), init="ones"),
+        "attn": attn.attn_defs(cfg, lead, cross=True),
+        "ln2": ParamDef(lead + (cfg.d_model,), ll + (None,), init="ones"),
+        "ffn": mlp_defs(cfg, lead),
+    }
+
+
+def stack_defs(cfg: ModelConfig) -> dict:
+    """Parameter defs for the decoder stack of ``cfg``."""
+    groups, per = cfg.scan_groups()
+    if cfg.is_hybrid:
+        return {
+            "ssm_blocks": ssm_block_defs(cfg, lead=(groups, per)),
+            "shared": dense_block_defs(cfg),  # ONE shared block (Zamba2)
+        }
+    if cfg.is_ssm:
+        return {"ssm_blocks": ssm_block_defs(cfg, lead=(cfg.num_layers,))}
+    if cfg.is_vlm:
+        return {
+            "self_blocks": dense_block_defs(cfg, lead=(groups, per - 1)),
+            "cross_blocks": xattn_block_defs(cfg, lead=(groups,)),
+        }
+    if cfg.is_enc_dec:
+        L = cfg.num_layers
+        ll = ("layers",)
+        return {
+            "dec_blocks": {
+                "ln1": ParamDef((L, cfg.d_model), ll + (None,), init="ones"),
+                "attn": attn.attn_defs(cfg, (L,)),
+                "lnx": ParamDef((L, cfg.d_model), ll + (None,), init="ones"),
+                "xattn": attn.attn_defs(cfg, (L,), cross=True),
+                "ln2": ParamDef((L, cfg.d_model), ll + (None,), init="ones"),
+                "ffn": mlp_defs(cfg, (L,)),
+            }
+        }
+    return {"blocks": dense_block_defs(cfg, lead=(cfg.num_layers,))}
+
+
+def encoder_defs(cfg: ModelConfig) -> dict:
+    return {
+        "blocks": dense_block_defs(cfg, lead=(cfg.encoder_layers,)),
+        "norm": rmsnorm_def(cfg.d_model),
+    }
+
+
+# ------------------------------------------------------------ block bodies
+def dense_block(cfg, rules, p, x, positions, *, cache=None, cache_len=None,
+                seen_len=None, emit_kv=None):
+    h, new_cache = attn.self_attention(
+        cfg, rules, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), positions,
+        cache=cache, cache_len=cache_len, seen_len=seen_len, emit_kv=emit_kv,
+    )
+    x = x + h
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        x = x + moe_mod.moe_mlp(cfg, rules, p["ffn"], h2)
+    else:
+        x = x + mlp(cfg, rules, p["ffn"], h2)
+    return x, new_cache
+
+
+def ssm_block(cfg, rules, p, x, *, cache=None):
+    h, new_cache = ssm_mod.ssm_mixer(
+        cfg, rules, p["ssm"], rmsnorm(x, p["ln1"], cfg.norm_eps), cache=cache
+    )
+    return x + h, new_cache
+
+
+def ssm_block_prefill(cfg, rules, p, x):
+    h, cache = ssm_mod.ssm_prefill_mixer(
+        cfg, rules, p["ssm"], rmsnorm(x, p["ln1"], cfg.norm_eps)
+    )
+    return x + h, cache
+
+
+def xattn_block(cfg, rules, p, x, aux_kv):
+    h = attn.cross_attention(
+        cfg, rules, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), aux_kv
+    )
+    x = x + h
+    x = x + mlp(cfg, rules, p["ffn"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x
+
+
+# -------------------------------------------------------------- the stacks
+def _maybe_remat(cfg: ModelConfig, fn, train: bool):
+    if not (train and cfg.remat) or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs, recompute only elementwise ops in the backward
+        # pass (-~25% recompute FLOPs and bytes vs full remat; §Perf)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def run_stack(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    params: dict,
+    x,
+    positions,
+    aux: Aux = Aux(),
+    *,
+    mode: str = "train",  # "train" | "prefill" | "decode"
+    state: dict | None = None,  # decode caches (stacked)
+    t_max: int | None = None,  # KV buffer length for prefill caches
+    cache_len=None,  # decode: KV write slot (traced scalar)
+    seen_len=None,  # decode: total tokens seen (mask horizon)
+):
+    """Returns (hidden, caches). ``caches`` is None in train mode; in prefill
+    mode a freshly built stacked cache; in decode mode the updated one."""
+    assert mode in ("train", "prefill", "decode")
+    args = (cfg, rules, params, x, positions, aux, mode, state, t_max,
+            cache_len, seen_len)
+    if cfg.is_hybrid:
+        return _hybrid_stack(*args)
+    if cfg.is_ssm:
+        return _ssm_stack(*args)
+    if cfg.is_vlm:
+        return _vlm_stack(*args)
+    if cfg.is_enc_dec:
+        return _encdec_stack(*args)
+    return _dense_stack(*args)
+
+
+def _dense_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
+                 cache_len, seen_len):
+    def body(carry, xs):
+        if mode == "decode":
+            p, c = xs
+            return dense_block(cfg, rules, p, carry, positions, cache=c,
+                               cache_len=cache_len, seen_len=seen_len)
+        p = xs
+        h, kv = dense_block(cfg, rules, p, carry, positions,
+                            emit_kv=t_max if mode == "prefill" else None)
+        return h, kv
+
+    body = _maybe_remat(cfg, body, mode == "train")
+    if mode == "decode":
+        x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]), unroll=cfg.scan_unroll)
+        return x, {"kv": caches}
+    x, ys = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    return x, ({"kv": ys} if mode == "prefill" else None)
+
+
+def _ssm_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
+               cache_len, seen_len):
+    def body(carry, xs):
+        if mode == "decode":
+            p, c = xs
+            return ssm_block(cfg, rules, p, carry, cache=c)
+        if mode == "prefill":
+            return ssm_block_prefill(cfg, rules, xs, carry)
+        h, _ = ssm_block(cfg, rules, xs, carry)
+        return h, None
+
+    body = _maybe_remat(cfg, body, mode == "train")
+    if mode == "decode":
+        x, caches = jax.lax.scan(body, x, (params["ssm_blocks"], state["ssm"]), unroll=cfg.scan_unroll)
+        return x, {"ssm": caches}
+    x, ys = jax.lax.scan(body, x, params["ssm_blocks"], unroll=cfg.scan_unroll)
+    return x, ({"ssm": ys} if mode == "prefill" else None)
+
+
+def _hybrid_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
+                  cache_len, seen_len):
+    groups, per = cfg.scan_groups()
+    shared = params["shared"]
+
+    def body(carry, xs):
+        if mode == "decode":
+            pg, ssm_c, kv_c = xs
+            new_ssm = []
+            for i in range(per):
+                pi = jax.tree.map(lambda t: t[i], pg)
+                ci = jax.tree.map(lambda t: t[i], ssm_c)
+                carry, c2 = ssm_block(cfg, rules, pi, carry, cache=ci)
+                new_ssm.append(c2)
+            carry, kv2 = dense_block(cfg, rules, shared, carry, positions,
+                                     cache=kv_c, cache_len=cache_len,
+                                     seen_len=seen_len)
+            stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *new_ssm)
+            return carry, (stacked, kv2)
+        pg = xs
+        ssm_caches = []
+        for i in range(per):
+            pi = jax.tree.map(lambda t: t[i], pg)
+            if mode == "prefill":
+                carry, c = ssm_block_prefill(cfg, rules, pi, carry)
+                ssm_caches.append(c)
+            else:
+                carry, _ = ssm_block(cfg, rules, pi, carry)
+        carry, kv = dense_block(cfg, rules, shared, carry, positions,
+                                emit_kv=t_max if mode == "prefill" else None)
+        if mode == "prefill":
+            stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ssm_caches)
+            return carry, (stacked, kv)
+        return carry, None
+
+    body = _maybe_remat(cfg, body, mode == "train")
+    if mode == "decode":
+        x, (ssm_c, kv_c) = jax.lax.scan(
+            body, x, (params["ssm_blocks"], state["ssm"], state["kv"]),
+            unroll=cfg.scan_unroll,
+        )
+        return x, {"ssm": ssm_c, "kv": kv_c}
+    x, ys = jax.lax.scan(body, x, params["ssm_blocks"], unroll=cfg.scan_unroll)
+    if mode == "prefill":
+        ssm_c, kv_c = ys
+        return x, {"ssm": ssm_c, "kv": kv_c}
+    return x, None
+
+
+def _vlm_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
+               cache_len, seen_len):
+    groups, per = cfg.scan_groups()
+    vision = aux.vision
+
+    def body(carry, xs):
+        if mode == "decode":
+            pg, pc, kv_c = xs  # kv_c: [per-1, B, T, Kv, Dh] pytree
+            new_kv = []
+            for i in range(per - 1):
+                pi = jax.tree.map(lambda t: t[i], pg)
+                ci = jax.tree.map(lambda t: t[i], kv_c)
+                carry, c2 = dense_block(cfg, rules, pi, carry, positions,
+                                        cache=ci, cache_len=cache_len,
+                                        seen_len=seen_len)
+                new_kv.append(c2)
+            carry = xattn_block(cfg, rules, pc, carry, vision)
+            stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *new_kv)
+            return carry, stacked
+        pg, pc = xs
+        kvs = []
+        for i in range(per - 1):
+            pi = jax.tree.map(lambda t: t[i], pg)
+            carry, kv = dense_block(cfg, rules, pi, carry, positions,
+                                    emit_kv=t_max if mode == "prefill" else None)
+            if mode == "prefill":
+                kvs.append(kv)
+        carry = xattn_block(cfg, rules, pc, carry, vision)
+        if mode == "prefill":
+            return carry, jax.tree.map(lambda *ts: jnp.stack(ts), *kvs)
+        return carry, None
+
+    body = _maybe_remat(cfg, body, mode == "train")
+    if mode == "decode":
+        x, kv = jax.lax.scan(
+            body, x, (params["self_blocks"], params["cross_blocks"], state["kv"]),
+            unroll=cfg.scan_unroll,
+        )
+        return x, {"kv": kv}
+    x, ys = jax.lax.scan(body, x, (params["self_blocks"], params["cross_blocks"]), unroll=cfg.scan_unroll)
+    return x, ({"kv": ys} if mode == "prefill" else None)
+
+
+def _encdec_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
+                  cache_len, seen_len):
+    memory = aux.memory
+
+    def body(carry, xs):
+        if mode == "decode":
+            p, kv_c = xs
+            xn = rmsnorm(carry, p["ln1"], cfg.norm_eps)
+            h, kv2 = attn.self_attention(cfg, rules, p["attn"], xn, positions,
+                                         cache=kv_c, cache_len=cache_len,
+                                         seen_len=seen_len)
+        else:
+            p = xs
+            xn = rmsnorm(carry, p["ln1"], cfg.norm_eps)
+            h, kv2 = attn.self_attention(
+                cfg, rules, p["attn"], xn, positions,
+                emit_kv=t_max if mode == "prefill" else None)
+        carry = carry + h
+        carry = carry + attn.cross_attention(
+            cfg, rules, p["xattn"], rmsnorm(carry, p["lnx"], cfg.norm_eps),
+            memory)
+        carry = carry + mlp(cfg, rules, p["ffn"],
+                            rmsnorm(carry, p["ln2"], cfg.norm_eps))
+        return carry, kv2
+
+    body = _maybe_remat(cfg, body, mode == "train")
+    blocks = params["dec_blocks"]
+    if mode == "decode":
+        x, kv = jax.lax.scan(body, x, (blocks, state["kv"]), unroll=cfg.scan_unroll)
+        return x, {"kv": kv}
+    x, ys = jax.lax.scan(body, x, blocks, unroll=cfg.scan_unroll)
+    return x, ({"kv": ys} if mode == "prefill" else None)
+
+
+def encoder_stack(cfg: ModelConfig, rules, params, frames):
+    """Bidirectional encoder over precomputed frame embeddings [B, Sf, D]."""
+    positions = jnp.arange(frames.shape[1])[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, frames.shape[:2])
+
+    def enc_block(carry, p):
+        xn = rmsnorm(carry, p["ln1"], cfg.norm_eps)
+        h, _ = attn.self_attention(cfg, rules, p["attn"], xn, positions,
+                                   is_causal=False)
+        carry = carry + h
+        carry = carry + mlp(cfg, rules, p["ffn"],
+                            rmsnorm(carry, p["ln2"], cfg.norm_eps))
+        return carry, None
+
+    x, _ = jax.lax.scan(enc_block, frames, params["blocks"], unroll=cfg.scan_unroll)
+    return rmsnorm(x, params["norm"], cfg.norm_eps)

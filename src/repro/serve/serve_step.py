@@ -1,0 +1,35 @@
+"""Serving steps: prefill (prompt -> caches) and serve_step (one new token
+against a KV/SSM state of ``seq_len``) — the functions the decode-shape
+dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.sharding.specs import ShardingRules
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, *, t_max: int):
+    def prefill_step(params, batch):
+        state, last_logits = prefill(cfg, rules, params, batch, t_max=t_max)
+        return state, last_logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: ShardingRules, *, greedy: bool = True):
+    """serve_step(params, state, tokens[B,1]) -> (next_tokens[B,1], state)."""
+
+    def serve_step(params, state, tokens):
+        logits, state = decode_step(cfg, rules, params, state, tokens)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, state
+
+    return serve_step

@@ -1,0 +1,9 @@
+from .specs import (  # noqa: F401
+    ShardingRules,
+    current_mesh,
+    logical_to_physical,
+    make_param_shardings,
+    set_mesh,
+    shard_constraint,
+    shardings_for,
+)

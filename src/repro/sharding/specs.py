@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", ...). A ``ShardingRules`` instance maps each logical name to zero or
+more *mesh* axes. Changing the parallelism scheme (the §Perf hillclimb knob)
+means swapping rules, never touching model code.
+
+Default scheme:
+  batch   -> ("pod", "data")   pure DP over pods, batch-DP within a pod
+  fsdp    -> "data"            parameters fully sharded over the data axis
+  tp      -> "model"           tensor parallelism (heads / ff / vocab / experts)
+  seq     -> None              (context parallelism only for long-decode rules)
+
+Mesh plumbing: the launcher calls ``set_mesh(mesh)``; ``shard_constraint``
+then attaches ``NamedSharding`` constraints inside jit-traced code. With no
+mesh set (CPU unit tests), constraints are no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    _state.mesh = mesh
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axes (str, tuple of str, or None)."""
+
+    batch: Any = ("pod", "data")
+    fsdp: Any = "data"  # parameter sharding (ZeRO-3 style)
+    tp: Any = "model"  # tensor parallel
+    seq: Any = None  # sequence/context parallel
+    expert: Any = "model"  # expert parallel
+    # set fsdp_pod to also shard params/optimizer over the pod axis (ZeRO-3
+    # across pods; trades parameter all-gather traffic on DCN for memory).
+    fsdp_pod: bool = False
+
+    def resolve(self, logical: str | None):
+        if logical is None or logical == "layers":
+            return None  # the stacked-layer axis is never sharded
+        axes = {
+            "batch": self.batch,
+            "fsdp": self._fsdp_axes(),
+            "tp": self.tp,
+            "seq": self.seq,
+            "expert": self.expert,
+        }[logical]
+        return axes
+
+    def _fsdp_axes(self):
+        if self.fsdp is None:
+            return None
+        if self.fsdp_pod:
+            base = self.fsdp if isinstance(self.fsdp, tuple) else (self.fsdp,)
+            return ("pod",) + base
+        return self.fsdp
+
+    def filter_for_mesh(self, mesh: Mesh | None) -> "ShardingRules":
+        """Drop references to mesh axes that don't exist (e.g. 'pod' on the
+        single-pod mesh)."""
+        if mesh is None:
+            return self
+        names = set(mesh.axis_names)
+
+        def keep(v):
+            if v is None:
+                return None
+            if isinstance(v, tuple):
+                kept = tuple(a for a in v if a in names)
+                return kept if kept else None
+            return v if v in names else None
+
+        return dataclasses.replace(
+            self,
+            batch=keep(self.batch),
+            fsdp=keep(self.fsdp),
+            tp=keep(self.tp),
+            seq=keep(self.seq),
+            expert=keep(self.expert),
+            fsdp_pod=self.fsdp_pod and "pod" in names,
+        )
+
+
+def logical_to_physical(
+    rules: ShardingRules,
+    logical: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    mesh: Mesh | None = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    Shape-aware: a mesh axis (product) that does not evenly divide the dim is
+    dropped (the dim stays replicated). jit's in_shardings rejects uneven
+    shardings, and several pool archs have head counts that don't divide the
+    16-wide model axis (e.g. qwen2's 28 heads / 8 kv heads) — those dims fall
+    back to replication; §Perf revisits them (head-dim sharding etc.).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+    axes = []
+    used: set[str] = set()
+    for d, name in enumerate(logical):
+        ax = rules.resolve(name)
+        if ax is None:
+            axes.append(None)
+            continue
+        flat = ax if isinstance(ax, tuple) else (ax,)
+        flat = tuple(a for a in flat if a not in used)
+        if shape is not None and sizes:
+            prod = 1
+            for a in flat:
+                prod *= sizes.get(a, 1)
+            if prod == 0 or (prod and shape[d] % prod != 0):
+                # try dropping trailing axes until it divides
+                while flat:
+                    prod = 1
+                    for a in flat:
+                        prod *= sizes.get(a, 1)
+                    if prod and shape[d] % prod == 0:
+                        break
+                    flat = flat[:-1]
+                if not flat:
+                    axes.append(None)
+                    continue
+                prod = 1
+                for a in flat:
+                    prod *= sizes.get(a, 1)
+                if shape[d] % prod != 0:
+                    axes.append(None)
+                    continue
+        used.update(flat)
+        axes.append(flat if len(flat) > 1 else (flat[0] if flat else None))
+    return P(*axes)
+
+
+def shard_constraint(x, rules: ShardingRules, *logical: str | None):
+    """with_sharding_constraint on a logical spec; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_physical(
+        rules.filter_for_mesh(mesh), logical, shape=x.shape, mesh=mesh
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_logical(s) -> bool:
+    return isinstance(s, tuple) and all(e is None or isinstance(e, str) for e in s)
+
+
+def make_param_shardings(mesh: Mesh, rules: ShardingRules, abstract_tree):
+    """pytree of ParamDef -> pytree of NamedSharding (shape-aware)."""
+    from repro.models.params import ParamDef, is_def
+
+    rules = rules.filter_for_mesh(mesh)
+    return jax.tree.map(
+        lambda pd: NamedSharding(
+            mesh, logical_to_physical(rules, pd.logical, pd.shape, mesh)
+        ),
+        abstract_tree,
+        is_leaf=is_def,
+    )
+
+
+def shardings_for(mesh: Mesh, rules: ShardingRules, logical_tree, sds_tree):
+    """(logical tuples tree, ShapeDtypeStruct tree) -> NamedSharding tree."""
+    rules = rules.filter_for_mesh(mesh)
+    return jax.tree.map(
+        lambda spec, sds: NamedSharding(
+            mesh, logical_to_physical(rules, spec, sds.shape, mesh)
+        ),
+        logical_tree,
+        sds_tree,
+        is_leaf=lambda s: _is_logical(s),
+    )

@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state, opt_state_logical  # noqa: F401
+from .train_step import make_train_step  # noqa: F401

@@ -1,0 +1,157 @@
+"""The jitted training step: loss -> grads -> AdamW, with optional
+microbatched gradient accumulation and a pluggable pod-axis gradient
+reduction (the Skyplane-planned / compressed path from repro.transfer).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.sharding.specs import ShardingRules
+from .optimizer import OptConfig, adamw_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    opt_cfg: OptConfig,
+    *,
+    microbatches: int = 1,
+    grad_transform: Callable | None = None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_transform: optional hook applied to the f32 grad pytree before the
+    optimizer (e.g. transfer.collective.compressed_pod_allreduce).
+    """
+
+    def compute_grads(params, batch):
+        def lw(p, b):
+            if cfg.cast_params_once:
+                # cast the whole tree to the compute dtype up front: FSDP
+                # all-gathers then move bf16 (half the f32 bytes); the cast
+                # is linear so grads flow back to the f32 masters unchanged.
+                dt = jnp.dtype(cfg.dtype)
+                p = jax.tree.map(
+                    lambda t: t.astype(dt) if t.dtype == jnp.float32 else t, p
+                )
+            loss, metrics = loss_fn(cfg, rules, p, b)
+            return loss, metrics
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(lw, has_aux=True)(
+                params, batch
+            )
+            return grads, loss, metrics
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            (loss, _), grads = jax.value_and_grad(lw, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+            )
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss_sum), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+        return grads, loss, {"loss": loss}
+
+    def train_step(params, opt_state, batch):
+        grads, loss, metrics = compute_grads(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, params, opt_state, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_podring_train_step(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    opt_cfg: OptConfig,
+    mesh,
+    *,
+    compress_wire: bool = True,
+    pod_tput=None,
+):
+    """Inter-pod DP with an explicit, planner-ordered, optionally int8-
+    compressed ring all-reduce (the paper's egress-volume lever applied to
+    gradients on the DCN) instead of GSPMD's automatic pod all-reduce.
+
+    Structure: shard_map manual over 'pod' (auto over data/model). Each pod
+    computes grads on its batch shard with FSDP/TP handled by GSPMD inside;
+    the ring then averages grads across pods — moving int8+scales on the
+    DCN wire when compress_wire is set (4x fewer inter-pod bytes)."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.transfer.collective import choose_ring_order, ring_allreduce_tree
+
+    assert "pod" in mesh.axis_names
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    order = choose_ring_order(
+        pod_tput if pod_tput is not None else np.ones((n_pods, n_pods))
+    )
+    # inside the pod-manual region, batch parallelism only spans 'data'
+    import dataclasses as _dc
+
+    inner_rules = _dc.replace(rules, batch="data")
+
+    def body(params, opt_state, batch_local):
+        def lw(p, b):
+            if cfg.cast_params_once:
+                dt = jnp.dtype(cfg.dtype)
+                p = jax.tree.map(
+                    lambda t: t.astype(dt) if t.dtype == jnp.float32 else t, p
+                )
+            loss, metrics = loss_fn(cfg, inner_rules, p, b)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lw, has_aux=True)(
+            params, batch_local
+        )
+        grads = ring_allreduce_tree(
+            grads, "pod", order, compress_wire=compress_wire, mean=True
+        )
+        params2, opt2, opt_metrics = adamw_update(
+            grads, params, opt_state, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = jax.lax.pmean(loss, "pod")
+        return params2, opt2, metrics
+
+    def step(params, opt_state, batch):
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), P("pod")),
+            out_specs=(P(), P(), P()),
+            axis_names=frozenset({"pod"}),
+            check_vma=False,
+        )(params, opt_state, batch)
+
+    return step

@@ -1,0 +1,38 @@
+"""Chunking + integrity (paper §6: objects are split into ~equal small chunks
+so many read/write ops can run in parallel against the object stores)."""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import zlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    object_key: str
+    index: int
+    offset: int
+    length: int
+
+    @property
+    def id(self) -> str:
+        return f"{self.object_key}#{self.index}"
+
+
+def chunk_object(object_key: str, size_bytes: int, chunk_bytes: int) -> list[Chunk]:
+    chunks = []
+    off = 0
+    i = 0
+    while off < size_bytes:
+        ln = min(chunk_bytes, size_bytes - off)
+        chunks.append(Chunk(object_key, i, off, ln))
+        off += ln
+        i += 1
+    return chunks
+
+
+def checksum(data: bytes, *, strong: bool = False) -> str:
+    if strong:
+        return hashlib.sha256(data).hexdigest()
+    return f"{zlib.crc32(data):08x}"

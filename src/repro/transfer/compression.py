@@ -1,0 +1,67 @@
+"""Gradient compression for inter-pod (DCN) reduction.
+
+Skyplane's cost lever is *egress volume* (§2: transfers are billed per GB).
+On a TPU fleet the pod-to-pod links are the expensive, slow resource, so the
+same lever applies: per-block symmetric int8 quantization cuts wire bytes
+4x. Error feedback (Seide et al.; Karimireddy et al. 2019) keeps SGD/Adam
+convergence: the quantization residual is carried and re-added next step.
+
+Pure-jnp reference here; the Pallas quantize kernel (repro.kernels.quantize)
+is the TPU hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_blockwise(x, block: int = 256, *, use_pallas: bool = False):
+    """x: float array -> (q int8 [same shape], scales f32 [n_blocks])."""
+    if use_pallas:
+        from repro.kernels.quantize.ops import quantize_int8 as _kq
+
+        return _kq(x, block=block)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[: x.size].reshape(x.shape), scale[:, 0]
+
+
+def dequantize_int8_blockwise(q, scales, block: int = 256):
+    flat = q.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block) * scales[:, None]
+    return blocks.reshape(-1)[:n]
+
+
+def compress(x, block: int = 256, *, use_pallas: bool = False):
+    """Lossy round-trip (the on-wire transform)."""
+    q, s = quantize_int8_blockwise(x, block, use_pallas=use_pallas)
+    return dequantize_int8_blockwise(q, s, block).reshape(x.shape).astype(x.dtype)
+
+
+def init_error_feedback(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_error_feedback(grads, ef_state, block: int = 256,
+                                 *, use_pallas: bool = False):
+    """Returns (compressed_grads, new_ef_state)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        sent = compress(corrected, block, use_pallas=use_pallas)
+        return sent.astype(g.dtype), corrected - sent
+
+    out = jax.tree.map(one, grads, ef_state)
+    comp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_ef

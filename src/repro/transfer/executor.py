@@ -1,0 +1,48 @@
+"""Plan execution front-end: run a TransferPlan on the fluid simulator and
+reconcile realized cost/throughput against the planner's predictions, plus
+the managed-service models for the Fig. 6 comparison."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.baselines import CloudServiceModel
+from repro.core.plan import TransferPlan
+from repro.core.topology import Topology
+from .flowsim import SimResult, simulate_transfer
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    sim: SimResult
+    planned_tput_gbps: float
+    planned_cost: float
+    tput_ratio: float  # achieved / planned
+    cost_ratio: float  # realized / planned
+
+    @property
+    def time_s(self) -> float:
+        return self.sim.time_s
+
+
+def execute_plan(plan: TransferPlan, **sim_kwargs) -> ExecutionReport:
+    sim = simulate_transfer(plan, **sim_kwargs)
+    return ExecutionReport(
+        sim=sim,
+        planned_tput_gbps=plan.throughput,
+        planned_cost=plan.total_cost,
+        tput_ratio=sim.tput_gbps / max(plan.throughput, 1e-9),
+        cost_ratio=sim.total_cost / max(plan.total_cost, 1e-9),
+    )
+
+
+def execute_service_model(
+    model: CloudServiceModel, top: Topology, src: str, dst: str, volume_gb: float
+) -> dict:
+    t = model.transfer_time_s(top, src, dst, volume_gb)
+    return {
+        "service": model.name,
+        "time_s": t,
+        "tput_gbps": volume_gb * 8.0 / t,
+        "cost": model.cost(top, src, dst, volume_gb),
+    }

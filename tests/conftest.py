@@ -1,0 +1,11 @@
+import sys
+from pathlib import Path
+
+# allow `pytest tests/` without installing the package
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no XLA_FLAGS here on purpose — unit tests must see the real single
+# CPU device. Multi-device behavior is tested in subprocesses (see
+# tests/test_distributed.py) and by launch/dryrun.py.

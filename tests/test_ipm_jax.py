@@ -1,0 +1,40 @@
+"""Batched JAX IPM (solver/ipm_jax) vs the numpy reference solver."""
+
+import numpy as np
+import pytest
+
+from repro.core import Planner, default_topology, toy_topology
+from repro.core import milp
+from repro.core.solver.ipm import solve_lp
+from repro.core.solver.ipm_jax import solve_lp_batched
+
+
+def test_batched_matches_reference_on_skyplane_lps():
+    top = toy_topology(n=6, seed=4)
+    lp = milp.build_lp(top, 0, 1, 1.0)
+    goals = np.array([0.5, 1.5, 2.5, 3.5])
+    b_batch = np.tile(lp.b_ub[None, :], (len(goals), 1))
+    b_batch[:, lp.row_4c] = -goals
+    b_batch[:, lp.row_4d] = -goals
+    xs, funs, ok = solve_lp_batched(lp.c, lp.A_ub, b_batch, lp.A_eq, lp.b_eq)
+    for i, g in enumerate(goals):
+        lp_i = milp.build_lp(top, 0, 1, float(g))
+        ref = solve_lp(lp_i.c, lp_i.A_ub, lp_i.b_ub, lp_i.A_eq, lp_i.b_eq)
+        assert ok[i] == ref.ok
+        if ref.ok:
+            assert funs[i] == pytest.approx(ref.fun, rel=1e-5, abs=1e-8)
+
+
+def test_fast_frontier_close_to_integerized():
+    top = default_topology()
+    planner = Planner(top)
+    src, dst = "aws:us-east-1", "gcp:europe-west4"
+    fast = planner.pareto_frontier_fast(src, dst, 10.0, n_samples=16)
+    exact = planner.pareto_frontier(src, dst, 10.0, n_samples=4)
+    assert len(fast) >= 12
+    for p in exact:
+        near = min(fast, key=lambda q: abs(q.tput_goal - p.tput_goal))
+        assert near.cost_per_gb == pytest.approx(p.cost_per_gb, rel=0.05)
+    # frontier plans are feasible (continuous relaxation: no integrality)
+    for q in fast[:: max(len(fast) // 4, 1)]:
+        assert q.plan.validate() == []

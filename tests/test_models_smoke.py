@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (the brief's reduced-config requirement):
+one forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill/decode consistency for each stack family.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import (
+    count_params,
+    decode_step,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.sharding.specs import ShardingRules
+
+RULES = ShardingRules(batch=None, fsdp=None, tp=None)
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.is_vlm:
+        batch["vision"] = jax.random.normal(
+            key, (B, cfg.num_vision_tokens, cfg.d_model)
+        )
+    if cfg.is_enc_dec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.num_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_train_step(arch):
+    cfg = reduced(ARCHS[arch])
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    @jax.jit
+    def step(p, b):
+        loss, metrics = loss_fn(cfg, RULES, p, b)
+        grads = jax.grad(lambda q: loss_fn(cfg, RULES, q, b)[0])(p)
+        return loss, grads
+
+    loss, grads = step(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm), f"{arch}: non-finite grads"
+    for p, g in zip(jax.tree.leaves(params), jax.tree.leaves(grads)):
+        assert p.shape == g.shape
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_shapes(arch):
+    cfg = reduced(ARCHS[arch])
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    state, last_logits = jax.jit(
+        lambda p, b: prefill(cfg, RULES, p, b, t_max=S + 4)
+    )(params, batch)
+    assert last_logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(last_logits).all()
+    tok = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+    logits, state2 = jax.jit(
+        lambda p, s_, t: decode_step(cfg, RULES, p, s_, t)
+    )(params, state, tok)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    assert int(state2["pos"]) == int(state["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b", "qwen3-moe-30b-a3b"])
+def test_prefill_matches_forward(arch):
+    """prefill's last-position logits == the train-mode forward's (same math,
+    different cache plumbing)."""
+    cfg = reduced(ARCHS[arch])
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    from repro.models.model import forward
+    from repro.models.layers import unembed_matrix
+
+    h = jax.jit(lambda p, b: forward(cfg, RULES, p, b))(params, batch)
+    w = unembed_matrix(cfg, params["embed"], h.dtype)
+    ref_logits = jnp.einsum("bd,dv->bv", h[:, -1], w,
+                            preferred_element_type=jnp.float32)
+    _, last_logits = jax.jit(
+        lambda p, b: prefill(cfg, RULES, p, b, t_max=S)
+    )(params, batch)
+    assert jnp.allclose(last_logits, ref_logits, atol=2e-2), (
+        float(jnp.max(jnp.abs(last_logits - ref_logits)))
+    )
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b", "zamba2-7b"])
+def test_decode_matches_prefill_extension(arch):
+    """decode(prefill(t[:s]), t[s]) logits == prefill(t[:s+1]) last logits —
+    the KV/SSM caches carry exactly the information the full forward sees.
+    Run in f32: the check is about cache *semantics*, and bf16 accumulation
+    noise through stacked attention would otherwise mask real bugs."""
+    cfg = dataclasses.replace(reduced(ARCHS[arch]), dtype="float32")
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    full = _batch(cfg, key)
+    toks = full["tokens"]
+
+    short = dict(full)
+    short["tokens"] = toks[:, : S - 1]
+    state, _ = jax.jit(lambda p, b: prefill(cfg, RULES, p, b, t_max=S))(
+        params, short
+    )
+    step_logits, _ = jax.jit(
+        lambda p, s_, t: decode_step(cfg, RULES, p, s_, t)
+    )(params, state, toks[:, S - 1 : S])
+
+    _, ref_logits = jax.jit(lambda p, b: prefill(cfg, RULES, p, b, t_max=S))(
+        params, full
+    )
+    err = float(jnp.max(jnp.abs(step_logits - ref_logits)))
+    assert err < 1e-3, f"{arch}: decode/prefill divergence {err}"
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "smollm-135m": (0.13e9, 0.15e9),
+        "nemotron-4-340b": (3.2e11, 3.6e11),
+        "mistral-large-123b": (1.18e11, 1.27e11),
+        "qwen2-7b": (7.2e9, 8.0e9),
+        "mixtral-8x22b": (1.3e11, 1.45e11),
+        "qwen3-moe-30b-a3b": (2.9e10, 3.2e10),
+        "mamba2-1.3b": (1.2e9, 1.45e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(ARCHS[arch])
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    n_act = count_params(ARCHS["qwen3-moe-30b-a3b"], active_only=True)
+    assert 2.5e9 <= n_act <= 4.0e9  # "A3B"
+
+
+def test_moe_psum_combine_matches_gather_combine():
+    """§Perf v8: the scatter-from-experts + psum combine is numerically
+    identical (values and grads) to the gather-based combine."""
+    from repro.configs import MoEConfig
+    from repro.models import loss_fn as _loss
+
+    cfg0 = dataclasses.replace(
+        reduced(ARCHS["qwen3-moe-30b-a3b"]),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64,
+                      capacity_factor=8.0),
+        dtype="float32", moe_shard_dispatch=True,
+    )
+    cfg1 = dataclasses.replace(cfg0, moe_psum_combine=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg0, key)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 32), 0, cfg0.vocab_size),
+        "labels": jax.random.randint(key, (2, 32), 0, cfg0.vocab_size),
+    }
+    l0, _ = _loss(cfg0, RULES, params, batch)
+    l1, _ = _loss(cfg1, RULES, params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-5
+    g0 = jax.grad(lambda p: _loss(cfg0, RULES, p, batch)[0])(params)
+    g1 = jax.grad(lambda p: _loss(cfg1, RULES, p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        assert float(jnp.abs(a - b).max()) < 1e-4

@@ -1,0 +1,104 @@
+"""Planner behaviour on the embedded 71-region topology (paper §4-§5)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Planner,
+    default_topology,
+    direct_plan,
+    gridftp_plan,
+    ron_plan,
+)
+
+SRC, DST = "azure:canadacentral", "gcp:asia-northeast1"  # paper Fig. 1 route
+
+
+@pytest.fixture(scope="module")
+def top():
+    return default_topology()
+
+
+@pytest.fixture(scope="module")
+def planner(top):
+    return Planner(top)
+
+
+def test_grid_shape_and_region_counts(top):
+    by = {}
+    for r in top.regions:
+        by[r.provider] = by.get(r.provider, 0) + 1
+    assert by == {"aws": 20, "azure": 24, "gcp": 27}  # paper §7.1 scale
+    v = top.num_regions
+    assert top.tput.shape == (v, v) and (np.diag(top.tput) == 0).all()
+    off = ~np.eye(v, dtype=bool)
+    assert (top.tput[off] > 0).all() and (top.price_egress[off] > 0).all()
+
+
+def test_egress_caps_respected(top):
+    """AWS 5 Gbps / GCP 7 Gbps inter-cloud caps (paper §2, Fig. 3)."""
+    for i, a in enumerate(top.regions):
+        for j, b in enumerate(top.regions):
+            if i == j or a.provider == b.provider:
+                continue
+            cap = {"aws": 5.0, "gcp": 7.0, "azure": 16.0}[a.provider]
+            assert top.tput[i, j] <= cap + 1e-9
+
+
+def test_cost_min_plan_is_feasible(planner):
+    plan = planner.plan_cost_min(SRC, DST, 20.0, 50.0)
+    assert plan.validate() == []
+    assert plan.throughput >= 20.0 * 0.97  # round-down shortfall <= ~1%
+
+
+def test_overlay_beats_direct_on_fig1_route(planner, top):
+    """The paper's headline: ~2x speedup at ~1.2x cost via a relay."""
+    dp = direct_plan(top, SRC, DST, 50.0)
+    plan = planner.plan_tput_max(SRC, DST, dp.cost_per_gb * 1.25, 50.0,
+                                 n_samples=12)
+    assert plan.validate() == []
+    assert plan.throughput > 1.5 * dp.throughput
+    assert plan.cost_per_gb <= dp.cost_per_gb * 1.25 + 1e-6
+    # and it actually uses a relay
+    assert any(len(path) > 2 for path, _ in plan.paths())
+
+
+def test_tput_max_respects_cost_ceiling(planner, top):
+    dp = direct_plan(top, SRC, DST, 50.0)
+    for mult in (1.05, 1.5):
+        plan = planner.plan_tput_max(SRC, DST, dp.cost_per_gb * mult, 50.0,
+                                     n_samples=10)
+        assert plan.cost_per_gb <= dp.cost_per_gb * mult + 1e-6
+
+
+def test_pareto_frontier_monotone(planner):
+    pts = planner.pareto_frontier(SRC, DST, 50.0, n_samples=10)
+    tputs = [p.tput_goal for p in pts]
+    costs = [p.cost_per_gb for p in pts]
+    assert tputs == sorted(tputs)
+    # cost per GB is non-decreasing along the frontier (within solver noise)
+    for a, b in zip(costs[:-1], costs[1:]):
+        assert b >= a - 1e-4
+
+
+def test_ron_is_fast_but_expensive(planner, top):
+    """Table 2 directionality: RON beats direct on tput, Skyplane cost-opt
+    beats RON on cost."""
+    ron = ron_plan(top, SRC, DST, 50.0, num_vms=8)
+    dp = direct_plan(top, SRC, DST, 50.0)
+    assert ron.validate() == []
+    assert ron.throughput >= dp.throughput
+    sky = planner.plan_cost_min(SRC, DST, dp.throughput, 50.0)
+    assert sky.cost_per_gb <= ron.cost_per_gb + 1e-9
+
+
+def test_baselines_valid(top):
+    for plan in (direct_plan(top, SRC, DST, 10.0), gridftp_plan(top, SRC, DST, 10.0)):
+        assert plan.validate() == []
+        assert len(plan.paths()) == 1  # direct only
+
+
+def test_flow_decomposition_covers_throughput(planner):
+    plan = planner.plan_cost_min(SRC, DST, 25.0, 50.0)
+    total = sum(f for _, f in plan.paths())
+    assert total == pytest.approx(plan.throughput, rel=1e-3)

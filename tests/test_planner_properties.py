@@ -1,0 +1,90 @@
+"""Hypothesis property tests on the planner's invariants."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Planner, toy_topology
+from repro.core.solver.bnb import solve_milp
+
+_SETTINGS = dict(
+    max_examples=15,
+    deadline=None,
+    derandomize=True,  # deterministic CI; bump max_examples to explore
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(4, 7),
+    frac=st.floats(0.1, 0.9),
+)
+@settings(**_SETTINGS)
+def test_any_feasible_plan_satisfies_all_constraints(seed, n, frac):
+    """Whatever topology we throw at it, a returned plan is 4b-4j feasible
+    and achieves ~the goal (paper's <=1% round-down gap)."""
+    top = toy_topology(n=n, seed=seed)
+    planner = Planner(top)
+    src, dst = top.keys()[0], top.keys()[1]
+    hi = planner.max_throughput(src, dst)
+    if hi <= 0.1:
+        return
+    goal = max(hi * frac, 1e-3)
+    plan = planner.plan_cost_min(src, dst, goal, volume_gb=1.0)
+    if plan.solver_status != "optimal":
+        return
+    assert plan.validate() == []
+    assert plan.throughput >= min(goal, plan.tput_goal) * 0.999
+    # integerization shortfall scales with connection granularity: flooring
+    # M can cost ~1/limit_conn of each endpoint's capacity (toy topologies
+    # use limit_conn=8 -> up to ~25%; at the paper's 64 this is the <=1%-
+    # class gap of §5.1.3, checked separately in test_solver.py)
+    assert plan.tput_goal >= goal * (1.0 - 3.0 / top.limit_conn)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_running_cost_monotone_in_throughput_goal(seed):
+    """The LP optimum ($/s while the transfer runs, Eq. 4a unscaled) is
+    non-decreasing in the throughput floor: raising the floor only shrinks
+    the feasible region. (Note: $/GB is NOT monotone — fixed VM cost
+    amortizes worse at low rates — which hypothesis duly discovered when an
+    earlier version of this test asserted it.)"""
+    top = toy_topology(n=5, seed=seed)
+    src, dst = 0, 1
+    planner = Planner(top)
+    hi = planner.max_throughput(top.keys()[0], top.keys()[1])
+    if hi <= 0.2:
+        return
+    lo = solve_milp(top, src, dst, hi * 0.3, mode="relaxed")
+    hi_ = solve_milp(top, src, dst, hi * 0.8, mode="relaxed")
+    if lo.ok and hi_.ok:
+        # 5% slack for the integer round-down on each side
+        assert lo.objective <= hi_.objective * 1.05 + 1e-9
+
+
+@given(seed=st.integers(0, 10_000), budget=st.floats(1.0, 16.0))
+@settings(**_SETTINGS)
+def test_more_vms_never_reduce_max_flow(seed, budget):
+    top_small = toy_topology(n=5, seed=seed, limit_vm=2)
+    top_big = toy_topology(n=5, seed=seed, limit_vm=4)
+    p_small = Planner(top_small)
+    p_big = Planner(top_big)
+    src, dst = top_small.keys()[0], top_small.keys()[1]
+    assert p_big.max_throughput(src, dst) >= p_small.max_throughput(src, dst) - 1e-6
+
+
+@given(data=st.data())
+@settings(**_SETTINGS)
+def test_exact_never_worse_than_rounding(data):
+    seed = data.draw(st.integers(0, 500))
+    top = toy_topology(n=5, seed=seed)
+    planner = Planner(top)
+    hi = planner.max_throughput(top.keys()[0], top.keys()[1])
+    if hi <= 0.2:
+        return
+    goal = hi * data.draw(st.floats(0.2, 0.8))
+    rel = solve_milp(top, 0, 1, goal, mode="relaxed")
+    ex = solve_milp(top, 0, 1, goal, mode="exact")
+    if rel.ok and ex.ok:
+        assert ex.objective <= rel.objective + 1e-9

@@ -1,0 +1,61 @@
+"""Sharding-rule resolution and elastic rescale planning."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core import default_topology
+from repro.launch.elastic import plan_reshard
+from repro.sharding.specs import ShardingRules, logical_to_physical
+
+
+class _FakeMesh:
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+def test_nondivisible_dims_fall_back_to_replication():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(batch=("data",), fsdp="data", tp="model")
+    # 28 heads don't divide 16 -> replicated; 1184-wide ff does -> sharded
+    spec = logical_to_physical(rules, ("fsdp", "tp", None), (3584, 28, 128), mesh)
+    assert spec[0] == "data" and spec[1] is None
+    spec = logical_to_physical(rules, ("fsdp", "tp"), (3584, 18944), mesh)
+    assert spec[1] == "model"
+
+
+def test_axis_never_used_twice():
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    rules = ShardingRules(batch=("data",), fsdp="data", tp="model")
+    spec = logical_to_physical(rules, ("fsdp", "fsdp"), (64, 64), mesh)
+    assert spec[0] == "data" and spec[1] is None
+
+
+def test_rules_filter_for_single_pod_mesh():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = ShardingRules(batch=("pod", "data"), fsdp="data", tp="model")
+    f = rules.filter_for_mesh(mesh)
+    assert f.batch == ("data",) or f.batch == "data"
+
+
+def test_reshard_plan_prices_pod_join():
+    cfg = reduced(get_arch("qwen2-7b"))
+    top = default_topology()
+    old = ["aws:us-west-2", "gcp:us-central1"]
+    new = old + ["azure:westeurope"]
+    plan = plan_reshard(cfg, top, old, new, tput_floor_gbps=5.0)
+    assert plan.new_pods == 3 and len(plan.moves) == 1
+    src, dst, gb, tput, cost = plan.moves[0]
+    assert dst == "azure:westeurope" and src in old
+    assert gb == pytest.approx(cfg.param_count() * 12 / 1e9, rel=1e-6)
+    assert cost > 0 and tput > 0
+
+
+def test_reshard_noop_on_shrink():
+    cfg = reduced(get_arch("smollm-135m"))
+    top = default_topology()
+    old = ["aws:us-west-2", "gcp:us-central1"]
+    plan = plan_reshard(cfg, top, old, old[:1])
+    assert plan.moves == [] and plan.total_cost == 0.0

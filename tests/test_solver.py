@@ -1,0 +1,75 @@
+"""IPM LP solver + branch & bound vs. oracles (scipy HiGHS is test-only)."""
+
+import numpy as np
+import pytest
+
+from repro.core import milp, toy_topology
+from repro.core.solver.bnb import solve_milp
+from repro.core.solver.ipm import solve_lp
+
+scipy_opt = pytest.importorskip("scipy.optimize")
+
+
+def _random_lp(rng, n=18, m_ub=10, m_eq=3):
+    """Random bounded-feasible LP: min c@x, A_ub x <= b_ub, A_eq x = b_eq."""
+    x0 = rng.uniform(0.5, 2.0, n)  # interior feasible point
+    A_ub = rng.normal(size=(m_ub, n))
+    b_ub = A_ub @ x0 + rng.uniform(0.5, 2.0, m_ub)
+    A_eq = rng.normal(size=(m_eq, n))
+    b_eq = A_eq @ x0
+    c = rng.uniform(0.1, 2.0, n)  # positive costs => bounded below on x>=0
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_ipm_matches_highs_random(seed):
+    rng = np.random.default_rng(seed)
+    c, A_ub, b_ub, A_eq, b_eq = _random_lp(rng)
+    mine = solve_lp(c, A_ub, b_ub, A_eq, b_eq)
+    ref = scipy_opt.linprog(
+        c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq, bounds=(0, None),
+        method="highs",
+    )
+    assert mine.ok == ref.success
+    if ref.success:
+        assert mine.fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-8)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ipm_matches_highs_on_skyplane_lp(seed):
+    top = toy_topology(n=6, seed=seed)
+    lp = milp.build_lp(top, 0, 1, 3.0)
+    mine = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    ref = scipy_opt.linprog(
+        lp.c, A_ub=lp.A_ub, b_ub=lp.b_ub, A_eq=lp.A_eq, b_eq=lp.b_eq,
+        bounds=(0, None), method="highs",
+    )
+    assert mine.ok and ref.success
+    assert mine.fun == pytest.approx(ref.fun, rel=1e-5)
+
+
+def test_ipm_detects_infeasible():
+    # x >= 0 with x1 + x2 <= -1 is infeasible
+    c = np.ones(2)
+    A_ub = np.array([[1.0, 1.0]])
+    b_ub = np.array([-1.0])
+    res = solve_lp(c, A_ub, b_ub, np.zeros((0, 2)), np.zeros(0))
+    assert not res.ok
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_round_down_within_one_percent_of_exact(seed):
+    """Paper §5.1.3: relaxation+rounding is <=1% from the exact MILP."""
+    top = toy_topology(n=6, seed=seed)
+    rel = solve_milp(top, 0, 1, 3.0, mode="relaxed")
+    ex = solve_milp(top, 0, 1, 3.0, mode="exact")
+    assert rel.ok and ex.ok
+    assert rel.objective <= ex.objective * 1.01 + 1e-9
+    # exact is a true lower bound above the LP relaxation
+    assert ex.objective >= ex.lp_objective - 1e-9
+
+
+def test_milp_reports_infeasible_goal():
+    top = toy_topology(n=5, seed=1)
+    res = solve_milp(top, 0, 1, 1e6, mode="relaxed")  # absurd goal
+    assert not res.ok
