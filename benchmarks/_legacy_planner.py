@@ -1,0 +1,258 @@
+"""Frozen pre-optimization planner pipeline — benchmark baseline only.
+
+This is the solve path as it existed before the structure-cached assembly,
+exact presolve and batched round-down: every LP rebuilt by the row-loop
+``milp.build_lp_reference`` and solved sequentially at full size. It exists
+so ``solver_bench`` can measure the fast path's speedup against the real
+pre-PR behaviour on the same machine, with identical plan costs asserted.
+Do not import from production code.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import milp
+from repro.core.solver.bnb import MILPResult, _topup_connections
+from repro.core.solver.ipm import IPMResult, _max_step, _ruiz_equilibrate
+
+_INT_TOL = 1e-6
+_EPS = 1e-11
+
+
+# --------------------------------------------------------- pre-PR IPM, frozen
+# (normal matrix rebuilt and re-factorized for the predictor AND corrector,
+# dense slack columns carried through the A D A^T matmul)
+def _solve_normal(AD, A, rhs, reg0: float):
+    m = A.shape[0]
+    M = AD @ A.T
+    tr = max(np.trace(M) / max(m, 1), 1.0)
+    reg = reg0
+    for _ in range(6):
+        try:
+            L = np.linalg.cholesky(M + reg * tr * np.eye(m))
+            return np.linalg.solve(L.T, np.linalg.solve(L, rhs))
+        except np.linalg.LinAlgError:
+            reg *= 100.0
+    return np.linalg.lstsq(M + reg * tr * np.eye(m), rhs, rcond=None)[0]
+
+
+def _solve_standard_form_legacy(A, b, c, *, tol=1e-9, max_iter=100):
+    A = np.asarray(A, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    m, n = A.shape
+    if m == 0:
+        return np.zeros(n), "optimal", 0, 0.0, 0.0, 0.0
+    As, rsc, csc = _ruiz_equilibrate(A)
+    bs = b / rsc
+    cs = c / csc
+    bnorm = 1.0 + np.linalg.norm(bs)
+    cnorm = 1.0 + np.linalg.norm(cs)
+    AAt = As @ As.T
+    tr = max(np.trace(AAt) / m, 1.0)
+    AAt_reg = AAt + 1e-10 * tr * np.eye(m)
+    try:
+        x0 = As.T @ np.linalg.solve(AAt_reg, bs)
+        y = np.linalg.solve(AAt_reg, As @ cs)
+    except np.linalg.LinAlgError:
+        x0 = As.T @ np.linalg.lstsq(AAt_reg, bs, rcond=None)[0]
+        y = np.linalg.lstsq(AAt_reg, As @ cs, rcond=None)[0]
+    s0 = cs - As.T @ y
+    dx = max(-1.5 * x0.min(initial=0.0), 0.0)
+    ds = max(-1.5 * s0.min(initial=0.0), 0.0)
+    x = x0 + dx
+    s = s0 + ds
+    xs = float(x @ s)
+    if xs <= 0:
+        x = np.ones(n)
+        s = np.ones(n)
+        xs = float(n)
+    x = x + 0.5 * xs / max(s.sum(), _EPS)
+    s = s + 0.5 * xs / max(x.sum(), _EPS)
+    x = np.maximum(x, 1e-4)
+    s = np.maximum(s, 1e-4)
+    status = "max_iter"
+    it = 0
+    best_pres = np.inf
+    stall = 0
+    for it in range(1, max_iter + 1):
+        rb = As @ x - bs
+        rc = As.T @ y + s - cs
+        mu = float(x @ s) / n
+        pres = np.linalg.norm(rb) / bnorm
+        dres = np.linalg.norm(rc) / cnorm
+        gap = n * mu / (1.0 + abs(float(cs @ x)))
+        if pres < tol and dres < tol and gap < tol:
+            status = "optimal"
+            break
+        if pres < best_pres * 0.9:
+            best_pres = pres
+            stall = 0
+        else:
+            stall += 1
+            if stall >= 12 and pres > 1e-6:
+                status = "infeasible"
+                break
+        d = x / s
+        AD = As * d[None, :]
+        r_xs = x * s
+        rhs = -rb - As @ (d * rc - r_xs / s)
+        dy_aff = _solve_normal(AD, As, rhs, 1e-12)
+        dx_aff = d * (As.T @ dy_aff + rc) - r_xs / s
+        ds_aff = -(r_xs + s * dx_aff) / x
+        a_pri = _max_step(x, dx_aff)
+        a_dua = _max_step(s, ds_aff)
+        mu_aff = float((x + a_pri * dx_aff) @ (s + a_dua * ds_aff)) / n
+        sigma = float(np.clip((mu_aff / max(mu, _EPS)) ** 3, 0.0, 1.0))
+        r_xs = x * s + dx_aff * ds_aff - sigma * mu
+        rhs = -rb - As @ (d * rc - r_xs / s)
+        dy = _solve_normal(AD, As, rhs, 1e-12)
+        dx = d * (As.T @ dy + rc) - r_xs / s
+        dsv = -(r_xs + s * dx) / x
+        eta = min(0.999, 0.9 + 0.09 * it / max_iter)
+        a_pri = eta * _max_step(x, dx)
+        a_dua = eta * _max_step(s, dsv)
+        x = x + a_pri * dx
+        y = y + a_dua * dy
+        s = s + a_dua * dsv
+        x = np.maximum(x, _EPS)
+        s = np.maximum(s, _EPS)
+    rb = As @ x - bs
+    rc = As.T @ y + s - cs
+    mu = float(x @ s) / n
+    pres = float(np.linalg.norm(rb) / bnorm)
+    dres = float(np.linalg.norm(rc) / cnorm)
+    gap = float(n * mu / (1.0 + abs(float(cs @ x))))
+    if status != "optimal":
+        if pres < 1e-7 and dres < 1e-7 and gap < 1e-7:
+            status = "optimal"
+        elif pres > 1e-4:
+            status = "infeasible"
+    return x / csc, status, it, gap, pres, dres
+
+
+def solve_lp(c, A_ub, b_ub, A_eq, b_eq, *, tol=1e-9, max_iter=100) -> IPMResult:
+    c = np.asarray(c, dtype=np.float64)
+    n = c.shape[0]
+    m_ub = A_ub.shape[0] if A_ub is not None and A_ub.size else 0
+    m_eq = A_eq.shape[0] if A_eq is not None and A_eq.size else 0
+    A = np.zeros((m_ub + m_eq, n + m_ub))
+    b = np.zeros(m_ub + m_eq)
+    if m_ub:
+        A[:m_ub, :n] = A_ub
+        A[:m_ub, n:] = np.eye(m_ub)
+        b[:m_ub] = b_ub
+    if m_eq:
+        A[m_ub:, :n] = A_eq
+        b[m_ub:] = b_eq
+    c_std = np.concatenate([c, np.zeros(m_ub)])
+    x, status, it, gap, pres, dres = _solve_standard_form_legacy(
+        A, b, c_std, tol=tol, max_iter=max_iter
+    )
+    return IPMResult(
+        x=x[:n], fun=float(c @ x[:n]), status=status, iterations=it,
+        gap=gap, primal_residual=pres, dual_residual=dres,
+    )
+
+
+def _outflow_objective(lp: milp.LPData) -> np.ndarray:
+    c = np.zeros_like(lp.c)
+    for k, (u, w) in enumerate(lp.edges):
+        if u == lp.src:
+            c[k] = -1.0
+    return c
+
+
+def _max_flow(top, src, dst, *, fixed_n=None, fixed_m=None) -> float:
+    lp = milp.build_lp_reference(top, src, dst, 0.0, fixed_n=fixed_n,
+                                 fixed_m=fixed_m)
+    if lp.trivially_infeasible:
+        return 0.0
+    res = solve_lp(_outflow_objective(lp), lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not res.ok:
+        return 0.0
+    return max(float(-(_outflow_objective(lp) @ res.x)), 0.0)
+
+
+def _integerize(top, src, dst, tput_goal, n_int):
+    goal_n = min(tput_goal,
+                 _max_flow(top, src, dst, fixed_n=n_int) * (1.0 - 1e-9))
+    if goal_n <= 0:
+        return None
+    lp = milp.build_lp_reference(top, src, dst, goal_n, fixed_n=n_int)
+    res = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not res.ok:
+        return None
+    _, _, M_frac = lp.split(res.x)
+    M_int = np.floor(M_frac + _INT_TOL)
+    _topup_connections(top, M_frac, M_int, n_int)
+    maxflow = _max_flow(top, src, dst, fixed_n=n_int, fixed_m=M_int)
+    achieved = min(goal_n, maxflow * (1.0 - 1e-9))
+    if achieved <= 0:
+        return None
+    lp2 = milp.build_lp_reference(top, src, dst, achieved, fixed_n=n_int,
+                                  fixed_m=M_int)
+    res2 = solve_lp(lp2.c, lp2.A_ub, lp2.b_ub, lp2.A_eq, lp2.b_eq)
+    if not res2.ok:
+        return None
+    F, _, _ = lp2.split(res2.x)
+    obj = float((F * top.price_egress).sum() / 8.0 + n_int @ top.price_vm)
+    return F, M_int, achieved, obj
+
+
+def _feasible_with_n(top, src, dst, tput_goal, n_int) -> bool:
+    return _max_flow(top, src, dst, fixed_n=n_int) >= tput_goal * (1.0 - 1e-6)
+
+
+def _feasibility_repair(top, src, dst, tput_goal, n_frac):
+    n_floor = np.floor(n_frac + _INT_TOL)
+    candidates = np.argsort(-(n_frac - n_floor))
+    n_try = n_floor.copy()
+    if _feasible_with_n(top, src, dst, tput_goal, n_try):
+        return n_try
+    for r in candidates:
+        n_try = n_try.copy()
+        n_try[r] = min(n_try[r] + 1, top.limit_vm)
+        if _feasible_with_n(top, src, dst, tput_goal, n_try):
+            return n_try
+    n_ceil = np.minimum(np.ceil(n_frac - _INT_TOL), top.limit_vm)
+    if _feasible_with_n(top, src, dst, tput_goal, n_ceil):
+        return n_ceil
+    return None
+
+
+def solve_milp_legacy(top, src, dst, tput_goal) -> MILPResult | None:
+    """Pre-PR relaxed round-down: full-size sequential solves throughout."""
+    lp = milp.build_lp_reference(top, src, dst, tput_goal)
+    root = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not root.ok:
+        return None
+    _, n_frac, _ = lp.split(root.x)
+    n_int = _feasibility_repair(top, src, dst, tput_goal, n_frac)
+    if n_int is None:
+        return None
+    fit = _integerize(top, src, dst, tput_goal, n_int)
+    if fit is None:
+        return None
+    F, M, achieved, obj = fit
+    return MILPResult(
+        F=F, N=n_int.astype(np.int64), M=M.astype(np.int64),
+        objective=obj, status="optimal", lp_objective=root.fun,
+        achieved_tput=achieved,
+    )
+
+
+def pareto_frontier_legacy(planner, src, dst, volume_gb, *, n_samples):
+    """Pre-PR §5.2 sweep: one sequential round-down per goal."""
+    sub, s, t, keep = planner._prune(src, dst)
+    hi = planner.max_throughput(src, dst)
+    goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
+    out = []
+    for g in goals:
+        res = solve_milp_legacy(sub, s, t, float(g))
+        if res is None:
+            continue
+        plan = planner._lift(sub, keep, src, dst, float(g), volume_gb, res)
+        out.append((float(g), plan.cost_per_gb, plan))
+    return out

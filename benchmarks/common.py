@@ -16,8 +16,14 @@ if str(SRC) not in sys.path:
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
+# every emit() is also recorded here so run.py --json can snapshot a run
+RESULTS: list[dict] = []
+
 
 def emit(name: str, us_per_call: float, derived) -> None:
+    RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

@@ -1,0 +1,56 @@
+"""Data-plane simulator throughput: the vectorized event loop vs the
+object-per-connection reference on the Fig. 6 workload.
+
+The acceptance bar for the planner-hot-path PR: >=5x events/s at identical
+delivered-chunk counts (fixed seed). The headroom is what lets Fig. 6/7/8
+benchmarks run at 10x the chunk counts."""
+
+from __future__ import annotations
+
+import time
+
+from .common import FAST, emit
+
+
+def run():
+    from repro.core import Planner, default_topology, direct_plan
+    from repro.transfer import simulate_transfer, simulate_transfer_reference
+
+    top = default_topology()
+    planner = Planner(top)
+    # Fig. 6 panel 1 route and planning setup
+    src, dst = "aws:us-east-1", "aws:ap-southeast-2"
+    volume = 8.0 if FAST else 32.0
+    chunk = 32.0
+    dp = direct_plan(top, src, dst, volume)
+    plan = planner.plan_tput_max(
+        src, dst, cost_ceiling_per_gb=dp.cost_per_gb * 1.15,
+        volume_gb=volume, n_samples=8, backend="jax",
+    )
+
+    t0 = time.time()
+    new = simulate_transfer(plan, chunk_mb=chunk, seed=0)
+    t_new = time.time() - t0
+    t0 = time.time()
+    ref = simulate_transfer_reference(plan, chunk_mb=chunk, seed=0)
+    t_ref = time.time() - t0
+
+    ev_s_new = new.events / max(t_new, 1e-9)
+    ev_s_ref = ref.events / max(t_ref, 1e-9)
+    speedup = ev_s_new / ev_s_ref
+    emit("flowsim/fig6_chunks", t_new * 1e6, new.chunks_delivered)
+    emit("flowsim/fig6_events_per_s_vectorized", t_new * 1e6, round(ev_s_new))
+    emit("flowsim/fig6_events_per_s_reference", t_ref * 1e6, round(ev_s_ref))
+    emit("flowsim/fig6_events_per_s_speedup", t_new * 1e6, round(speedup, 1))
+    assert new.chunks_delivered == ref.chunks_delivered, (
+        new.chunks_delivered, ref.chunks_delivered)
+    assert speedup >= 5.0, f"flowsim events/s speedup {speedup:.1f}x < 5x"
+
+    # headroom demonstration: 10x the chunk count, vectorized path only
+    t0 = time.time()
+    big = simulate_transfer(plan, chunk_mb=chunk / 10.0, seed=0)
+    t_big = time.time() - t0
+    emit("flowsim/fig6_10x_chunks", t_big * 1e6, big.chunks_delivered)
+    emit("flowsim/fig6_10x_chunks_wall_s", t_big * 1e6, round(t_big, 2))
+    emit("flowsim/fig6_10x_events_per_s", t_big * 1e6,
+         round(big.events / max(t_big, 1e-9)))

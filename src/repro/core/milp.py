@@ -27,6 +27,23 @@ by N_v and incoming by N_u — a typesetting slip (the text of §5.1.2 says "the
 maximum number of egress TCP connections per region [scales] by the number of
 VMs provisioned in each region"). We implement the semantically consistent
 version above.
+
+Assembly is split in two layers so the planner's hot path (thousands of
+solves per (src, dst) pair — round-down refits, B&B nodes, Pareto sweeps)
+never re-runs the O(rows * cols) construction:
+
+  * ``LPStructure`` — built once per (topology, src, dst) by vectorized
+    scatter-index assembly, cached on the Topology instance.  Holds the full
+    A_ub/A_eq/c plus precomputed "pin patterns" (column partitions + reduced
+    matrices) for the fixed-N and fixed-N+M refits of §5.1.3.
+  * ``LPStructure.lp(...)`` — O(rows) derivation of a concrete ``LPData``
+    for a given (tput_goal, fixed_n, fixed_m, extra_ub): copies b, shifts the
+    RHS by the pinned values, and reuses the cached reduced matrices.
+
+``build_lp`` keeps the original one-shot signature on top of the cache, and
+``build_lp_reference`` keeps the original pure-Python row-loop assembly as
+the oracle for equivalence tests and as the pre-optimization benchmark
+baseline.
 """
 
 from __future__ import annotations
@@ -36,6 +53,9 @@ import dataclasses
 import numpy as np
 
 from .topology import GBIT_PER_GB, Topology
+
+_ZERO_ROW_TOL = 1e-12
+_RHS_TOL = 1e-9
 
 
 @dataclasses.dataclass
@@ -77,13 +97,315 @@ class LPData:
         """solver x -> (F [V,V], N [V], M [V,V])."""
         x = self._full_x(np.asarray(x, dtype=float))
         e, v = self.n_edges, self.num_regions
+        eu, ew = _edge_arrays(self.edges)
         F = np.zeros((v, v))
         M = np.zeros((v, v))
-        for k, (u, w) in enumerate(self.edges):
-            F[u, w] = x[k]
-            M[u, w] = x[e + v + k]
+        F[eu, ew] = x[:e]
+        M[eu, ew] = x[e + v :]
         N = np.asarray(x[e : e + v], dtype=float).copy()
         return F, N, M
+
+
+def _edge_arrays(edges: list[tuple[int, int]]) -> tuple[np.ndarray, np.ndarray]:
+    arr = np.asarray(edges, dtype=np.int64).reshape(len(edges), 2)
+    return arr[:, 0], arr[:, 1]
+
+
+@dataclasses.dataclass
+class PinPattern:
+    """Column partition + reduced matrices for one (pin_n, pin_m) choice.
+
+    Rows of A_ub whose free part is structurally zero are dropped from
+    ``A_ub_free``; their RHS (after the pinned shift) is only checked for
+    trivial infeasibility. Which rows those are depends solely on the edge
+    structure, so the masks are precomputed here.
+    """
+
+    pinned: np.ndarray  # [nx] bool
+    A_ub_free: np.ndarray  # [m_keep, n_free]
+    A_ub_pin: np.ndarray  # [m_ub, n_pin] (all rows, for RHS shifts)
+    keep_ub: np.ndarray  # [m_ub] bool
+    drop_ub: np.ndarray  # [m_ub] bool
+    A_eq_free: np.ndarray  # [m_eq_keep, n_free]
+    keep_eq: np.ndarray
+    drop_eq: np.ndarray
+    c_free: np.ndarray
+    integer_mask_free: np.ndarray
+    row_4c: int  # goal rows remapped into kept-row space (-1 if dropped)
+    row_4d: int
+
+    @property
+    def n_free(self) -> int:
+        return self.A_ub_free.shape[1]
+
+
+class LPStructure:
+    """Vectorized, cached assembly of Eq. 4a-4j for one (top, src, dst)."""
+
+    def __init__(self, top: Topology, src: int, dst: int):
+        self.top = top
+        self.src = src
+        self.dst = dst
+        self.edges = top.edge_list(src, dst)
+        self.eu, self.ew = _edge_arrays(self.edges)
+        e, v = len(self.edges), top.num_regions
+        self.n_edges = e
+        self.num_regions = v
+        nx = 2 * e + v
+        self.nx = nx
+        self.row_4c = e
+        self.row_4d = e + 1
+        ar = np.arange(e)
+
+        # ---- objective (Eq. 4a without the constant factor)
+        c = np.zeros(nx)
+        c[:e] = top.price_egress[self.eu, self.ew] / GBIT_PER_GB
+        c[e : e + v] = top.price_vm
+        self.c = c
+
+        # ---- A_ub, rows in the fixed order 4b | 4c | 4d | 4f | 4g | 4h | 4i | 4j
+        m_ub = e + 2 + 5 * v
+        A = np.zeros((m_ub, nx))
+        b0 = np.zeros(m_ub)
+        # 4b
+        A[ar, ar] = 1.0
+        A[ar, e + v + ar] = -top.tput[self.eu, self.ew] / top.limit_conn
+        # 4c / 4d (b filled per-goal in lp())
+        A[e, ar[self.eu == src]] = -1.0
+        A[e + 1, ar[self.ew == dst]] = -1.0
+        # 4f / 4g
+        A[e + 2 + self.ew, ar] = 1.0
+        A[e + 2 + np.arange(v), e + np.arange(v)] = -top.limit_ingress
+        A[e + 2 + v + self.eu, ar] = 1.0
+        A[e + 2 + v + np.arange(v), e + np.arange(v)] = -top.limit_egress
+        # 4h / 4i
+        A[e + 2 + 2 * v + self.eu, e + v + ar] = 1.0
+        A[e + 2 + 2 * v + np.arange(v), e + np.arange(v)] = -float(top.limit_conn)
+        A[e + 2 + 3 * v + self.ew, e + v + ar] = 1.0
+        A[e + 2 + 3 * v + np.arange(v), e + np.arange(v)] = -float(top.limit_conn)
+        # 4j
+        A[e + 2 + 4 * v + np.arange(v), e + np.arange(v)] = 1.0
+        b0[e + 2 + 4 * v :] = float(top.limit_vm)
+        self.A_ub = A
+        self.b_ub0 = b0
+
+        # ---- A_eq: flow conservation at touched relays (ascending region id)
+        full = np.zeros((v, nx))
+        np.add.at(full, (self.ew, ar), 1.0)
+        np.add.at(full, (self.eu, ar), -1.0)
+        touched = np.zeros(v, dtype=bool)
+        touched[self.eu] = True
+        touched[self.ew] = True
+        relay = touched.copy()
+        relay[[src, dst]] = False
+        self.A_eq = full[relay] if relay.any() else np.zeros((0, nx))
+        self.b_eq = np.zeros(self.A_eq.shape[0])
+
+        self.integer_mask = np.zeros(nx, dtype=bool)
+        self.integer_mask[e:] = True  # N and M
+
+        self._pin_patterns: dict[tuple[bool, bool], PinPattern] = {}
+        self._reduced_cache: dict = {}
+
+    # ------------------------------------------------------------ pin patterns
+    def pin_pattern(self, pin_n: bool, pin_m: bool) -> PinPattern:
+        key = (pin_n, pin_m)
+        pat = self._pin_patterns.get(key)
+        if pat is not None:
+            return pat
+        e, v = self.n_edges, self.num_regions
+        pinned = np.zeros(self.nx, dtype=bool)
+        if pin_n:
+            pinned[e : e + v] = True
+        if pin_m:
+            pinned[e + v :] = True
+        free = ~pinned
+        A_ub_free = self.A_ub[:, free]
+        A_eq_free = self.A_eq[:, free]
+        drop_ub = (
+            np.abs(A_ub_free).max(axis=1, initial=0.0) < _ZERO_ROW_TOL
+            if pinned.any()
+            else np.zeros(self.A_ub.shape[0], dtype=bool)
+        )
+        drop_eq = (
+            np.abs(A_eq_free).max(axis=1, initial=0.0) < _ZERO_ROW_TOL
+            if (pinned.any() and self.A_eq.size)
+            else np.zeros(self.A_eq.shape[0], dtype=bool)
+        )
+        keep_ub = ~drop_ub
+        keep_eq = ~drop_eq
+        newpos = np.cumsum(keep_ub) - 1
+        pat = PinPattern(
+            pinned=pinned,
+            A_ub_free=np.ascontiguousarray(A_ub_free[keep_ub]),
+            A_ub_pin=np.ascontiguousarray(self.A_ub[:, pinned]),
+            keep_ub=keep_ub,
+            drop_ub=drop_ub,
+            A_eq_free=np.ascontiguousarray(A_eq_free[keep_eq]),
+            keep_eq=keep_eq,
+            drop_eq=drop_eq,
+            c_free=self.c[free],
+            integer_mask_free=self.integer_mask[free],
+            row_4c=int(newpos[self.row_4c]) if keep_ub[self.row_4c] else -1,
+            row_4d=int(newpos[self.row_4d]) if keep_ub[self.row_4d] else -1,
+        )
+        self._pin_patterns[key] = pat
+        return pat
+
+    def pin_values(
+        self, fixed_n: np.ndarray | None, fixed_m: np.ndarray | None
+    ) -> np.ndarray:
+        """Full-space fixed-value vector (nan where free)."""
+        e, v = self.n_edges, self.num_regions
+        fv = np.full(self.nx, np.nan)
+        if fixed_n is not None:
+            fv[e : e + v] = np.asarray(fixed_n, dtype=float)
+        if fixed_m is not None:
+            fm = np.asarray(fixed_m, dtype=float)
+            fv[e + v :] = fm[self.eu, self.ew]
+        return fv
+
+    def outflow_c(self, pat: PinPattern | None = None) -> np.ndarray:
+        """c with min c@x == max source outflow (F columns lead and are never
+        pinned, so the same vector works for any pin pattern)."""
+        n = pat.n_free if pat is not None else self.nx
+        c = np.zeros(n)
+        c[np.flatnonzero(self.eu == self.src)] = -1.0
+        return c
+
+    # ----------------------------------------------------------- exact presolve
+    def reduced(
+        self,
+        region_support: np.ndarray,
+        edge_mask: np.ndarray | None = None,
+    ) -> tuple["LPStructure", np.ndarray] | None:
+        """Exact presolve for pinned solves: the sub-structure over supported
+        regions (N_v > 0) and, optionally, supported edges (M_e > 0).
+
+        With N_v = 0 pinned, 4f/4g force all flow through v to zero and 4h/4i
+        force its connections to zero; with M_e = 0 pinned, 4b forces F_e = 0.
+        Dropping those variables (and the rows that become empty) is lossless:
+        the reduced LP's optimum extends by zeros to the full LP's optimum.
+        Round-down refits typically keep 2-4 of 12 regions, shrinking the LP
+        ~100x. Returns (sub-structure, kept region indices) — cached per
+        (support, edge-mask) — or None when src/dst lost support or no edge
+        survived (max-flow 0 / infeasible at any positive goal).
+        """
+        region_support = np.asarray(region_support, dtype=bool)
+        if not (region_support[self.src] and region_support[self.dst]):
+            return None
+        key = (
+            region_support.tobytes(),
+            None if edge_mask is None else np.asarray(edge_mask, bool).tobytes(),
+        )
+        hit = self._reduced_cache.get(key)
+        if hit is not None:
+            return hit if hit != "empty" else None
+        keep = np.flatnonzero(region_support)
+        rtop = self.top.subgraph([int(i) for i in keep])
+        if edge_mask is not None:
+            rtop.tput = rtop.tput * np.asarray(edge_mask, bool)[np.ix_(keep, keep)]
+        rs = int(np.searchsorted(keep, self.src))
+        rt = int(np.searchsorted(keep, self.dst))
+        rstruct = LPStructure(rtop, rs, rt)
+        if rstruct.n_edges == 0:
+            self._reduced_cache[key] = "empty"
+            return None
+        out = (rstruct, keep)
+        self._reduced_cache[key] = out
+        return out
+
+    # --------------------------------------------------------------- batch RHS
+    def batch_b_ub(
+        self,
+        pat: PinPattern,
+        goals: np.ndarray,
+        pin_values: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """RHS vectors for a batch of (tput_goal, pinned-value) variants.
+
+        pin_values: [B, n_pin] values of the pinned variables per sample.
+        Returns (b_keep [B, m_keep], trivially_infeasible [B]).
+        """
+        goals = np.asarray(goals, dtype=float)
+        b = np.tile(self.b_ub0[None, :], (len(goals), 1))
+        b[:, self.row_4c] = -goals
+        b[:, self.row_4d] = -goals
+        if pat.pinned.any():
+            b -= np.asarray(pin_values, dtype=float) @ pat.A_ub_pin.T
+        trivial = (
+            (b[:, pat.drop_ub] < -_RHS_TOL).any(axis=1)
+            if pat.drop_ub.any()
+            else np.zeros(len(goals), dtype=bool)
+        )
+        return b[:, pat.keep_ub], trivial
+
+    # ---------------------------------------------------------------- LP build
+    def lp(
+        self,
+        tput_goal: float,
+        *,
+        fixed_n: np.ndarray | None = None,
+        fixed_m: np.ndarray | None = None,
+        extra_ub: list[tuple[np.ndarray, float]] | None = None,
+    ) -> LPData:
+        e, v = self.n_edges, self.num_regions
+        b_ub = self.b_ub0.copy()
+        b_ub[self.row_4c] = -tput_goal
+        b_ub[self.row_4d] = -tput_goal
+
+        if fixed_n is None and fixed_m is None:
+            A_ub, A_eq, b_eq = self.A_ub, self.A_eq, self.b_eq
+            if extra_ub:
+                A_ub = np.vstack([A_ub] + [np.asarray(r, dtype=float)[None, :]
+                                           for r, _ in extra_ub])
+                b_ub = np.concatenate([b_ub, [float(b) for _, b in extra_ub]])
+            return LPData(
+                c=self.c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq.copy(),
+                integer_mask=self.integer_mask, edges=self.edges,
+                num_regions=v, src=self.src, dst=self.dst,
+                tput_goal=tput_goal, row_4c=self.row_4c, row_4d=self.row_4d,
+            )
+
+        pat = self.pin_pattern(fixed_n is not None, fixed_m is not None)
+        fv = self.pin_values(fixed_n, fixed_m)
+        xpin = fv[pat.pinned]
+        b_full = b_ub - pat.A_ub_pin @ xpin
+        trivial = bool((b_full[pat.drop_ub] < -_RHS_TOL).any())
+        A_ub_out = pat.A_ub_free
+        b_ub_out = b_full[pat.keep_ub]
+        if extra_ub:
+            # extra rows (B&B cuts) go through the same elimination
+            ex_rows = np.stack([np.asarray(r, dtype=float) for r, _ in extra_ub])
+            ex_b = np.array([float(b) for _, b in extra_ub])
+            ex_b = ex_b - ex_rows[:, pat.pinned] @ xpin
+            ex_free = ex_rows[:, ~pat.pinned]
+            ex_zero = np.abs(ex_free).max(axis=1, initial=0.0) < _ZERO_ROW_TOL
+            if (ex_b[ex_zero] < -_RHS_TOL).any():
+                trivial = True
+            A_ub_out = np.vstack([A_ub_out, ex_free[~ex_zero]])
+            b_ub_out = np.concatenate([b_ub_out, ex_b[~ex_zero]])
+        # eq rows only touch F (never pinned): RHS shift is structurally zero
+        return LPData(
+            c=pat.c_free, A_ub=A_ub_out, b_ub=b_ub_out,
+            A_eq=pat.A_eq_free, b_eq=self.b_eq[pat.keep_eq].copy(),
+            integer_mask=pat.integer_mask_free, edges=self.edges,
+            num_regions=v, src=self.src, dst=self.dst, tput_goal=tput_goal,
+            row_4c=self.row_4c, row_4d=self.row_4d,
+            fixed_values=fv, trivially_infeasible=trivial,
+        )
+
+
+def structure(top: Topology, src: int, dst: int) -> LPStructure:
+    """The cached LPStructure for (top, src, dst). The cache lives on the
+    Topology instance and is dropped whenever a new Topology is built."""
+    cache = top._lp_struct_cache
+    key = (src, dst)
+    s = cache.get(key)
+    if s is None:
+        s = LPStructure(top, src, dst)
+        cache[key] = s
+    return s
 
 
 def build_lp(
@@ -104,6 +426,22 @@ def build_lp(
       refit of F with both integer allocations pinned, §5.1.3).
     extra_ub: extra inequality rows (used by branch & bound for bound cuts).
     """
+    return structure(top, src, dst).lp(
+        tput_goal, fixed_n=fixed_n, fixed_m=fixed_m, extra_ub=extra_ub
+    )
+
+
+def build_lp_reference(
+    top: Topology,
+    src: int,
+    dst: int,
+    tput_goal: float,
+    *,
+    fixed_n: np.ndarray | None = None,
+    fixed_m: np.ndarray | None = None,
+    extra_ub: list[tuple[np.ndarray, float]] | None = None,
+) -> LPData:
+    """Original pure-Python row-loop assembly; oracle for LPStructure."""
     v = top.num_regions
     edges = top.edge_list(src, dst)
     e = len(edges)
@@ -239,14 +577,14 @@ def build_lp(
         integer_mask = integer_mask[~pinned]
         # drop rows that became vacuous; detect trivial infeasibility
         if A_ub.size:
-            zero = np.abs(A_ub).max(axis=1) < 1e-12
-            if (b_ub_arr[zero] < -1e-9).any():
+            zero = np.abs(A_ub).max(axis=1) < _ZERO_ROW_TOL
+            if (b_ub_arr[zero] < -_RHS_TOL).any():
                 trivially_infeasible = True
             A_ub = A_ub[~zero]
             b_ub_arr = b_ub_arr[~zero]
         if A_eq.size:
-            zero = np.abs(A_eq).max(axis=1) < 1e-12
-            if (np.abs(b_eq_arr[zero]) > 1e-9).any():
+            zero = np.abs(A_eq).max(axis=1) < _ZERO_ROW_TOL
+            if (np.abs(b_eq_arr[zero]) > _RHS_TOL).any():
                 trivially_infeasible = True
             A_eq = A_eq[~zero]
             b_eq_arr = b_eq_arr[~zero]

@@ -9,6 +9,22 @@
 Planning runs on a pruned candidate subgraph (src, dst + top-K relays) —
 mirroring how the open-source Skyplane keeps MILPs "solvable in under 5
 seconds" — and maps the solution back onto the full topology.
+
+Solver backends (the planner hot path):
+
+  * ``backend="numpy"`` (default) — the sequential reference pipeline; each
+    LP re-derives from the cached ``milp.LPStructure`` and solves on the
+    dense numpy IPM.
+  * ``backend="jax"``   — the same round-down pipeline, but every stage of
+    the sweep (root relaxations, feasibility-repair probes, fixed-N and
+    fixed-N+M refits) runs as one batched JAX IPM call across all samples,
+    with per-sample numpy fallback on KKT failure. This is the *integerized*
+    fast path; ``pareto_frontier_fast`` remains the continuous-relaxation
+    shortcut for frontier exploration.
+
+Pruned subgraphs (and the LP structures cached on them) are memoized per
+(src, dst), so repeated planner calls — the "thousands of solves" workload
+of systems built on this planner — never re-assemble constraint matrices.
 """
 
 from __future__ import annotations
@@ -19,7 +35,7 @@ import numpy as np
 
 from . import milp
 from .plan import TransferPlan
-from .solver.bnb import solve_milp
+from .solver.bnb import solve_milp, solve_milp_batched
 from .solver.ipm import solve_lp
 from .topology import GBIT_PER_GB, Topology
 
@@ -42,17 +58,16 @@ class Planner:
         self.top = top
         self.max_relays = max_relays
         self.mode = mode
+        self._prune_cache: dict[tuple[str, str], tuple] = {}
 
     # ----------------------------------------------------------------- bounds
     def max_throughput(self, src: str, dst: str) -> float:
         """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit."""
         sub, s, t, keep = self._prune(src, dst)
-        lp = milp.build_lp(sub, s, t, 0.0, fixed_n=np.full(sub.num_regions, float(sub.limit_vm)))
+        struct = milp.structure(sub, s, t)
+        lp = struct.lp(0.0, fixed_n=np.full(sub.num_regions, float(sub.limit_vm)))
         # maximize source egress == minimize -sum F_{s,*}
-        c = np.zeros_like(lp.c)
-        for k, (u, w) in enumerate(lp.edges):
-            if u == s:
-                c[k] = -1.0
+        c = struct.outflow_c(struct.pin_pattern(True, False))
         res = solve_lp(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
         if not res.ok:
             return 0.0
@@ -79,10 +94,12 @@ class Planner:
         volume_gb: float,
         *,
         mode: str | None = None,
+        backend: str = "numpy",
     ) -> TransferPlan:
         """Paper mode 1: minimize cost subject to a throughput floor."""
         sub, s, t, keep = self._prune(src, dst)
-        res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode)
+        res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode,
+                         backend=backend)
         return self._lift(sub, keep, src, dst, tput_goal_gbps, volume_gb, res)
 
     def plan_tput_max(
@@ -94,10 +111,11 @@ class Planner:
         *,
         n_samples: int = 40,
         mode: str | None = None,
+        backend: str = "numpy",
     ) -> TransferPlan:
         """Paper mode 2 (§5.2): Pareto sweep, pick fastest plan under ceiling."""
         frontier = self.pareto_frontier(
-            src, dst, volume_gb, n_samples=n_samples, mode=mode
+            src, dst, volume_gb, n_samples=n_samples, mode=mode, backend=backend
         )
         feasible = [p for p in frontier if p.cost_per_gb <= cost_ceiling_per_gb + 1e-9]
         if not feasible:
@@ -122,15 +140,16 @@ class Planner:
         The N cost-min LPs differ only in the two goal rows of b, so the
         relaxation solves as a single vmapped call; plans returned here are
         the *continuous* relaxations (≤1% from integral per §5.1.3 — used
-        for frontier exploration; plan_tput_max integerizes the winner)."""
-        from .solver.ipm_jax import solve_lp_batched
+        for frontier exploration). ``pareto_frontier(backend="jax")`` is the
+        batched *integerized* sweep; ``plan_tput_max`` integerizes winners."""
+        from .solver.ipm_batch import solve_lp_batched_auto as solve_lp_batched
 
         sub, s, t, keep = self._prune(src, dst)
         hi = self.max_throughput(src, dst)
         if hi <= 0:
             raise ValueError(f"no path from {src} to {dst}")
         goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
-        lp = milp.build_lp(sub, s, t, float(goals[0]))
+        lp = milp.structure(sub, s, t).lp(float(goals[0]))
         b_batch = np.tile(lp.b_ub[None, :], (n_samples, 1))
         b_batch[:, lp.row_4c] = -goals
         b_batch[:, lp.row_4d] = -goals
@@ -160,35 +179,61 @@ class Planner:
         *,
         n_samples: int = 40,
         mode: str | None = None,
+        backend: str = "numpy",
     ) -> list[ParetoPoint]:
-        """Cost-min solves across a range of throughput goals (paper §5.2)."""
+        """Cost-min solves across a range of throughput goals (paper §5.2).
+
+        backend="jax" runs the whole integerized sweep stage-by-stage through
+        the batched JAX IPM (solve_milp_batched) instead of n_samples
+        sequential round-downs; results match the numpy path (per-sample
+        fallback covers KKT failures). The exact B&B mode is sequential-only.
+        """
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r} (use 'numpy' or 'jax')")
         sub, s, t, keep = self._prune(src, dst)
         hi = self.max_throughput(src, dst)
         if hi <= 0:
             raise ValueError(f"no path from {src} to {dst}")
         goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
         out = []
-        for g in goals:
-            res = solve_milp(sub, s, t, float(g), mode=mode or self.mode)
-            if not res.ok:
-                continue
-            plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)
-            out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
+        if backend == "jax" and (mode or self.mode) == "relaxed":
+            batch = solve_milp_batched(sub, s, t, goals)
+            for g, res in zip(goals, batch):
+                if not res.ok:
+                    continue
+                plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)
+                out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
+        else:
+            for g in goals:
+                res = solve_milp(sub, s, t, float(g), mode=mode or self.mode)
+                if not res.ok:
+                    continue
+                plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)
+                out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
         if not out:
             raise RuntimeError(f"planner found no feasible plan {src}->{dst}")
         return out
 
     # -------------------------------------------------------------- internals
     def _prune(self, src: str, dst: str):
+        """Pruned candidate subgraph for (src, dst), memoized so the LP
+        structures cached on the subgraph survive across planner calls."""
+        key = (src, dst)
+        hit = self._prune_cache.get(key)
+        if hit is not None:
+            return hit
         s_full, t_full = self.top.index(src), self.top.index(dst)
         v = self.top.num_regions
         if v <= self.max_relays + 2:
             keep = list(range(v))
-            return self.top, s_full, t_full, keep
-        sub, s, t = self.top.candidate_subgraph(src, dst, self.max_relays)
-        # recover kept indices in full-topology space
-        keep = [self.top.index(r.key) for r in sub.regions]
-        return sub, s, t, keep
+            out = (self.top, s_full, t_full, keep)
+        else:
+            sub, s, t = self.top.candidate_subgraph(src, dst, self.max_relays)
+            # recover kept indices in full-topology space
+            keep = [self.top.index(r.key) for r in sub.regions]
+            out = (sub, s, t, keep)
+        self._prune_cache[key] = out
+        return out
 
     def _lift(
         self, sub, keep, src, dst, tput_goal, volume_gb, res

@@ -18,6 +18,15 @@ here (``mode="relaxed"``):
 ``mode="exact"`` wraps the same integerization in a best-first branch & bound
 on N (the only integer variables with objective weight; M is integerized per
 node as above).
+
+Every step derives its LP from the cached ``milp.LPStructure`` — one
+vectorized assembly per (topology, src, dst), O(rows) per variant — and
+``solve_milp_batched`` runs the whole round-down pipeline for a *batch* of
+throughput goals through the batched JAX IPM (stage-by-stage: root
+relaxations, feasibility-repair candidate probes, fixed-N refits, fixed-N+M
+refits — each one vmapped call over RHS variants, with per-sample numpy
+fallback on KKT failure). ``planner.pareto_frontier(backend="jax")`` and
+``plan_cost_min(..., backend="jax")`` are built on it.
 """
 
 from __future__ import annotations
@@ -30,6 +39,7 @@ import math
 import numpy as np
 
 from .. import milp
+from ..topology import GBIT_PER_GB
 from .ipm import solve_lp
 
 _INT_TOL = 1e-6
@@ -60,15 +70,6 @@ def _empty(top, status: str, lp_obj: float = math.inf, nodes: int = 1) -> MILPRe
     )
 
 
-def _outflow_objective(lp: milp.LPData) -> np.ndarray:
-    """c such that min c@x == max source outflow."""
-    c = np.zeros_like(lp.c)
-    for k, (u, w) in enumerate(lp.edges):
-        if u == lp.src:
-            c[k] = -1.0
-    return c
-
-
 def _topup_connections(top, M_frac: np.ndarray, M_int: np.ndarray, n_int: np.ndarray):
     """Greedily spend leftover per-region connection budget on the edges the
     floor hurt most (largest per-connection capacity first). In place."""
@@ -88,78 +89,217 @@ def _topup_connections(top, M_frac: np.ndarray, M_int: np.ndarray, n_int: np.nda
             in_budget[w] -= 1
 
 
-def _max_flow(top, src, dst, *, fixed_n=None, fixed_m=None, extra_ub=None) -> float:
+def _cuts_resolved_by_n(struct: milp.LPStructure, extra_ub, n_int):
+    """B&B cuts only touch N columns; once N is pinned they are constants.
+
+    Returns True (all satisfied: rows droppable), False (violated:
+    infeasible), or None (a cut touches free variables: keep the rows)."""
+    e, v = struct.n_edges, struct.num_regions
+    n_int = np.asarray(n_int, dtype=float)
+    for row, b in extra_ub:
+        row = np.asarray(row, dtype=float)
+        outside = np.abs(np.delete(row, np.s_[e : e + v])).max(initial=0.0)
+        if outside > 1e-12:
+            return None
+        if row[e : e + v] @ n_int > b + 1e-9:
+            return False
+    return True
+
+
+def _resolve_cuts(struct, fixed_n, extra_ub):
+    """(extra_ub', infeasible) after evaluating N-only cuts against fixed_n."""
+    if fixed_n is None or not extra_ub:
+        return extra_ub, False
+    res = _cuts_resolved_by_n(struct, extra_ub, fixed_n)
+    if res is None:
+        return extra_ub, False
+    return None, not res
+
+
+def _reduction(struct: milp.LPStructure, fixed_n, fixed_m=None):
+    """Route a pinned solve to its exact presolve (milp.LPStructure.reduced).
+
+    Returns "identity" when nothing shrinks, None when the reduction proves
+    the instance carries no flow, else (rstruct, keep, reduced_n, reduced_m).
+    """
+    support = np.asarray(fixed_n) > 0
+    edge_mask = None if fixed_m is None else np.asarray(fixed_m) > 0
+    if support.all() and (
+        edge_mask is None or edge_mask[struct.eu, struct.ew].all()
+    ):
+        return "identity"
+    red = struct.reduced(support, edge_mask)
+    if red is None:
+        return None
+    rstruct, keep = red
+    rn = np.asarray(fixed_n, dtype=float)[keep]
+    rM = (
+        None if fixed_m is None
+        else np.asarray(fixed_m, dtype=float)[np.ix_(keep, keep)]
+    )
+    return rstruct, keep, rn, rM
+
+
+def _max_flow(struct: milp.LPStructure, *, fixed_n=None, fixed_m=None,
+              extra_ub=None) -> float:
     """Max source outflow with the given allocations pinned. This LP is always
     feasible (F=0 works), so the IPM never grinds on an infeasible instance —
     the round-down pipeline is built exclusively from max-flow probes followed
     by min-cost solves at a known-achievable goal."""
-    lp = milp.build_lp(
-        top, src, dst, 0.0, fixed_n=fixed_n, fixed_m=fixed_m, extra_ub=extra_ub
-    )
+    extra_ub, infeasible = _resolve_cuts(struct, fixed_n, extra_ub)
+    if infeasible:
+        return 0.0
+    if fixed_n is not None and extra_ub is None:
+        red = _reduction(struct, fixed_n, fixed_m)
+        if red is None:
+            return 0.0
+        if red != "identity":
+            rstruct, _, rn, rM = red
+            return _max_flow(rstruct, fixed_n=rn, fixed_m=rM)
+    return _max_flow_raw(struct, fixed_n=fixed_n, fixed_m=fixed_m,
+                         extra_ub=extra_ub)
+
+
+def _max_flow_raw(struct: milp.LPStructure, *, fixed_n=None, fixed_m=None,
+                  extra_ub=None) -> float:
+    lp = struct.lp(0.0, fixed_n=fixed_n, fixed_m=fixed_m, extra_ub=extra_ub)
     if lp.trivially_infeasible:
         return 0.0
-    res = solve_lp(_outflow_objective(lp), lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
-    if not res.ok:
-        return 0.0
-    return max(float(-(_outflow_objective(lp) @ res.x)), 0.0)
+    c_out = struct.outflow_c(
+        struct.pin_pattern(fixed_n is not None, fixed_m is not None)
+    )
+    res = solve_lp(c_out, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    out = max(float(-(c_out @ res.x)), 0.0)
+    if res.ok:
+        return out
+    # near-converged probe on an always-feasible LP (degenerate refit
+    # instances can stall the IPM just above its acceptance threshold with
+    # a tiny duality gap): the outflow is still a valid bound once shaded
+    # down by the remaining primal infeasibility.
+    if (res.status == "max_iter" and res.primal_residual < 1e-5
+            and res.gap < 1e-6):
+        return out * (1.0 - 10.0 * res.primal_residual)
+    return 0.0
 
 
-def _integerize(
-    top, src: int, dst: int, tput_goal: float, n_int: np.ndarray, extra_ub=None
-):
+def _min_cost_fit(struct: milp.LPStructure, goal: float, n_int: np.ndarray,
+                  M_int: np.ndarray, extra_ub=None) -> np.ndarray | None:
+    """Min-cost F with N and M pinned (the final §5.1.3 refit)."""
+    extra_ub, infeasible = _resolve_cuts(struct, n_int, extra_ub)
+    if infeasible:
+        return None
+    if extra_ub is None:
+        red = _reduction(struct, n_int, M_int)
+        if red is None:
+            return None
+        if red != "identity":
+            rstruct, keep, rn, rM = red
+            rF = _min_cost_fit(rstruct, goal, rn, rM)
+            if rF is None:
+                return None
+            F = np.zeros((struct.num_regions,) * 2)
+            F[np.ix_(keep, keep)] = rF
+            return F
+    lp = struct.lp(goal, fixed_n=n_int, fixed_m=M_int, extra_ub=extra_ub)
+    if lp.trivially_infeasible:
+        return None
+    res = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not _near_ok(res):
+        return None
+    F, _, _ = lp.split(res.x)
+    return F
+
+
+def _near_ok(res) -> bool:
+    """Refits run at achieved == maxflow*(1-1e-9): essentially on the
+    feasibility boundary, where degenerate instances can stall the IPM a
+    hair above its acceptance threshold. A near-converged solution (tiny
+    gap/dual residual, primal violation ~1e-6 relative) is still a valid
+    plan within TransferPlan.validate()'s tolerance."""
+    return res.ok or (
+        res.status == "max_iter" and res.primal_residual < 1e-5
+        and res.dual_residual < 1e-6 and res.gap < 1e-6
+    )
+
+
+def _integerize(struct: milp.LPStructure, tput_goal: float, n_int: np.ndarray,
+                extra_ub=None):
     """Steps 3-4 above. Returns (F, M_int, achieved, obj) or None."""
-    goal_n = min(tput_goal, _max_flow(top, src, dst, fixed_n=n_int, extra_ub=extra_ub)
+    extra_ub, infeasible = _resolve_cuts(struct, n_int, extra_ub)
+    if infeasible:
+        return None
+    if extra_ub is None:
+        red = _reduction(struct, n_int)
+        if red is None:
+            return None
+        if red != "identity":
+            rstruct, keep, rn, _ = red
+            fit = _integerize(rstruct, tput_goal, rn)
+            if fit is None:
+                return None
+            rF, rM, achieved, obj = fit
+            v = struct.num_regions
+            F = np.zeros((v, v))
+            M = np.zeros((v, v))
+            F[np.ix_(keep, keep)] = rF
+            M[np.ix_(keep, keep)] = rM
+            return F, M, achieved, obj
+    top = struct.top
+    goal_n = min(tput_goal, _max_flow(struct, fixed_n=n_int, extra_ub=extra_ub)
                  * (1.0 - 1e-9))
     if goal_n <= 0:
         return None
-    lp = milp.build_lp(top, src, dst, goal_n, fixed_n=n_int, extra_ub=extra_ub)
+    lp = struct.lp(goal_n, fixed_n=n_int, extra_ub=extra_ub)
+    if lp.trivially_infeasible:
+        return None
     res = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
-    if not res.ok:
+    if not _near_ok(res):
         return None
     _, _, M_frac = lp.split(res.x)
     M_int = np.floor(M_frac + _INT_TOL)
     _topup_connections(top, M_frac, M_int, n_int)
 
     # re-fit F with both integer allocations pinned at what they can carry
-    maxflow = _max_flow(top, src, dst, fixed_n=n_int, fixed_m=M_int, extra_ub=extra_ub)
+    maxflow = _max_flow(struct, fixed_n=n_int, fixed_m=M_int, extra_ub=extra_ub)
     achieved = min(goal_n, maxflow * (1.0 - 1e-9))
     if achieved <= 0:
         return None
-    lp2 = milp.build_lp(
-        top, src, dst, achieved, fixed_n=n_int, fixed_m=M_int, extra_ub=extra_ub
-    )
-    res2 = solve_lp(lp2.c, lp2.A_ub, lp2.b_ub, lp2.A_eq, lp2.b_eq)
-    if not res2.ok:
+    F = _min_cost_fit(struct, achieved, n_int, M_int, extra_ub)
+    if F is None:
         return None
-    F, _, _ = lp2.split(res2.x)
-    obj = float((F * top.price_egress).sum() / 8.0 + n_int @ top.price_vm)
+    obj = float((F * top.price_egress).sum() / GBIT_PER_GB + n_int @ top.price_vm)
     return F, M_int, achieved, obj
 
 
-def _feasible_with_n(top, src, dst, tput_goal, n_int, extra_ub=None) -> bool:
-    return _max_flow(top, src, dst, fixed_n=n_int, extra_ub=extra_ub) >= tput_goal * (
+def _repair_candidates(n_frac: np.ndarray, limit_vm: float) -> np.ndarray:
+    """The round-down repair ladder: floor, then cumulative +1 bumps in
+    descending-fractional-part order, then ceil. [V+2, V]."""
+    n_floor = np.floor(n_frac + _INT_TOL)
+    order = np.argsort(-(n_frac - n_floor))
+    cands = [n_floor]
+    cur = n_floor
+    for r in order:
+        cur = cur.copy()
+        cur[r] = min(cur[r] + 1, limit_vm)
+        cands.append(cur)
+    cands.append(np.minimum(np.ceil(n_frac - _INT_TOL), limit_vm))
+    return np.stack(cands)
+
+
+def _feasible_with_n(struct, tput_goal, n_int, extra_ub=None) -> bool:
+    return _max_flow(struct, fixed_n=n_int, extra_ub=extra_ub) >= tput_goal * (
         1.0 - 1e-6
     )
 
 
 def _feasibility_repair(
-    top, src, dst, tput_goal, n_frac: np.ndarray, extra_ub=None
+    struct, tput_goal, n_frac: np.ndarray, extra_ub=None
 ) -> np.ndarray | None:
     """Floor N, then bump regions (largest fractional part first) until the
     goal throughput is reachable again."""
-    n_floor = np.floor(n_frac + _INT_TOL)
-    candidates = np.argsort(-(n_frac - n_floor))
-    n_try = n_floor.copy()
-    if _feasible_with_n(top, src, dst, tput_goal, n_try, extra_ub):
-        return n_try
-    for r in candidates:
-        n_try = n_try.copy()
-        n_try[r] = min(n_try[r] + 1, top.limit_vm)
-        if _feasible_with_n(top, src, dst, tput_goal, n_try, extra_ub):
+    for n_try in _repair_candidates(n_frac, struct.top.limit_vm):
+        if _feasible_with_n(struct, tput_goal, n_try, extra_ub):
             return n_try
-    n_ceil = np.minimum(np.ceil(n_frac - _INT_TOL), top.limit_vm)
-    if _feasible_with_n(top, src, dst, tput_goal, n_ceil, extra_ub):
-        return n_ceil
     return None
 
 
@@ -171,18 +311,30 @@ def solve_milp(
     *,
     mode: str = "relaxed",
     max_nodes: int = 60,
+    backend: str = "numpy",
 ) -> MILPResult:
-    lp = milp.build_lp(top, src, dst, tput_goal)
+    """Solve one (src, dst, tput_goal) instance.
+
+    backend="jax" routes the relaxed round-down through the batched JAX IPM
+    (one-sample batches; amortized across calls by the jit cache). The exact
+    branch & bound always runs on the numpy reference solver.
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r} (use 'numpy' or 'jax')")
+    if backend == "jax" and mode == "relaxed":
+        return solve_milp_batched(top, src, dst, np.array([tput_goal]))[0]
+    struct = milp.structure(top, src, dst)
+    lp = struct.lp(tput_goal)
     root = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
     if not root.ok:
         return _empty(top, root.status)
     _, n_frac, _ = lp.split(root.x)
 
     def round_down(n_source: np.ndarray, extra_ub=None) -> MILPResult | None:
-        n_int = _feasibility_repair(top, src, dst, tput_goal, n_source, extra_ub)
+        n_int = _feasibility_repair(struct, tput_goal, n_source, extra_ub)
         if n_int is None:
             return None
-        fit = _integerize(top, src, dst, tput_goal, n_int, extra_ub)
+        fit = _integerize(struct, tput_goal, n_int, extra_ub)
         if fit is None:
             return None
         F, M, achieved, obj = fit
@@ -226,8 +378,12 @@ def solve_milp(
                 extra.append((col, float(val)))
             else:  # N_r >= val
                 extra.append((-col, -float(val)))
-        node_lp = milp.build_lp(top, src, dst, tput_goal, extra_ub=extra)
-        res = solve_lp(node_lp.c, node_lp.A_ub, node_lp.b_ub, node_lp.A_eq, node_lp.b_eq)
+        if cuts:
+            node_lp = struct.lp(tput_goal, extra_ub=extra)
+            res = solve_lp(node_lp.c, node_lp.A_ub, node_lp.b_ub,
+                           node_lp.A_eq, node_lp.b_eq)
+        else:  # the cut-free node IS the root relaxation: reuse it
+            node_lp, res = lp, root
         if not res.ok or res.fun >= best_obj - 1e-9:
             continue
         _, n_node, _ = node_lp.split(res.x)
@@ -235,7 +391,7 @@ def solve_milp(
         frac_ix = np.where(frac > 1e-4)[0]
         if frac_ix.size == 0:
             n_int = np.round(n_node).astype(float)
-            fit = _integerize(top, src, dst, tput_goal, n_int, extra)
+            fit = _integerize(struct, tput_goal, n_int, extra)
             if fit is not None and fit[3] < best_obj:
                 F, M, achieved, obj = fit
                 best_obj = obj
@@ -254,3 +410,249 @@ def solve_milp(
         return _empty(top, "infeasible", root.fun, nodes)
     best.nodes_explored = nodes
     return best
+
+
+# --------------------------------------------------------------------- batched
+def solve_milp_batched(
+    top,
+    src: int,
+    dst: int,
+    goals: np.ndarray,
+    *,
+    iters: int = 40,
+) -> list[MILPResult]:
+    """The §5.1.3 round-down pipeline for a batch of throughput goals.
+
+    Replays the exact sequential procedure (root relaxation -> feasibility
+    repair -> fixed-N refit + connection top-up -> fixed-N+M refit) but runs
+    each stage as ONE batched JAX IPM call across all still-live goals: the
+    LPs of a stage share their matrices (cached pin patterns of the
+    LPStructure) and differ only in RHS shifts. Samples whose batched solve
+    fails its KKT check are transparently re-solved by the numpy IPM, so the
+    result list matches the sequential path's answers. The batched engine is
+    picked per host (ipm_batch: stacked-LAPACK numpy on CPU-only hosts, the
+    vmapped JAX IPM when an accelerator is available).
+    """
+    from .ipm_batch import solve_lp_batched_with_fallback
+
+    struct = milp.structure(top, src, dst)
+    goals = np.asarray(goals, dtype=float)
+    B = len(goals)
+    v, e = struct.num_regions, struct.n_edges
+    eu, ew = struct.eu, struct.ew
+    results: list[MILPResult | None] = [None] * B
+
+    def finish():
+        return [
+            results[i] if results[i] is not None
+            else _empty(top, "infeasible",
+                        root_fun[i] if root_ok[i] else math.inf)
+            for i in range(B)
+        ]
+
+    # ---- stage 0: root relaxations (batch over the two goal rows of b)
+    b0 = np.tile(struct.b_ub0[None, :], (B, 1))
+    b0[:, struct.row_4c] = -goals
+    b0[:, struct.row_4d] = -goals
+    x0, root_fun, root_ok, _ = solve_lp_batched_with_fallback(
+        struct.c, struct.A_ub, b0, struct.A_eq, struct.b_eq, iters=iters
+    )
+    alive = root_ok.copy()
+    n_frac = x0[:, e : e + v]
+    if not alive.any():
+        return finish()
+
+    # Stages 1-4 pin N (and later M), so every solve routes through the exact
+    # presolve: rows sharing a (support, edge-mask) reduction solve as one
+    # batched call on the reduced structure.
+    def grouped_pinned(goals_k, n_mat, M_mat, objective):
+        """Batched pinned solves grouped by identical reduction.
+
+        objective "outflow": returns (maxflow [K]).
+        objective "cost":    returns (x_full [K, nx-ish as (F, M) grids], ok):
+        F [K,v,v] always; M [K,v,v] only meaningful when M_mat is None.
+        """
+        K = n_mat.shape[0]
+        maxflow = np.zeros(K)
+        F_out = np.zeros((K, v, v))
+        M_out = np.zeros((K, v, v))
+        okv = np.zeros(K, dtype=bool)
+        groups: dict[bytes, list[int]] = {}
+        for k in range(K):
+            key = (n_mat[k] > 0).tobytes()
+            if M_mat is not None:
+                key += (M_mat[k] > 0).tobytes()
+            groups.setdefault(key, []).append(k)
+        for rows in groups.values():
+            r0 = rows[0]
+            support = n_mat[r0] > 0
+            edge_mask = None if M_mat is None else M_mat[r0] > 0
+            if support.all() and (
+                edge_mask is None or edge_mask[eu, ew].all()
+            ):
+                rstruct, keep = struct, np.arange(v)
+            else:
+                red = struct.reduced(support, edge_mask)
+                if red is None:
+                    continue  # provably zero flow: maxflow 0 / not ok
+                rstruct, keep = red
+            rn = n_mat[rows][:, keep]
+            if M_mat is not None:
+                rM = M_mat[np.ix_(rows, keep, keep)]
+                pins = np.concatenate(
+                    [rn, rM[:, rstruct.eu, rstruct.ew]], axis=1
+                )
+            else:
+                pins = rn
+            pat = rstruct.pin_pattern(True, M_mat is not None)
+            stage_goals = (
+                np.zeros(len(rows)) if objective == "outflow"
+                else goals_k[rows]
+            )
+            b, triv = rstruct.batch_b_ub(pat, stage_goals, pins)
+            c_stage = (
+                rstruct.outflow_c(pat) if objective == "outflow"
+                else pat.c_free
+            )
+            x, fun, ok, _ = solve_lp_batched_with_fallback(
+                c_stage, pat.A_ub_free, b, pat.A_eq_free,
+                rstruct.b_eq[pat.keep_eq], iters=iters,
+            )
+            good = ok & ~triv
+            re = rstruct.n_edges
+            for row_local, k in enumerate(rows):
+                if not good[row_local]:
+                    if triv[row_local]:
+                        continue
+                    # uncertified sample: retry on the tolerant sequential
+                    # path (degenerate boundary refits; see _max_flow_raw)
+                    rn_k = n_mat[k][keep]
+                    rM_k = (None if M_mat is None
+                            else M_mat[k][np.ix_(keep, keep)])
+                    if objective == "outflow":
+                        maxflow[k] = _max_flow_raw(
+                            rstruct, fixed_n=rn_k, fixed_m=rM_k
+                        )
+                        okv[k] = True
+                    elif M_mat is not None:
+                        Fk = _min_cost_fit(rstruct, float(goals_k[k]),
+                                           rn_k, rM_k)
+                        if Fk is not None:
+                            F_out[np.ix_([k], keep, keep)] = Fk[None]
+                            okv[k] = True
+                    else:
+                        lp_k = rstruct.lp(float(goals_k[k]), fixed_n=rn_k)
+                        if not lp_k.trivially_infeasible:
+                            res_k = solve_lp(lp_k.c, lp_k.A_ub, lp_k.b_ub,
+                                             lp_k.A_eq, lp_k.b_eq)
+                            if _near_ok(res_k):
+                                Fk, _, Mk = lp_k.split(res_k.x)
+                                F_out[np.ix_([k], keep, keep)] = Fk[None]
+                                M_out[np.ix_([k], keep, keep)] = Mk[None]
+                                okv[k] = True
+                    continue
+                okv[k] = True
+                if objective == "outflow":
+                    maxflow[k] = max(-float(fun[row_local]), 0.0)
+                else:
+                    Fk = np.zeros((rstruct.num_regions,) * 2)
+                    Fk[rstruct.eu, rstruct.ew] = x[row_local, :re]
+                    F_out[np.ix_([k], keep, keep)] = Fk[None]
+                    if M_mat is None:  # fixed-N solve: free cols are [F, M]
+                        Mk = np.zeros((rstruct.num_regions,) * 2)
+                        Mk[rstruct.eu, rstruct.ew] = x[row_local, re:]
+                        M_out[np.ix_([k], keep, keep)] = Mk[None]
+        if objective == "outflow":
+            return maxflow
+        return F_out, M_out, okv
+
+    # ---- stage 1: feasibility repair — batched max-flow probes, two-phase:
+    # floors first (usually enough), then the full bump ladder only for the
+    # goals whose floor fell short. Matches the sequential first-feasible pick.
+    live_ix = np.flatnonzero(alive)
+    floors = np.floor(n_frac[live_ix] + _INT_TOL)
+    mf_floor = grouped_pinned(None, floors, None, "outflow")
+    n_int = np.zeros((B, v))
+    flow_cap = np.zeros(B)
+    need_ladder = []
+    for row, i in enumerate(live_ix):
+        if mf_floor[row] >= goals[i] * (1.0 - 1e-6):
+            n_int[i] = floors[row]
+            flow_cap[i] = mf_floor[row]
+        else:
+            need_ladder.append(i)
+    if need_ladder:
+        K = v + 1  # bump ladder + ceil (floor already probed)
+        ladders = np.stack(
+            [_repair_candidates(n_frac[i], top.limit_vm)[1:] for i in need_ladder]
+        )
+        mf = grouped_pinned(
+            None, ladders.reshape(-1, v), None, "outflow"
+        ).reshape(len(need_ladder), K)
+        for row, i in enumerate(need_ladder):
+            feas = np.flatnonzero(mf[row] >= goals[i] * (1.0 - 1e-6))
+            if feas.size == 0:
+                alive[i] = False
+                continue
+            k = int(feas[0])
+            n_int[i] = ladders[row, k]
+            flow_cap[i] = mf[row, k]
+    if not alive.any():
+        return finish()
+
+    # ---- stage 2: fixed-N min-cost refit at min(goal, maxflow)
+    goal_n = np.minimum(goals, flow_cap * (1.0 - 1e-9))
+    alive &= goal_n > 0
+    live_ix = np.flatnonzero(alive)
+    if live_ix.size == 0:
+        return finish()
+    _, M_frac_all, ok2 = grouped_pinned(
+        goal_n[live_ix], n_int[live_ix], None, "cost"
+    )
+    M_int = np.zeros((B, v, v))
+    for row, i in enumerate(live_ix):
+        if not ok2[row]:
+            alive[i] = False
+            continue
+        M_frac = M_frac_all[row]
+        Mi = np.floor(M_frac + _INT_TOL)
+        _topup_connections(top, M_frac, Mi, n_int[i])
+        M_int[i] = Mi
+    live_ix = np.flatnonzero(alive)
+    if live_ix.size == 0:
+        return finish()
+
+    # ---- stage 3: fixed-N+M max-flow probe
+    maxflow3 = grouped_pinned(
+        None, n_int[live_ix], M_int[live_ix], "outflow"
+    )
+    achieved = np.zeros(B)
+    achieved[live_ix] = np.minimum(goal_n[live_ix], maxflow3 * (1.0 - 1e-9))
+    alive &= achieved > 0
+    live_ix = np.flatnonzero(alive)
+    if live_ix.size == 0:
+        return finish()
+
+    # ---- stage 4: fixed-N+M min-cost re-fit of F at the achieved goal
+    F_all, _, ok4 = grouped_pinned(
+        achieved[live_ix], n_int[live_ix], M_int[live_ix], "cost"
+    )
+    for row, i in enumerate(live_ix):
+        if not ok4[row]:
+            alive[i] = False
+            continue
+        F = F_all[row]
+        obj = float(
+            (F * top.price_egress).sum() / GBIT_PER_GB
+            + n_int[i] @ top.price_vm
+        )
+        results[i] = MILPResult(
+            F=F,
+            N=n_int[i].astype(np.int64),
+            M=M_int[i].astype(np.int64),
+            objective=obj,
+            status="optimal",
+            lp_objective=float(root_fun[i]),
+            achieved_tput=float(achieved[i]),
+        )
+    return finish()

@@ -1,17 +1,30 @@
-"""Batched JAX interior-point LP solver for Pareto-frontier sweeps.
+"""Batched JAX interior-point LP solver for the planner's solve pipelines.
 
 The paper's §5.2 throughput-max mode solves ~100 cost-min LPs at different
-throughput goals. Those LPs share every matrix except the two goal rows of
-b — a textbook vmap: one fixed-iteration Mehrotra predictor-corrector,
-jitted under scoped float64 (`jax.enable_x64` context — no global state),
-vmapped over b. On the 12-region pruned graph the whole frontier solves in
-one batched call.
+throughput goals, and the §5.1.3 round-down pipeline adds feasibility-repair
+probes and fixed-N / fixed-N+M refits. All of those LPs share their matrices
+and differ only in the RHS — either the two goal rows of b or the
+pinned-variable shifts produced by ``milp.LPStructure.batch_b_ub`` — a
+textbook vmap: one fixed-iteration Mehrotra predictor-corrector, jitted
+under scoped float64 (`jax.enable_x64` context — no global state), vmapped
+over b. On the 12-region pruned graph a whole frontier stage solves in one
+batched call.
 
 Fixed iteration count (no data-dependent control flow) keeps the solve
 jit/vmap-friendly; 40 iterations is ~3x the typical convergence point of
-the numpy solver on these problems. The numpy solver (ipm.py) remains the
-reference; `planner.pareto_frontier(backend="jax")` uses this one and
-falls back per-sample when a batched solve fails its KKT check.
+the numpy solver on these problems. Each LP iteration LU-factorizes the
+normal matrix once and reuses the factor for the predictor and corrector
+solves. Batch sizes are padded up to power-of-two buckets so the jit cache
+holds a handful of entries instead of one per sample count.
+
+The numpy solver (ipm.py) remains the reference. ``solve_lp_batched``
+reports a per-sample KKT check; ``ipm_batch.solve_lp_batched_with_fallback``
+re-solves the failing samples with the numpy IPM. ``planner.pareto_frontier(
+backend="jax")`` / ``planner.plan_cost_min(..., backend="jax")`` reach this
+engine through ``ipm_batch``'s dispatch: it is selected when jax has an
+accelerator backend, while CPU-only hosts use the stacked-LAPACK numpy
+engine instead (XLA's CPU triangular/LU solve lowering is 20-30x slower
+than LAPACK on these problem sizes — measured, see ipm_batch.py).
 """
 
 from __future__ import annotations
@@ -21,41 +34,57 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 _EPS = 1e-11
+_KKT_TOL = 1e-7
 
 
-def _build_standard(c, A_ub, b_ub, A_eq, b_eq):
+def _build_standard(c, A_ub, A_eq):
+    """Standard-form matrix [A_ub I; A_eq 0] and extended objective."""
     n = c.shape[0]
     m_ub = A_ub.shape[0] if A_ub is not None and A_ub.size else 0
     m_eq = A_eq.shape[0] if A_eq is not None and A_eq.size else 0
     A = np.zeros((m_ub + m_eq, n + m_ub))
-    b = np.zeros(m_ub + m_eq)
     if m_ub:
         A[:m_ub, :n] = A_ub
         A[:m_ub, n:] = np.eye(m_ub)
-        b[:m_ub] = b_ub
     if m_eq:
         A[m_ub:, :n] = A_eq
-        b[m_ub:] = b_eq
     cs = np.concatenate([c, np.zeros(m_ub)])
-    return A, b, cs
+    return A, cs, m_ub, m_eq
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
-def _solve_batched(A, bs, c, iters: int = 40):
+@functools.partial(jax.jit, static_argnames=("iters", "n_slack"))
+def _solve_batched(A, bs, c, iters: int = 40, n_slack: int = 0):
     """min c@x s.t. A@x=b_i, x>=0 for a batch of b vectors. f64 inside."""
     m, n = A.shape
+    eye = jnp.eye(m)
+    nc = n - n_slack
+    core = A[:, :nc]
+    sl = jnp.arange(n_slack)
+    slack_diag = A[sl, nc + sl] if n_slack else None
 
-    def reg_solve(M, rhs):
+    def normal_matrix(d):
+        # A D A^T; the slack identity block only contributes to the diagonal
+        M = (core * d[None, :nc]) @ core.T
+        if n_slack:
+            M = M.at[sl, sl].add(slack_diag * slack_diag * d[nc:])
+        return M
+
+    def reg_lu(M):
         tr = jnp.trace(M) / m
-        return jnp.linalg.solve(M + 1e-11 * tr * jnp.eye(m), rhs)
+        return jax.scipy.linalg.lu_factor(M + 1e-11 * tr * eye)
+
+    # the starting-point factor depends only on A: hoisted out of the vmap
+    lu0 = reg_lu(normal_matrix(jnp.ones(n)))
+    y0 = jax.scipy.linalg.lu_solve(lu0, A @ c)
+    s0 = c - A.T @ y0
 
     def one(b):
-        AAt = A @ A.T
-        x = A.T @ reg_solve(AAt, b)
-        y = reg_solve(AAt, A @ c)
-        s = c - A.T @ y
+        x = A.T @ jax.scipy.linalg.lu_solve(lu0, b)
+        y = y0
+        s = s0
         dx = jnp.maximum(-1.5 * jnp.min(x), 0.0)
         ds = jnp.maximum(-1.5 * jnp.min(s), 0.0)
         x = x + dx
@@ -70,12 +99,12 @@ def _solve_batched(A, bs, c, iters: int = 40):
             rc = A.T @ y + s - c
             mu = (x @ s) / n
             d = x / s
-            AD = A * d[None, :]
-            M = AD @ A.T
+            # one factorization serves the predictor and corrector solves
+            lu = reg_lu(normal_matrix(d))
 
             r_xs = x * s
             rhs = -rb - A @ (d * rc - r_xs / s)
-            dy_a = reg_solve(M, rhs)
+            dy_a = jax.scipy.linalg.lu_solve(lu, rhs)
             dx_a = d * (A.T @ dy_a + rc) - r_xs / s
             ds_a = -(r_xs + s * dx_a) / x
 
@@ -90,7 +119,7 @@ def _solve_batched(A, bs, c, iters: int = 40):
 
             r_xs2 = x * s + dx_a * ds_a - sigma * mu
             rhs2 = -rb - A @ (d * rc - r_xs2 / s)
-            dy = reg_solve(M, rhs2)
+            dy = jax.scipy.linalg.lu_solve(lu, rhs2)
             dx = d * (A.T @ dy + rc) - r_xs2 / s
             dsv = -(r_xs2 + s * dx) / x
 
@@ -103,28 +132,54 @@ def _solve_batched(A, bs, c, iters: int = 40):
 
         (x, y, s), _ = jax.lax.scan(step, (x, y, s), None, length=iters)
         pres = jnp.linalg.norm(A @ x - b) / (1.0 + jnp.linalg.norm(b))
+        dres = jnp.linalg.norm(A.T @ y + s - c) / (1.0 + jnp.linalg.norm(c))
         gap = (x @ s) / (1.0 + jnp.abs(c @ x))
-        return x, c @ x, pres, gap
+        return x, c @ x, pres, gap, dres
 
     return jax.vmap(one)(bs)
 
 
+def _bucket(n: int) -> int:
+    """Next power of two >= n: keeps the jit cache to a few batch shapes."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 def solve_lp_batched(c, A_ub, b_ub_batch, A_eq, b_eq, *, iters: int = 40):
-    """Solve a batch of LPs differing only in b_ub. Returns
-    (x [B, n], fun [B], ok [B] bool)."""
-    with jax.enable_x64(True):
-        A, b0, cs = _build_standard(
-            np.asarray(c, np.float64),
-            np.asarray(A_ub, np.float64), np.zeros(A_ub.shape[0]),
+    """Solve a batch of LPs sharing (c, A_ub, A_eq) but differing in RHS.
+
+    b_ub_batch: [B, m_ub]; b_eq may be [m_eq] (shared) or [B, m_eq] (e.g.
+    per-sample pinned-variable shifts). Returns (x [B, n], fun [B], ok [B])
+    where ok is a per-sample KKT check (primal/dual residuals + gap).
+    """
+    with enable_x64():
+        c = np.asarray(c, np.float64)
+        A, cs, m_ub, m_eq = _build_standard(
+            c,
+            np.asarray(A_ub, np.float64),
             np.asarray(A_eq, np.float64) if A_eq is not None else None,
-            np.asarray(b_eq, np.float64) if b_eq is not None else None,
         )
-        m_ub = A_ub.shape[0]
-        bs = np.tile(b0[None, :], (len(b_ub_batch), 1))
-        bs[:, :m_ub] = np.asarray(b_ub_batch, np.float64)
-        x, fun, pres, gap = _solve_batched(
-            jnp.asarray(A), jnp.asarray(bs), jnp.asarray(cs), iters=iters
+        b_ub_batch = np.asarray(b_ub_batch, np.float64)
+        B = b_ub_batch.shape[0]
+        bs = np.zeros((B, m_ub + m_eq))
+        bs[:, :m_ub] = b_ub_batch
+        if m_eq:
+            bs[:, m_ub:] = np.asarray(b_eq, np.float64)  # broadcasts [m_eq]/[B,m_eq]
+        pad = _bucket(B) - B
+        if pad:
+            bs = np.concatenate([bs, np.tile(bs[:1], (pad, 1))], axis=0)
+        x, fun, pres, gap, dres = _solve_batched(
+            jnp.asarray(A), jnp.asarray(bs), jnp.asarray(cs),
+            iters=iters, n_slack=m_ub,
         )
-        x = np.asarray(x)[:, : c.shape[0]]
-        ok = (np.asarray(pres) < 1e-7) & (np.asarray(gap) < 1e-7)
-        return x, np.asarray(fun), ok
+        x = np.asarray(x)[:B, : c.shape[0]]
+        pres, gap, dres = (np.asarray(a)[:B] for a in (pres, gap, dres))
+        ok = (
+            (pres < _KKT_TOL) & (gap < _KKT_TOL) & (dres < _KKT_TOL)
+            & np.isfinite(pres) & np.isfinite(gap) & np.isfinite(dres)
+        )
+        return x, np.asarray(fun)[:B], ok
+
+

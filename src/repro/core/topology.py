@@ -60,6 +60,11 @@ class Topology:
         assert self.limit_ingress.shape == (v,)
         assert self.limit_egress.shape == (v,)
         self._index = {r.key: i for i, r in enumerate(self.regions)}
+        # derived-data caches (edge lists, LP structures). Keyed per instance:
+        # mutate the grids only by building a new Topology (dataclasses.replace
+        # re-runs __post_init__ and starts these fresh).
+        self._edge_cache: dict = {}
+        self._lp_struct_cache: dict = {}
 
     # ------------------------------------------------------------------ utils
     @property
@@ -114,18 +119,23 @@ class Topology:
         self, src_idx: int | None = None, dst_idx: int | None = None
     ) -> list[tuple[int, int]]:
         """Directed edges with nonzero capacity. Drops edges into the source
-        and out of the destination (never useful for a single s->t job)."""
-        edges = []
-        v = self.num_regions
-        for u in range(v):
-            for w in range(v):
-                if u == w or self.tput[u, w] <= 0:
-                    continue
-                if src_idx is not None and w == src_idx:
-                    continue
-                if dst_idx is not None and u == dst_idx:
-                    continue
-                edges.append((u, w))
+        and out of the destination (never useful for a single s->t job).
+
+        Cached per (src_idx, dst_idx); callers must treat the result as
+        read-only.
+        """
+        key = (src_idx, dst_idx)
+        cached = self._edge_cache.get(key)
+        if cached is not None:
+            return cached
+        mask = self.tput > 0
+        np.fill_diagonal(mask, False)
+        if src_idx is not None:
+            mask[:, src_idx] = False
+        if dst_idx is not None:
+            mask[dst_idx, :] = False
+        edges = [(int(u), int(w)) for u, w in np.argwhere(mask)]
+        self._edge_cache[key] = edges
         return edges
 
 

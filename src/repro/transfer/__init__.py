@@ -1,3 +1,4 @@
 from .chunk import Chunk, chunk_object, checksum  # noqa: F401
 from .flowsim import SimResult, simulate_transfer  # noqa: F401
+from .flowsim_ref import simulate_transfer_reference  # noqa: F401
 from .executor import execute_plan, execute_service_model  # noqa: F401

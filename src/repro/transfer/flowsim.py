@@ -16,12 +16,20 @@ VMs and TCP connections:
 
 Outputs transfer time, achieved throughput, realized egress/VM cost and
 per-resource utilization for the bottleneck analysis (Fig. 8).
+
+The event loop is vectorized (structure-of-arrays connection state, deque
+chunk queues, bincount byte accounting, and max-min rates recomputed only
+when the set of active connections changes), running ~an order of magnitude
+more events/s than the object-per-connection reference preserved in
+``flowsim_ref.py`` — enough to push Fig. 6/7/8 workloads to 10x the chunk
+counts. Semantics match the reference (same RNG stream, same dispatch and
+speculation rules); tests pin delivered-chunk counts to it at fixed seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
+from collections import deque
 
 import numpy as np
 
@@ -51,40 +59,24 @@ class SimResult:
     utilization: dict  # resource name -> fraction of capacity used
     bottlenecks: list  # resources with utilization >= threshold
     volume_gb: float = 0.0
+    events: int = 0  # simulator event-loop iterations (perf accounting)
 
     @property
     def cost_per_gb(self) -> float:
         return self.total_cost / max(self.volume_gb, 1e-9)
 
 
-@dataclasses.dataclass
-class _Conn:
-    edge: tuple[int, int]
-    path_id: int
-    hop: int  # hop index within the path
-    rate_nominal: float  # Gbit/s when unconstrained
-    src_vm: int  # global vm index
-    dst_vm: int
-    mult: float = 1.0  # straggler multiplier
-    chunk: int = -1  # active chunk id (-1 idle)
-    remaining: float = 0.0  # Gbit left on the active chunk
+def _maxmin_rates_arr(caps, src, dst, vm_eg_cap, vm_in_cap):
+    """Water-filling max-min fair allocation over the active connections.
 
-
-def _maxmin_rates(conns, active_ix, vm_eg_cap, vm_in_cap):
-    """Water-filling max-min fair allocation (vectorized).
-
-    Resources: each active connection's own cap, each VM's egress cap over
-    its outgoing conns, each VM's ingress cap over incoming conns.
+    caps/src/dst are aligned arrays for the active set; returns the rate
+    array in the same order. Resources: each connection's own cap, each VM's
+    egress cap over its outgoing conns, each VM's ingress cap over incoming.
     """
-    n = len(active_ix)
-    if n == 0:
-        return {}
-    caps = np.array([conns[i].rate_nominal * conns[i].mult for i in active_ix])
-    src = np.array([conns[i].src_vm for i in active_ix], dtype=np.int64)
-    dst = np.array([conns[i].dst_vm for i in active_ix], dtype=np.int64)
+    n = caps.shape[0]
     nv = max(int(src.max()), int(dst.max())) + 1
-    eg_rem = np.asarray(vm_eg_cap, dtype=float)[:nv].copy()
-    in_rem = np.asarray(vm_in_cap, dtype=float)[:nv].copy()
+    eg_rem = vm_eg_cap[:nv].copy()
+    in_rem = vm_in_cap[:nv].copy()
 
     rate = np.zeros(n)
     fixed = np.zeros(n, dtype=bool)
@@ -110,7 +102,7 @@ def _maxmin_rates(conns, active_ix, vm_eg_cap, vm_in_cap):
         np.maximum(eg_rem, 0.0, out=eg_rem)
         np.maximum(in_rem, 0.0, out=in_rem)
         fixed |= newly
-    return {active_ix[i]: float(rate[i]) for i in range(n)}
+    return rate
 
 
 def simulate_transfer(
@@ -154,12 +146,25 @@ def simulate_transfer(
             vm_region.append(r)
         vm_of_region[r] = ids
 
-    # ---- materialize connections per path hop, proportional to flow share
-    conns: list[_Conn] = []
+    # ---- materialize connections (SoA), same RNG stream as the reference
+    path_len = {pid: len(path) - 1 for pid, (path, _) in enumerate(paths)}
     edge_flow_total: dict[tuple[int, int], float] = {}
     for path, flow in paths:
         for a, b in zip(path[:-1], path[1:]):
             edge_flow_total[(a, b)] = edge_flow_total.get((a, b), 0.0) + flow
+
+    # stages: one per (path, hop), ids assigned in path/hop order
+    stage_of: dict[tuple[int, int], int] = {}
+    for pid, (path, _) in enumerate(paths):
+        for hop in range(path_len[pid]):
+            stage_of[(pid, hop)] = len(stage_of)
+    n_stages = len(stage_of)
+
+    c_edge: list[tuple[int, int]] = []
+    c_sid: list[int] = []
+    c_rate: list[float] = []
+    c_src: list[int] = []
+    c_dst: list[int] = []
     for pid, (path, flow) in enumerate(paths):
         for hop, (a, b) in enumerate(zip(path[:-1], path[1:])):
             m_edge = int(round(plan.M[a, b]))
@@ -172,178 +177,230 @@ def simulate_transfer(
             per_pair = max(n_conn / (len(vms_a) * len(vms_b)), 1e-9)
             eff = conn_efficiency(per_pair * len(vms_b), top.limit_conn)
             nominal = top.tput[a, b] * eff / n_conn * len(vms_a)
+            sid = stage_of[(pid, hop)]
             for c in range(n_conn):
-                mult = 1.0
                 if rng.uniform() < straggler_prob:
                     mult = float(rng.uniform(*straggler_speed))
                 else:
                     mult = float(np.exp(rng.normal(0.0, 0.05)))
-                conns.append(
-                    _Conn(
-                        edge=(a, b), path_id=pid, hop=hop,
-                        rate_nominal=nominal,
-                        src_vm=vms_a[c % len(vms_a)],
-                        dst_vm=vms_b[c % len(vms_b)],
-                        mult=mult,
-                    )
-                )
+                c_edge.append((a, b))
+                c_sid.append(sid)
+                c_rate.append(nominal * mult)
+                c_src.append(vms_a[c % len(vms_a)])
+                c_dst.append(vms_b[c % len(vms_b)])
 
-    path_len = {pid: len(path) - 1 for pid, (path, _) in enumerate(paths)}
+    nc = len(c_sid)
+    sid_arr = np.asarray(c_sid, dtype=np.int64)
+    rate_eff = np.asarray(c_rate)
+    src_vm = np.asarray(c_src, dtype=np.int64)
+    dst_vm = np.asarray(c_dst, dtype=np.int64)
+    edges_used = sorted(set(c_edge))
+    edge_index = {e: i for i, e in enumerate(edges_used)}
+    edge_id = np.asarray([edge_index[e] for e in c_edge], dtype=np.int64)
+    vm_eg = np.asarray(vm_eg_cap, dtype=float)
+    vm_in = np.asarray(vm_in_cap, dtype=float)
+
+    # per-stage metadata
+    stage_pid = np.zeros(n_stages, dtype=np.int64)
+    stage_hop = np.zeros(n_stages, dtype=np.int64)
+    stage_next = np.full(n_stages, -1, dtype=np.int64)  # downstream stage id
+    for (pid, hop), sid in stage_of.items():
+        stage_pid[sid] = pid
+        stage_hop[sid] = hop
+        if hop + 1 < path_len[pid]:
+            stage_next[sid] = stage_of[(pid, hop + 1)]
+    next_sid = stage_next[sid_arr]  # -1 when this hop is the last
+
+    chunk_arr = np.full(nc, -1, dtype=np.int64)
+    remaining = np.zeros(nc)
+
     flows = np.array([f for _, f in paths])
     flow_frac = flows / flows.sum()
 
     # chunk -> path assignment: proportional to planned flow (both modes)
     chunk_path = rng.choice(len(paths), size=n_chunks, p=flow_frac)
-    # per-hop queues per path: chunks ready to be sent on hop h
-    ready: dict[tuple[int, int], list[int]] = {}
+    ready: list[deque] = [deque() for _ in range(n_stages)]
     for ch in range(n_chunks):
-        ready.setdefault((int(chunk_path[ch]), 0), []).append(ch)
+        ready[stage_of[(int(chunk_path[ch]), 0)]].append(ch)
     # static (GridFTP) mode: pre-assign chunks round-robin to connections
-    static_assign: dict[int, list[int]] = {}
+    static_assign: dict[int, deque] = {}
     if dispatch == "static":
         by_first_hop: dict[int, list[int]] = {}
-        for ci, c in enumerate(conns):
-            if c.hop == 0:
-                by_first_hop.setdefault(c.path_id, []).append(ci)
+        for ci in range(nc):
+            if stage_hop[sid_arr[ci]] == 0:
+                by_first_hop.setdefault(int(stage_pid[sid_arr[ci]]), []).append(ci)
         rrobin: dict[int, int] = {}
         for ch in range(n_chunks):
             pid = int(chunk_path[ch])
             lst = by_first_hop[pid]
             k = rrobin.get(pid, 0)
-            static_assign.setdefault(lst[k % len(lst)], []).append(ch)
+            static_assign.setdefault(lst[k % len(lst)], deque()).append(ch)
             rrobin[pid] = k + 1
+    # every first-hop connection is statically routed in static mode — even
+    # ones that received no chunks (they must NOT fall through to the shared
+    # ready queue, mirroring the reference semantics)
+    is_static_first = np.zeros(nc, dtype=bool)
+    if dispatch == "static":
+        is_static_first = stage_hop[sid_arr] == 0
 
-    relay_occupancy: dict[tuple[int, int], int] = {}  # (path, hop) buffered
-    done_hops: set[tuple[int, int, int]] = set()
+    relay_occ = np.zeros(n_stages, dtype=np.int64)  # buffered chunks per stage
+    done_hops: set[tuple[int, int]] = set()  # (sid, chunk)
+    replicas: dict[tuple[int, int], int] = {}  # (sid, chunk) -> replica count
     delivered = 0
     now = 0.0
-    edge_gbit: dict[tuple[int, int], float] = {}
+    edge_gbit_vec = np.zeros(len(edges_used))
     vm_busy_out = np.zeros(len(vm_eg_cap))
     vm_busy_in = np.zeros(len(vm_eg_cap))
 
-    # speculation bookkeeping: (path,hop,chunk) -> replica count
-    replicas: dict[tuple[int, int, int], int] = {}
+    # per-cascade-pass cache: sid -> (eta, chunk) of the worst eligible
+    # in-flight chunk, or None; invalidated when the stage's state changes
+    spec_cache: dict[int, tuple[float, int] | None] = {}
 
-    def refill(ci: int) -> bool:
-        c = conns[ci]
-        if c.chunk >= 0:
-            return False
-        # flow control: downstream relay buffer full -> stall
-        key_down = (c.path_id, c.hop + 1)
-        if c.hop + 1 < path_len[c.path_id]:
-            if relay_occupancy.get(key_down, 0) >= relay_buffer_chunks:
-                return False
-        if dispatch == "static" and c.hop == 0:
-            lst = static_assign.get(ci, [])
-            if not lst:
-                return False
-            ch = lst.pop(0)
+    def _stage_worst(sid: int):
+        cand = np.flatnonzero((sid_arr == sid) & (chunk_arr >= 0))
+        if cand.size == 0:
+            return None
+        etas = remaining[cand] / np.maximum(rate_eff[cand], _EPS)
+        for j in np.argsort(-etas):
+            ch = int(chunk_arr[cand[j]])
+            if replicas.get((sid, ch), 1) < 2:
+                return float(etas[j]), ch
+        return None
+
+    def try_speculate(ci: int) -> bool:
+        """Idle conn + empty queue: duplicate the worst-ETA in-flight chunk
+        on this stage; first finisher wins, loser's bytes are billed."""
+        sid = int(sid_arr[ci])
+        if sid in spec_cache:
+            worst = spec_cache[sid]
         else:
-            q = ready.get((c.path_id, c.hop), [])
-            if not q:
-                if speculative:
-                    return _speculate(ci)
-                return False
-            ch = q.pop(0)
-        c.chunk = ch
-        c.remaining = chunk_gbit
-        if c.hop > 0:
-            relay_occupancy[(c.path_id, c.hop)] = (
-                relay_occupancy.get((c.path_id, c.hop), 0) - 1
-            )
+            worst = _stage_worst(sid)
+            spec_cache[sid] = worst
+        if worst is None:
+            return False
+        eta, ch = worst
+        if eta < 2.0 * (chunk_gbit / max(rate_eff[ci], _EPS)):
+            return False
+        replicas[(sid, ch)] = replicas.get((sid, ch), 1) + 1
+        chunk_arr[ci] = ch
+        remaining[ci] = chunk_gbit
+        spec_cache.pop(sid, None)
         return True
 
-    def _speculate(ci: int) -> bool:
-        """Idle conn + empty queue: duplicate the worst-ETA in-flight chunk
-        on this (path, hop); first finisher wins, loser's bytes are wasted
-        egress (billed)."""
-        c = conns[ci]
-        worst = None
-        worst_eta = 0.0
-        for cj in active_set:
-            o = conns[cj]
-            if cj == ci or o.chunk < 0:
-                continue
-            if (o.path_id, o.hop) != (c.path_id, c.hop):
-                continue
-            if replicas.get((o.path_id, o.hop, o.chunk), 1) >= 2:
-                continue
-            eta = o.remaining / max(o.rate_nominal * o.mult, _EPS)
-            if eta > worst_eta:
-                worst_eta, worst = eta, o.chunk
-        own_eta = chunk_gbit / max(c.rate_nominal * c.mult, _EPS)
-        if worst is None or worst_eta < 2.0 * own_eta:
+    def try_refill(ci: int) -> bool:
+        sid = sid_arr[ci]
+        nsid = next_sid[ci]
+        # flow control: downstream relay buffer full -> stall
+        if nsid >= 0 and relay_occ[nsid] >= relay_buffer_chunks:
             return False
-        key = (c.path_id, c.hop, worst)
-        replicas[key] = replicas.get(key, 1) + 1
-        c.chunk = worst
-        c.remaining = chunk_gbit
+        if is_static_first[ci]:
+            q = static_assign.get(ci)
+            if not q:
+                return False
+        else:
+            q = ready[sid]
+            if not q:
+                if speculative and not (dispatch == "static" and stage_hop[sid] == 0):
+                    return try_speculate(ci)
+                return False
+        ch = q.popleft()
+        chunk_arr[ci] = ch
+        remaining[ci] = chunk_gbit
+        if stage_hop[sid] > 0:
+            relay_occ[sid] -= 1
+        spec_cache.pop(int(sid), None)  # stage gained an in-flight chunk
         return True
 
     max_events = n_chunks * 6 * max(path_len.values()) + 10000
-    idle_set = set(range(len(conns)))
-    active_set: set[int] = set()
+    events = 0
+    last_active = None
+    rates = None
     for _ in range(max_events):
-        progressed = True
-        while progressed:  # cascade refills (buffer drains unlock upstream)
+        # cascade refills (buffer drains unlock upstream); candidate filter
+        # keeps each pass O(conns with plausibly available work)
+        while True:
             progressed = False
-            for ci in list(idle_set):
-                if refill(ci):
-                    idle_set.discard(ci)
-                    active_set.add(ci)
+            spec_cache.clear()
+            idle = chunk_arr < 0
+            if not idle.any():
+                break
+            queue_work = np.fromiter(
+                (len(q) > 0 for q in ready), dtype=bool, count=n_stages
+            )[sid_arr]
+            cand_mask = idle & queue_work
+            if dispatch == "static":
+                static_work = np.zeros(nc, dtype=bool)
+                for ci, q in static_assign.items():
+                    if q:
+                        static_work[ci] = True
+                cand_mask = (idle & static_work) | (cand_mask & ~is_static_first)
+            if speculative:
+                inflight = np.bincount(
+                    sid_arr[chunk_arr >= 0], minlength=n_stages
+                ) > 0
+                spec_mask = idle & inflight[sid_arr] & ~queue_work
+                if dispatch == "static":
+                    spec_mask &= ~is_static_first
+                cand_mask |= spec_mask
+            for ci in np.flatnonzero(cand_mask):
+                if chunk_arr[ci] < 0 and try_refill(ci):
                     progressed = True
-        active = [ci for ci in active_set if conns[ci].chunk >= 0]
-        # speculation losers were cancelled in place; resync the sets
-        for ci in list(active_set):
-            if conns[ci].chunk < 0:
-                active_set.discard(ci)
-                idle_set.add(ci)
-        if not active:
+            if not progressed:
+                break
+        active_ix = np.flatnonzero(chunk_arr >= 0)
+        if active_ix.size == 0:
             break
-        rates = _maxmin_rates(conns, active, vm_eg_cap, vm_in_cap)
-        # next completion
-        dt = min(
-            conns[ci].remaining / max(rates[ci], _EPS) for ci in active
-        )
-        dt = max(dt, 1e-9)
+        events += 1
+        # max-min rates depend only on the active membership: reuse if same
+        if last_active is None or not np.array_equal(active_ix, last_active):
+            rates = _maxmin_rates_arr(
+                rate_eff[active_ix], src_vm[active_ix], dst_vm[active_ix],
+                vm_eg, vm_in,
+            )
+            last_active = active_ix
+        safe_rates = np.maximum(rates, _EPS)
+        dt = max(float((remaining[active_ix] / safe_rates).min()), 1e-9)
         now += dt
-        for ci in active:
-            c = conns[ci]
-            moved = rates[ci] * dt
-            c.remaining -= moved
-            edge_gbit[c.edge] = edge_gbit.get(c.edge, 0.0) + moved
-            vm_busy_out[c.src_vm] += moved
-            vm_busy_in[c.dst_vm] += moved
-            if c.remaining <= 1e-9:
-                ch = c.chunk
-                c.chunk = -1
-                c.remaining = 0.0
-                key = (c.path_id, c.hop, ch)
-                if key in done_hops:
-                    continue  # a replica already finished this hop
-                done_hops.add(key)
-                if replicas.get(key, 1) > 1:
-                    for o in conns:  # cancel the losing replica
-                        if o.chunk == ch and (o.path_id, o.hop) == (c.path_id, c.hop):
-                            o.chunk = -1
-                            o.remaining = 0.0
-                if c.hop + 1 < path_len[c.path_id]:
-                    ready.setdefault((c.path_id, c.hop + 1), []).append(ch)
-                    relay_occupancy[(c.path_id, c.hop + 1)] = (
-                        relay_occupancy.get((c.path_id, c.hop + 1), 0) + 1
-                    )
-                else:
-                    delivered += 1
-        for ci in active:
-            if conns[ci].chunk < 0:
-                active_set.discard(ci)
-                idle_set.add(ci)
+        moved = rates * dt
+        remaining[active_ix] -= moved
+        edge_gbit_vec += np.bincount(
+            edge_id[active_ix], weights=moved, minlength=len(edges_used)
+        )
+        vm_busy_out += np.bincount(
+            src_vm[active_ix], weights=moved, minlength=vm_busy_out.shape[0]
+        )
+        vm_busy_in += np.bincount(
+            dst_vm[active_ix], weights=moved, minlength=vm_busy_in.shape[0]
+        )
+        completed = active_ix[remaining[active_ix] <= 1e-9]
+        for ci in completed:
+            ch = int(chunk_arr[ci])
+            if ch < 0:
+                continue  # cancelled earlier in this event by a replica win
+            sid = int(sid_arr[ci])
+            chunk_arr[ci] = -1
+            remaining[ci] = 0.0
+            key = (sid, ch)
+            if key in done_hops:
+                continue  # a replica already finished this hop
+            done_hops.add(key)
+            if replicas.get(key, 1) > 1:
+                losers = np.flatnonzero((sid_arr == sid) & (chunk_arr == ch))
+                chunk_arr[losers] = -1
+                remaining[losers] = 0.0
+            nsid = int(stage_next[sid])
+            if nsid >= 0:
+                ready[nsid].append(ch)
+                relay_occ[nsid] += 1
+            else:
+                delivered += 1
         if delivered >= n_chunks:
             break
 
     time_s = max(now, 1e-9)
     tput = delivered * chunk_gbit / time_s
-    per_edge_gb = {e: g / GBIT_PER_GB for e, g in edge_gbit.items()}
+    per_edge_gb = {e: edge_gbit_vec[i] / GBIT_PER_GB
+                   for e, i in edge_index.items() if edge_gbit_vec[i] > 0}
     egress_cost = sum(
         gb * top.price_egress[e] for e, gb in per_edge_gb.items()
     )
@@ -360,14 +417,10 @@ def simulate_transfer(
         cap = (vm_eg_cap[v] if vm_busy_out[v] >= vm_busy_in[v] else vm_in_cap[v])
         u = used / max(cap * time_s, _EPS)
         util[loc] = max(util.get(loc, 0.0), u)
-    for (a, b), gbit in edge_gbit.items():
+    for (a, b), gb in per_edge_gb.items():
         loc = "source_link" if a == src_r else "overlay_link"
-        m_edge = max(int(round(plan.M[a, b])), 1)
-        eff = conn_efficiency(
-            m_edge / max(plan.N[a] * plan.N[b], 1), top.limit_conn
-        )
         cap = top.tput[a, b] * max(plan.N[a], 1)
-        u = gbit / max(cap * time_s, _EPS)
+        u = gb * GBIT_PER_GB / max(cap * time_s, _EPS)
         util[loc] = max(util.get(loc, 0.0), u)
     bottlenecks = [k for k, v in util.items() if v >= util_threshold]
 
@@ -382,5 +435,6 @@ def simulate_transfer(
         utilization=util,
         bottlenecks=bottlenecks,
         volume_gb=plan.volume_gb,
+        events=events,
     )
     return res

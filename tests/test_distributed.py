@@ -31,12 +31,14 @@ def test_ring_allreduce_matches_mean():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.transfer.collective import ring_allreduce_tree
-        mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:
+            from jax.experimental.shard_map import shard_map
+        mesh = jax.make_mesh((4, 2), ("pod", "data"))
         def body(x):
             return ring_allreduce_tree({"g": x[0]}, "pod", [0, 2, 1, 3])["g"][None]
-        h = jax.shard_map(body, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-                          axis_names=frozenset({"pod"}), check_vma=False)
+        h = shard_map(body, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                      check_rep=False)
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 33))
         got = np.asarray(jax.jit(h)(x))
         want = np.broadcast_to(np.mean(np.asarray(x), 0, keepdims=True), x.shape)
@@ -73,8 +75,7 @@ def test_sharded_train_step_matches_single_device():
         step0 = jax.jit(make_train_step(cfg, rules0, OptConfig()))
         p0, o0, m0 = step0(params, opt, batch)
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
         rules = ShardingRules(batch=("data",), fsdp="data", tp="model")
         set_mesh(mesh)
         pshard = make_param_shardings(mesh, rules, abstract_params(cfg))

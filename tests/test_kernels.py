@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback sweeps instead
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
 from repro.kernels.flash_attention.ops import flash_attention

@@ -1,7 +1,11 @@
 """Hypothesis property tests on the planner's invariants."""
 
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback sweeps instead
+    from _hypothesis_shim import HealthCheck, given, settings, strategies as st
 
 from repro.core import Planner, toy_topology
 from repro.core.solver.bnb import solve_milp

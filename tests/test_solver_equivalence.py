@@ -1,0 +1,167 @@
+"""Equivalence pins for the planner fast path.
+
+Three layers, matching the optimization stack:
+  * LPStructure's vectorized assembly is bit-identical to the original
+    row-loop assembly (build_lp_reference);
+  * the batched solvers (numpy stacked-LAPACK engine and the vmapped JAX
+    IPM) match the sequential reference IPM on Skyplane LPs, including the
+    pinned-variable RHS-shift batches of the round-down pipeline;
+  * §5.1.3 (paper): relaxed round-down is within 1% of exact B&B on pruned
+    subgraphs, and the batched round-down pipeline returns the sequential
+    path's plans.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Planner, default_topology, milp, toy_topology
+from repro.core.solver.bnb import solve_milp, solve_milp_batched
+from repro.core.solver.ipm import solve_lp
+from repro.core.solver.ipm_batch import solve_lp_batched as solve_lp_batched_np
+from repro.core.solver.ipm_jax import solve_lp_batched as solve_lp_batched_jax
+
+
+# ------------------------------------------------------- assembly equivalence
+@pytest.mark.parametrize("seed", range(4))
+def test_vectorized_assembly_matches_reference(seed):
+    top = toy_topology(n=6, seed=seed)
+    rng = np.random.default_rng(seed)
+    e = len(top.edge_list(0, 1))
+    nx = 2 * e + 6
+    cut = np.zeros(nx)
+    cut[e + 2] = 1.0
+    variants = [
+        dict(),
+        dict(fixed_n=rng.integers(0, 3, 6).astype(float)),
+        dict(fixed_n=np.full(6, 2.0),
+             fixed_m=rng.integers(0, 5, (6, 6)).astype(float)),
+        dict(extra_ub=[(cut, 1.5)]),
+        dict(fixed_n=np.full(6, 1.0), extra_ub=[(cut, 0.5)]),
+    ]
+    for kwargs in variants:
+        fast = milp.build_lp(top, 0, 1, 3.0, **kwargs)
+        ref = milp.build_lp_reference(top, 0, 1, 3.0, **kwargs)
+        for field in ("c", "A_ub", "b_ub", "A_eq", "b_eq", "integer_mask"):
+            np.testing.assert_array_equal(
+                getattr(fast, field), getattr(ref, field), err_msg=field
+            )
+        assert fast.trivially_infeasible == ref.trivially_infeasible
+        assert (fast.row_4c, fast.row_4d) == (ref.row_4c, ref.row_4d)
+        x = rng.uniform(size=fast.c.shape[0])
+        for a, b in zip(fast.split(x), ref.split(x)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_structure_cache_reused():
+    top = toy_topology(n=5, seed=0)
+    s1 = milp.structure(top, 0, 1)
+    s2 = milp.structure(top, 0, 1)
+    assert s1 is s2
+    assert milp.structure(top, 0, 2) is not s1
+
+
+# ------------------------------------------------- batched engines vs the IPM
+def _goal_batch(top, goals):
+    lp = milp.build_lp(top, 0, 1, float(goals[0]))
+    b = np.tile(lp.b_ub[None, :], (len(goals), 1))
+    b[:, lp.row_4c] = -goals
+    b[:, lp.row_4d] = -goals
+    return lp, b
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax"])
+def test_batched_engine_matches_sequential_on_goal_sweep(engine):
+    top = toy_topology(n=6, seed=4)
+    goals = np.array([0.5, 1.5, 2.5, 3.5])
+    lp, b = _goal_batch(top, goals)
+    solver = solve_lp_batched_np if engine == "numpy" else solve_lp_batched_jax
+    xs, funs, ok = solver(lp.c, lp.A_ub, b, lp.A_eq, lp.b_eq)
+    for i, g in enumerate(goals):
+        ref = solve_lp(lp.c, lp.A_ub, np.asarray(b[i]), lp.A_eq, lp.b_eq)
+        if ref.ok and ok[i]:
+            assert funs[i] == pytest.approx(ref.fun, rel=1e-6, abs=1e-8)
+        else:
+            # engines may certify different borderline samples, but never
+            # disagree on a sample both consider solved
+            assert not (ok[i] and ref.ok)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax"])
+def test_batched_engine_matches_sequential_on_pinned_shifts(engine):
+    """The round-down refit batches: same matrices, per-sample RHS shifts
+    from pinned N vectors (milp.LPStructure.batch_b_ub)."""
+    top = toy_topology(n=6, seed=2)
+    struct = milp.structure(top, 0, 1)
+    pat = struct.pin_pattern(True, False)
+    n_vecs = np.array([
+        [2.0, 2.0, 1.0, 1.0, 1.0, 1.0],
+        [2.0, 2.0, 0.0, 2.0, 0.0, 1.0],
+        [1.0, 1.0, 1.0, 0.0, 0.0, 0.0],
+    ])
+    b, triv = struct.batch_b_ub(pat, np.full(3, 0.8), n_vecs)
+    assert not triv.any()
+    solver = solve_lp_batched_np if engine == "numpy" else solve_lp_batched_jax
+    xs, funs, ok = solver(
+        pat.c_free, pat.A_ub_free, b, pat.A_eq_free, struct.b_eq[pat.keep_eq]
+    )
+    for i in range(3):
+        lp = struct.lp(0.8, fixed_n=n_vecs[i])
+        ref = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+        assert ok[i] == ref.ok
+        if ref.ok:
+            assert funs[i] == pytest.approx(ref.fun, rel=1e-6, abs=1e-8)
+
+
+# ------------------------------------------- round-down pipeline equivalence
+def test_batched_round_down_matches_sequential_plans():
+    top = default_topology()
+    planner = Planner(top)
+    src, dst = "aws:us-east-1", "gcp:europe-west4"
+    fast = planner.pareto_frontier(src, dst, 10.0, n_samples=6, backend="jax")
+    slow = planner.pareto_frontier(src, dst, 10.0, n_samples=6)
+    assert len(fast) == len(slow)
+    for a, b in zip(fast, slow):
+        assert a.tput_goal == pytest.approx(b.tput_goal)
+        assert a.cost_per_gb == pytest.approx(b.cost_per_gb, abs=1e-6)
+        np.testing.assert_array_equal(a.plan.N, b.plan.N)
+        np.testing.assert_array_equal(a.plan.M, b.plan.M)
+
+
+def test_batched_cost_min_matches_sequential():
+    top = default_topology()
+    planner = Planner(top)
+    src, dst = "azure:canadacentral", "gcp:asia-northeast1"
+    a = planner.plan_cost_min(src, dst, 20.0, 50.0, backend="jax")
+    b = planner.plan_cost_min(src, dst, 20.0, 50.0)
+    assert a.cost_per_gb == pytest.approx(b.cost_per_gb, abs=1e-6)
+    assert a.validate() == []
+
+
+def test_infeasible_goal_batched_matches_sequential():
+    top = toy_topology(n=5, seed=1)
+    batched = solve_milp_batched(top, 0, 1, np.array([1e6]))[0]
+    sequential = solve_milp(top, 0, 1, 1e6, mode="relaxed")
+    assert not batched.ok and not sequential.ok
+
+
+# ------------------------------------------------------- §5.1.3 on subgraphs
+@pytest.mark.parametrize(
+    "src,dst",
+    [
+        ("aws:us-east-1", "aws:ap-southeast-2"),
+        ("azure:canadacentral", "gcp:asia-northeast1"),
+        ("gcp:us-central1", "azure:koreacentral"),
+    ],
+)
+def test_relaxed_within_one_percent_of_exact_on_pruned_subgraphs(src, dst):
+    """Paper §5.1.3: round-down lands within 1% of the exact MILP, measured
+    on the planner's own pruned candidate subgraphs."""
+    planner = Planner(default_topology(), max_relays=4)
+    sub, s, t, _ = planner._prune(src, dst)
+    hi = planner.max_throughput(src, dst)
+    goal = hi * 0.4
+    rel = solve_milp(sub, s, t, goal, mode="relaxed")
+    ex = solve_milp(sub, s, t, goal, mode="exact")
+    assert rel.ok and ex.ok
+    assert rel.objective <= ex.objective * 1.01 + 1e-9
+    assert ex.objective >= ex.lp_objective - 1e-9
