@@ -1,0 +1,69 @@
+"""Soft benchmark regression check for CI.
+
+    python -m benchmarks.compare NEW.json [BASELINE.json]
+
+Diffs a ``benchmarks.run --json`` snapshot against a recorded baseline
+(default: BENCH_planner_hotpath.json at the repo root). Per-metric wall
+times are compared where both sides have them; large regressions print
+``::warning::`` annotations (rendered inline by GitHub Actions) but the
+exit code is always 0 — shared CI runners are far too noisy for a hard
+perf gate, the signal is the warning trail across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+# shared-runner noise floor: only flag slowdowns beyond this factor, and
+# ignore sub-millisecond metrics entirely (pure timer jitter)
+SLOWDOWN_FACTOR = 2.0
+MIN_US = 1000.0
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        snap = json.load(fh)
+    return {m["name"]: m for m in snap.get("metrics", [])}
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.compare NEW.json [BASELINE.json]")
+        return 0
+    new_path = argv[0]
+    base_path = argv[1] if len(argv) > 1 else str(
+        Path(__file__).resolve().parent.parent / "BENCH_planner_hotpath.json"
+    )
+    if not Path(new_path).exists() or not Path(base_path).exists():
+        print(f"::warning::benchmark snapshot missing "
+              f"({new_path} or {base_path}); skipping comparison")
+        return 0
+    new, base = load(new_path), load(base_path)
+    shared = sorted(set(new) & set(base))
+    print(f"comparing {len(shared)} shared metrics "
+          f"({new_path} vs {base_path})")
+    regressions = 0
+    for name in shared:
+        b, n = base[name]["us_per_call"], new[name]["us_per_call"]
+        if b < MIN_US or n <= 0:
+            continue
+        ratio = n / b
+        flag = ""
+        if ratio > SLOWDOWN_FACTOR:
+            regressions += 1
+            flag = " <-- REGRESSION?"
+            print(f"::warning title=bench {name}::"
+                  f"{b/1e3:.1f}ms -> {n/1e3:.1f}ms ({ratio:.1f}x)")
+        print(f"{name}: {b/1e3:.1f}ms -> {n/1e3:.1f}ms ({ratio:.2f}x){flag}")
+    only_new = sorted(set(new) - set(base))
+    if only_new:
+        print(f"{len(only_new)} new metrics (no baseline): "
+              + ", ".join(only_new[:12]) + ("..." if len(only_new) > 12 else ""))
+    print(f"done: {regressions} soft regression(s) flagged (exit 0 always)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -27,6 +27,7 @@ from . import (  # noqa: F401
     fig9_microbench,
     fig10_overlay_vs_vms,
     flowsim_bench,
+    multijob_bench,
     roofline,
     solver_bench,
     table2_academic,
@@ -42,6 +43,7 @@ MODULES = {
     "table2": table2_academic,
     "solver": solver_bench,
     "flowsim": flowsim_bench,
+    "multijob": multijob_bench,
     "roofline": roofline,
 }
 

@@ -1,0 +1,103 @@
+"""Fault-tolerant multi-job transfers: three tenants share the data plane,
+a gateway dies mid-transfer, and every byte still lands — on both layers:
+
+  1. the fluid multi-job simulator + TransferService: a VM failure and a
+     link brown-out trigger failure-driven re-planning of the remaining
+     volume on the degraded topology (cached-structure refit, no LP
+     re-assembly);
+  2. the real-bytes gateway chain: a FaultInjector kills a hop worker (and
+     corrupts a payload) mid-transfer; chunk-level checksummed retry
+     finishes with zero data loss and never re-sends a verified byte.
+
+    PYTHONPATH=src python examples/fault_tolerant_transfer.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import Planner, default_topology, toy_topology  # noqa: E402
+from repro.transfer import (  # noqa: E402
+    BlobStore,
+    FaultInjector,
+    LinkDegrade,
+    TransferRequest,
+    TransferService,
+    VMFailure,
+    transfer_objects,
+)
+
+
+def control_plane_demo():
+    print("=== control plane: 3 jobs, link brown-out + gateway-VM kill ===")
+    top = default_topology()
+    src, dst, src2 = "aws:us-west-2", "aws:eu-central-1", "gcp:us-central1"
+    svc = TransferService(top, backend="jax", max_relays=6)
+    svc.submit(TransferRequest("alpha", src, dst, 4.0, 4.0))
+    svc.submit(TransferRequest("bravo", src, dst, 4.0, 4.0, arrival_s=1.0))
+    svc.submit(TransferRequest("charlie", src2, dst, 4.0, 4.0))
+
+    s, d = top.index(src), top.index(dst)
+    report = svc.run(faults=[
+        LinkDegrade(t_s=3.0, src=s, dst=d, factor=0.3),  # brown-out
+        VMFailure(t_s=5.0, job=0, region=s, count=1),    # gateway dies
+    ])
+    for j in report.jobs:
+        print(f"  {j.request.name:8s} {j.status:7s} "
+              f"{j.delivered_gb:5.2f} GB delivered, "
+              f"{j.realized_tput_gbps:5.2f} Gbps realized "
+              f"(planned {j.planned_tput_gbps:5.2f}), "
+              f"${j.realized_cost:.3f} vs ${j.planned_cost:.3f} planned, "
+              f"{len(j.replans)} re-plan(s)")
+    for r in report.replans:
+        print(f"    re-plan {r.job} @t={r.at_s:.1f}s: "
+              f"{r.remaining_gb:.2f} GB remaining re-routed in "
+              f"{r.latency_s * 1e3:.0f} ms "
+              f"({r.structure_builds} LP re-assemblies)")
+    assert report.all_done, "a job did not survive the fault schedule"
+    assert report.replans and all(r.reused_structure for r in report.replans)
+    print(f"  all jobs done in {report.time_s:.1f}s "
+          f"across {report.segments} segments\n")
+
+
+def data_plane_demo():
+    print("=== data plane: real bytes through a killed gateway worker ===")
+    top = toy_topology(n=5, seed=2)
+    plan = Planner(top, max_relays=3).plan_cost_min("toy:r0", "toy:r1", 2.0, 0.02)
+    rng = np.random.default_rng(7)
+    src_store, dst_store = BlobStore(), BlobStore()
+    keys = []
+    for i in range(3):
+        key = f"ckpt/shard_{i:02d}.bin"
+        src_store.put(key, rng.bytes(2_000_000 + 131 * i))
+        keys.append(key)
+
+    injector = FaultInjector(
+        kill_worker_after={(0, 0): 3},  # first-hop worker dies on chunk #4
+        corrupt_chunks={f"{keys[1]}#2"},  # one payload corrupted in flight
+    )
+    rep = transfer_objects(
+        plan, src_store, dst_store, keys,
+        chunk_bytes=1 << 18, workers_per_hop=3, fault_injector=injector,
+    )
+    print(f"  {rep.chunks} chunks, {rep.faults_injected} faults injected, "
+          f"{rep.retried_chunks} chunk retries, "
+          f"{rep.duplicate_chunks} duplicates discarded")
+    print(f"  checksum_failures={rep.checksum_failures} "
+          f"chunks_missing={rep.chunks_missing}")
+    assert rep.checksum_failures == 0 and rep.chunks_missing == 0
+    for key in keys:
+        assert dst_store.get(key) == src_store.get(key)
+    print("  every object byte-identical at the destination: zero data loss")
+
+
+def main():
+    control_plane_demo()
+    data_plane_demo()
+
+
+if __name__ == "__main__":
+    main()

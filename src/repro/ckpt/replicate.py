@@ -12,7 +12,12 @@ from pathlib import Path
 
 from repro.core.planner import Planner
 from repro.core.topology import Topology
-from repro.transfer.gateway import BlobStore, DirStore, GatewayReport, transfer_objects
+from repro.transfer.gateway import (
+    DirStore,
+    GatewayReport,
+    ObjectStore,
+    transfer_objects,
+)
 
 
 @dataclasses.dataclass
@@ -30,7 +35,7 @@ def replicate_checkpoint(
     top: Topology,
     src_region: str,
     dst_regions: list[str],
-    dst_stores: dict[str, BlobStore],
+    dst_stores: dict[str, ObjectStore],
     *,
     cost_ceiling_per_gb: float | None = None,
     tput_floor_gbps: float | None = None,

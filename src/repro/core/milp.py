@@ -57,6 +57,11 @@ from .topology import GBIT_PER_GB, Topology
 _ZERO_ROW_TOL = 1e-12
 _RHS_TOL = 1e-9
 
+# Running count of LPStructure assemblies (the O(rows*cols) construction).
+# Re-planning on a degraded topology must be a pure cache hit: tests snapshot
+# this counter around a re-plan and assert it did not move.
+N_STRUCT_BUILDS = 0
+
 
 @dataclasses.dataclass
 class LPData:
@@ -143,6 +148,8 @@ class LPStructure:
     """Vectorized, cached assembly of Eq. 4a-4j for one (top, src, dst)."""
 
     def __init__(self, top: Topology, src: int, dst: int):
+        global N_STRUCT_BUILDS
+        N_STRUCT_BUILDS += 1
         self.top = top
         self.src = src
         self.dst = dst
@@ -446,9 +453,14 @@ def build_lp_reference(
     edges = top.edge_list(src, dst)
     e = len(edges)
     nx = 2 * e + v
-    iF = lambda k: k
-    iN = lambda r: e + r
-    iM = lambda k: e + v + k
+    def iF(k):
+        return k
+
+    def iN(r):
+        return e + r
+
+    def iM(k):
+        return e + v + k
 
     # ---- objective: $/s of the running transfer (Eq. 4a without the constant)
     c = np.zeros(nx)

@@ -67,6 +67,13 @@ class TransferPlan:
     def num_vms(self) -> int:
         return int(self.N.sum())
 
+    def with_volume(self, volume_gb: float) -> "TransferPlan":
+        """The same allocation, re-scoped to a different volume — how the
+        transfer service carries a plan over to the *remaining* bytes of a
+        partially completed job (costs and transfer time rescale; F/N/M and
+        feasibility are untouched)."""
+        return dataclasses.replace(self, volume_gb=float(volume_gb))
+
     # ------------------------------------------------------------- valididity
     def validate(self, tol: float = _TOL) -> list[str]:
         """Returns a list of violated-constraint descriptions (empty = valid)."""

@@ -37,7 +37,7 @@ from . import milp
 from .plan import TransferPlan
 from .solver.bnb import solve_milp, solve_milp_batched
 from .solver.ipm import solve_lp
-from .topology import GBIT_PER_GB, Topology
+from .topology import Topology
 
 
 @dataclasses.dataclass
@@ -61,11 +61,30 @@ class Planner:
         self._prune_cache: dict[tuple[str, str], tuple] = {}
 
     # ----------------------------------------------------------------- bounds
-    def max_throughput(self, src: str, dst: str) -> float:
-        """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit."""
+    def max_throughput(
+        self,
+        src: str,
+        dst: str,
+        *,
+        degraded_links: dict[tuple[int, int], float] | None = None,
+        vm_caps: dict[int, float] | None = None,
+    ) -> float:
+        """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit.
+
+        degraded_links / vm_caps (full-topology region indices) constrain
+        the same cached LPStructure — see ``plan_cost_min``."""
         sub, s, t, keep = self._prune(src, dst)
         struct = milp.structure(sub, s, t)
-        lp = struct.lp(0.0, fixed_n=np.full(sub.num_regions, float(sub.limit_vm)))
+        cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
+        fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
+        if vm_caps:
+            inv = {full: i for i, full in enumerate(keep)}
+            for r, cap in vm_caps.items():
+                if r in inv:
+                    fixed_n[inv[r]] = min(fixed_n[inv[r]], float(cap))
+        lp = struct.lp(0.0, fixed_n=fixed_n, extra_ub=cuts or None)
+        if lp.trivially_infeasible:
+            return 0.0
         # maximize source egress == minimize -sum F_{s,*}
         c = struct.outflow_c(struct.pin_pattern(True, False))
         res = solve_lp(c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
@@ -95,11 +114,27 @@ class Planner:
         *,
         mode: str | None = None,
         backend: str = "numpy",
+        degraded_links: dict[tuple[int, int], float] | None = None,
+        vm_caps: dict[int, float] | None = None,
     ) -> TransferPlan:
-        """Paper mode 1: minimize cost subject to a throughput floor."""
+        """Paper mode 1: minimize cost subject to a throughput floor.
+
+        degraded_links maps a full-topology (src_region, dst_region) index
+        pair to the fraction of grid capacity the link still has; each
+        becomes a tightened 4b row (F_e <= phi * tput_e / limit_conn * M_e)
+        on the *cached* LPStructure. vm_caps maps a region index to a VM
+        ceiling below the service limit (an unhealthy region; 0 excludes
+        it). This is the degraded-topology re-planning hook of the
+        fault-tolerant TransferService: nothing is re-assembled, the cuts
+        ride on the memoized structure as extra rows.
+        """
         sub, s, t, keep = self._prune(src, dst)
+        cuts = None
+        if degraded_links or vm_caps:
+            struct = milp.structure(sub, s, t)
+            cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
         res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode,
-                         backend=backend)
+                         backend=backend, extra_ub=cuts)
         return self._lift(sub, keep, src, dst, tput_goal_gbps, volume_gb, res)
 
     def plan_tput_max(
@@ -215,6 +250,41 @@ class Planner:
         return out
 
     # -------------------------------------------------------------- internals
+    @staticmethod
+    def _degrade_cuts(
+        struct,
+        keep: list[int],
+        degraded_links: dict[tuple[int, int], float] | None,
+        vm_caps: dict[int, float] | None,
+    ) -> list[tuple[np.ndarray, float]]:
+        """Degraded-topology constraints as extra_ub rows of ``struct``.
+
+        Indices in the input dicts are full-topology; they are mapped into
+        the pruned structure's space (entries whose regions were pruned away
+        are irrelevant and dropped). Returns [] when nothing applies."""
+        inv = {full: i for i, full in enumerate(keep)}
+        e, v = struct.n_edges, struct.num_regions
+        edge_ix = {edge: k for k, edge in enumerate(struct.edges)}
+        cuts: list[tuple[np.ndarray, float]] = []
+        for (a, b), phi in (degraded_links or {}).items():
+            sa, sb = inv.get(a), inv.get(b)
+            if sa is None or sb is None or (sa, sb) not in edge_ix:
+                continue
+            k = edge_ix[(sa, sb)]
+            row = np.zeros(struct.nx)
+            row[k] = 1.0  # F_e <= phi * tput_e / limit_conn * M_e
+            row[e + v + k] = -float(phi) * struct.top.tput[sa, sb] \
+                / struct.top.limit_conn
+            cuts.append((row, 0.0))
+        for r, cap in (vm_caps or {}).items():
+            sr = inv.get(r)
+            if sr is None or float(cap) >= struct.top.limit_vm:
+                continue
+            row = np.zeros(struct.nx)
+            row[e + sr] = 1.0  # N_r <= cap (unhealthy region)
+            cuts.append((row, float(cap)))
+        return cuts
+
     def _prune(self, src: str, dst: str):
         """Pruned candidate subgraph for (src, dst), memoized so the LP
         structures cached on the subgraph survive across planner calls."""

@@ -312,19 +312,30 @@ def solve_milp(
     mode: str = "relaxed",
     max_nodes: int = 60,
     backend: str = "numpy",
+    extra_ub=None,
 ) -> MILPResult:
     """Solve one (src, dst, tput_goal) instance.
 
     backend="jax" routes the relaxed round-down through the batched JAX IPM
     (one-sample batches; amortized across calls by the jit cache). The exact
     branch & bound always runs on the numpy reference solver.
+
+    extra_ub: extra inequality rows in the full [F, N, M] variable space,
+    threaded through every stage of the round-down (and merged with the
+    B&B's own bound cuts in exact mode). This is how degraded-topology
+    re-planning constrains the cached LPStructure — tightened 4b rows for
+    degraded links, N caps for unhealthy regions — without re-assembling
+    anything. Constrained solves run on the sequential numpy path (the
+    batched pipeline shares matrices across samples and does not take
+    per-instance rows).
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r} (use 'numpy' or 'jax')")
-    if backend == "jax" and mode == "relaxed":
+    if backend == "jax" and mode == "relaxed" and not extra_ub:
         return solve_milp_batched(top, src, dst, np.array([tput_goal]))[0]
+    base_cuts = list(extra_ub) if extra_ub else None
     struct = milp.structure(top, src, dst)
-    lp = struct.lp(tput_goal)
+    lp = struct.lp(tput_goal, extra_ub=base_cuts)
     root = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
     if not root.ok:
         return _empty(top, root.status)
@@ -345,7 +356,7 @@ def solve_milp(
         )
 
     if mode == "relaxed":
-        out = round_down(n_frac)
+        out = round_down(n_frac, base_cuts)
         return out if out is not None else _empty(top, "infeasible", root.fun)
 
     if mode != "exact":
@@ -360,7 +371,7 @@ def solve_milp(
         row[e + r] = 1.0
         return row
 
-    best: MILPResult | None = round_down(n_frac)  # incumbent
+    best: MILPResult | None = round_down(n_frac, base_cuts)  # incumbent
     best_obj = best.objective if best is not None else math.inf
 
     counter = itertools.count()
@@ -371,7 +382,7 @@ def solve_milp(
         if bound >= best_obj - 1e-9:
             continue
         nodes += 1
-        extra = []
+        extra = list(base_cuts) if base_cuts else []
         for r, sense, val in cuts:
             col = n_col(r)
             if sense == "<=":

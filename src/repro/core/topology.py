@@ -13,7 +13,7 @@ price ($/s) and the per-region VM service limit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 

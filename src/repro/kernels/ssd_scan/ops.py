@@ -20,8 +20,9 @@ def ssd_scan(xh, dtv, a, bm, cm, *, chunk: int = 256):
     chunk = min(chunk, s_orig)
     pad = (-s_orig) % chunk
     if pad:
-        zp = lambda t, ax: jnp.pad(t, [(0, pad) if i == ax else (0, 0)
-                                       for i in range(t.ndim)])
+        def zp(t, ax):
+            return jnp.pad(t, [(0, pad) if i == ax else (0, 0)
+                               for i in range(t.ndim)])
         xh, dtv = zp(xh, 1), zp(dtv, 1)
         bm, cm = zp(bm, 1), zp(cm, 1)
     x = jnp.moveaxis(xh, 2, 1)  # [B,H,S,P]

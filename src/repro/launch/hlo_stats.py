@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 # v5e-class hardware constants (per brief)
 PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip

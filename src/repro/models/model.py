@@ -18,9 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.sharding.specs import ShardingRules, shard_constraint
-from . import attention as attn_mod
 from . import params as P
-from . import ssm as ssm_mod
 from .layers import embed, embed_defs, rmsnorm, rmsnorm_def, unembed_matrix
 from .transformer import Aux, encoder_defs, encoder_stack, run_stack, stack_defs
 

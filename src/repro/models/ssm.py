@@ -76,7 +76,8 @@ def ssd_chunked(x, dt, a, B, C, chunk: int, *, rules=None, unroll=False):
     S_orig = S
     pad = (-S) % chunk
     if pad:
-        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def zpad(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
         S = S + pad
     nc = S // chunk

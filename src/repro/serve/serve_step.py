@@ -5,7 +5,6 @@ dry-run cells lower.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -163,7 +163,7 @@ def _is_logical(s) -> bool:
 
 def make_param_shardings(mesh: Mesh, rules: ShardingRules, abstract_tree):
     """pytree of ParamDef -> pytree of NamedSharding (shape-aware)."""
-    from repro.models.params import ParamDef, is_def
+    from repro.models.params import is_def
 
     rules = rules.filter_for_mesh(mesh)
     return jax.tree.map(

@@ -26,7 +26,8 @@ class OptConfig:
 
 
 def init_opt_state(params) -> dict:
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -1,4 +1,31 @@
-from .chunk import Chunk, chunk_object, checksum  # noqa: F401
-from .flowsim import SimResult, simulate_transfer  # noqa: F401
-from .flowsim_ref import simulate_transfer_reference  # noqa: F401
-from .executor import execute_plan, execute_service_model  # noqa: F401
+from .chunk import Chunk, chunk_manifest, chunk_object, checksum  # noqa: F401
+from .flowsim import SimResult, simulate_multi, simulate_transfer  # noqa: F401
+from .flowsim_ref import (  # noqa: F401
+    simulate_multi_reference,
+    simulate_transfer_reference,
+)
+from .events import (  # noqa: F401
+    JobSimResult,
+    LinkDegrade,
+    MultiSimResult,
+    TransferJob,
+    VMFailure,
+)
+from .executor import (  # noqa: F401
+    ExecutionReport,
+    JobReport,
+    ReplanRecord,
+    ServiceReport,
+    TransferRequest,
+    TransferService,
+    execute_plan,
+    execute_service_model,
+)
+from .gateway import (  # noqa: F401
+    BlobStore,
+    DirStore,
+    FaultInjector,
+    GatewayReport,
+    ObjectStore,
+    transfer_objects,
+)

@@ -36,3 +36,32 @@ def checksum(data: bytes, *, strong: bool = False) -> str:
     if strong:
         return hashlib.sha256(data).hexdigest()
     return f"{zlib.crc32(data):08x}"
+
+
+def chunk_manifest(
+    store, keys: list[str], chunk_bytes: int, *, with_sums: bool = True
+) -> tuple[list[Chunk], dict[str, str], dict[str, str]]:
+    """Chunk every object and checksum each chunk and whole object.
+
+    The per-chunk sums are what make resume cheap: a destination can verify
+    and commit chunks independently, re-requesting only the ones that failed
+    — never re-reading bytes it already verified. Each object is read once:
+    the object checksum is the CRC stream of the same chunk buffers.
+
+    Returns (chunks, chunk_sums by Chunk.id, object_sums by key); the sum
+    dicts are empty when ``with_sums`` is false.
+    """
+    chunks: list[Chunk] = []
+    chunk_sums: dict[str, str] = {}
+    object_sums: dict[str, str] = {}
+    for key in keys:
+        parts = chunk_object(key, store.size(key), chunk_bytes)
+        chunks.extend(parts)
+        if with_sums:
+            running = 0
+            for ch in parts:
+                data = store.get_range(key, ch.offset, ch.length)
+                chunk_sums[ch.id] = checksum(data)
+                running = zlib.crc32(data, running)
+            object_sums[key] = f"{running:08x}"
+    return chunks, chunk_sums, object_sums

@@ -19,7 +19,6 @@ this in and measures the collective-term delta.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

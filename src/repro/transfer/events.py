@@ -1,0 +1,314 @@
+"""Multi-job transfer scenarios: jobs, scripted faults, shared materialization.
+
+The fault-tolerant data plane (ISSUE 2) runs several concurrent
+``TransferPlan``s against a scripted schedule of mid-transfer events:
+
+  * ``TransferJob``   — one plan plus its arrival time and chunk size;
+  * ``LinkDegrade``   — a region-pair link loses a fraction of its capacity
+    (compounding: ``factor`` multiplies the *current* rates);
+  * ``VMFailure``     — gateway VMs of one job die; their in-flight chunks
+    are lost and re-dispatched to the surviving workers of the same stage
+    (chunk-level retry, zero data loss while any worker survives).
+
+Both the vectorized simulator (``flowsim.simulate_multi``) and the
+object-per-connection oracle (``flowsim_ref.simulate_multi_reference``)
+consume the same ``materialize_jobs`` scenario — identical per-job RNG
+streams, VM/connection materialization and chunk->path assignment — so the
+equivalence tests can pin them together chunk-for-chunk. The two event
+loops themselves are implemented independently.
+
+Jobs contend for the wide-area links: each directed region pair is modelled
+as a shared fluid resource with capacity ``link_capacity_scale`` times the
+single-VM-pair grid rate, divided max-min fairly across every tenant's
+connections (OneDataShare-style multi-job scheduling pressure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import TransferPlan
+from repro.core.topology import GBIT_PER_GB
+
+from .flowsim import conn_efficiency
+
+
+@dataclasses.dataclass
+class TransferJob:
+    """One tenant job of the multi-job data plane."""
+
+    plan: TransferPlan
+    name: str = ""
+    arrival_s: float = 0.0
+    chunk_mb: float = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDegrade:
+    """At ``t_s``, the (src, dst) region-pair link drops to ``factor`` of its
+    current capacity (per-connection rates and the shared link cap)."""
+
+    t_s: float
+    src: int  # region index
+    dst: int
+    factor: float
+
+
+@dataclasses.dataclass(frozen=True)
+class VMFailure:
+    """At ``t_s``, ``count`` gateway VMs of job ``job`` in ``region`` die.
+
+    Connections touching a dead VM are gone for good; chunks they carried
+    return to their stage's ready queue and retry on surviving workers."""
+
+    t_s: float
+    job: int  # index into the job list
+    region: int  # region index
+    count: int = 1
+
+
+@dataclasses.dataclass
+class JobSimResult:
+    """Per-job outcome of a multi-job simulation."""
+
+    job: int
+    name: str
+    time_s: float  # arrival -> completion (or horizon / stall point)
+    tput_gbps: float
+    chunks_delivered: int
+    n_chunks: int
+    retried_chunks: int
+    egress_cost: float
+    vm_cost: float
+    total_cost: float
+    status: str  # "done" | "running" | "stalled" | "pending"
+    per_edge_gb: dict
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def remaining_chunks(self) -> int:
+        return self.n_chunks - self.chunks_delivered
+
+
+@dataclasses.dataclass
+class MultiSimResult:
+    jobs: list[JobSimResult]
+    time_s: float
+    events: int  # event-loop iterations (perf accounting)
+
+    @property
+    def all_done(self) -> bool:
+        return all(j.done for j in self.jobs)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(j.total_cost for j in self.jobs)
+
+
+@dataclasses.dataclass
+class MultiSetup:
+    """Everything both event loops need, materialized once per scenario.
+
+    Connections are globally indexed in ascending (job, path, hop, conn)
+    order; stages in ascending (job, path, hop) order — the dispatch order
+    both simulators iterate in, which is what makes them comparable."""
+
+    top: object  # Topology of jobs[0] (shared link grid / prices)
+    arrivals: np.ndarray  # [J]
+    n_chunks: np.ndarray  # [J] chunks per job
+    chunk_gbit: np.ndarray  # [J] chunk size per job (Gbit)
+    chunk_path: list[np.ndarray]  # per job: chunk id -> path id
+    vm_eg_cap: np.ndarray  # [NV] per-VM egress cap
+    vm_in_cap: np.ndarray
+    vm_region: np.ndarray  # [NV]
+    vm_job: np.ndarray  # [NV]
+    n_stages: int
+    stage_job: np.ndarray  # [NS]
+    stage_hop: np.ndarray
+    stage_next: np.ndarray  # downstream stage id, -1 at the last hop
+    first_stage: list[list[int]]  # per job: path id -> its hop-0 stage
+    conn_job: np.ndarray  # [NC] all ascending (job, path, hop, conn)
+    conn_sid: np.ndarray
+    conn_src: np.ndarray  # global VM ids
+    conn_dst: np.ndarray
+    conn_rate: np.ndarray  # nominal * straggler multiplier
+    conn_edge: np.ndarray  # [NC] index into edges_used
+    edges_used: list[tuple[int, int]]
+    max_hops: int
+
+
+def materialize_jobs(
+    jobs: list[TransferJob],
+    *,
+    seed: int = 0,
+    straggler_prob: float = 0.05,
+    straggler_speed: tuple[float, float] = (0.15, 0.5),
+) -> MultiSetup:
+    """Materialize VMs, connections and chunk streams for every job.
+
+    Per-job state is drawn from an independent RNG stream seeded by
+    (seed, job index) in the same draw order as the single-job simulator:
+    one multiplier per connection in connection order, then the chunk->path
+    assignment."""
+    if not jobs:
+        raise ValueError("no jobs")
+    top0 = jobs[0].plan.top
+    for job in jobs:
+        top = job.plan.top
+        if top is not top0 and not (
+            top.num_regions == top0.num_regions
+            and np.array_equal(top.tput, top0.tput)
+            and np.array_equal(top.price_egress, top0.price_egress)
+        ):
+            raise ValueError(
+                "all jobs must share one topology (shared link caps and "
+                "egress prices come from the first job's grid)"
+            )
+
+    arrivals = np.array([float(j.arrival_s) for j in jobs])
+    n_chunks = np.zeros(len(jobs), dtype=np.int64)
+    chunk_gbit = np.zeros(len(jobs))
+    chunk_path: list[np.ndarray] = []
+
+    vm_eg_cap: list[float] = []
+    vm_in_cap: list[float] = []
+    vm_region: list[int] = []
+    vm_job: list[int] = []
+
+    stage_job: list[int] = []
+    stage_hop: list[int] = []
+    stage_next: list[int] = []
+    first_stage: list[list[int]] = []
+
+    conn_job: list[int] = []
+    conn_sid: list[int] = []
+    conn_src: list[int] = []
+    conn_dst: list[int] = []
+    conn_rate: list[float] = []
+    conn_edge_pairs: list[tuple[int, int]] = []
+    max_hops = 1
+
+    for j, job in enumerate(jobs):
+        plan = job.plan
+        top = plan.top
+        rng = np.random.default_rng([seed, j])
+        paths = plan.paths()
+        if not paths:
+            raise ValueError(f"job {j} ({job.name!r}) carries no flow")
+
+        volume_gbit = plan.volume_gb * GBIT_PER_GB
+        cg = job.chunk_mb * 8.0 / 1024.0
+        chunk_gbit[j] = cg
+        n_chunks[j] = max(1, int(np.ceil(volume_gbit / cg)))
+
+        # ---- VMs (global ids, appended in job then region order)
+        vm_of: dict[int, list[int]] = {}
+        for r in range(top.num_regions):
+            ids = []
+            for _ in range(int(round(plan.N[r]))):
+                ids.append(len(vm_eg_cap))
+                vm_eg_cap.append(top.limit_egress[r])
+                vm_in_cap.append(top.limit_ingress[r])
+                vm_region.append(r)
+                vm_job.append(j)
+            vm_of[r] = ids
+
+        # ---- stages: one per (path, hop)
+        stage_of: dict[tuple[int, int], int] = {}
+        path_len = {pid: len(p) - 1 for pid, (p, _) in enumerate(paths)}
+        max_hops = max(max_hops, max(path_len.values()))
+        for pid, (path, _) in enumerate(paths):
+            for hop in range(path_len[pid]):
+                stage_of[(pid, hop)] = len(stage_job)
+                stage_job.append(j)
+                stage_hop.append(hop)
+                stage_next.append(-1)
+        for (pid, hop), sid in stage_of.items():
+            if hop + 1 < path_len[pid]:
+                stage_next[sid] = stage_of[(pid, hop + 1)]
+        first_stage.append([stage_of[(pid, 0)] for pid in range(len(paths))])
+
+        # ---- connections: same nominal-rate formula as the single-job sim
+        edge_flow_total: dict[tuple[int, int], float] = {}
+        for path, flow in paths:
+            for a, b in zip(path[:-1], path[1:]):
+                edge_flow_total[(a, b)] = edge_flow_total.get((a, b), 0.0) + flow
+        for pid, (path, flow) in enumerate(paths):
+            for hop, (a, b) in enumerate(zip(path[:-1], path[1:])):
+                m_edge = int(round(plan.M[a, b]))
+                share = flow / edge_flow_total[(a, b)]
+                n_conn = max(1, int(round(m_edge * share)))
+                vms_a = vm_of.get(a) or []
+                vms_b = vm_of.get(b) or []
+                if not vms_a or not vms_b:
+                    raise ValueError(
+                        f"job {j} has flow on edge {a}->{b} but no VMs"
+                    )
+                per_pair = max(n_conn / (len(vms_a) * len(vms_b)), 1e-9)
+                eff = conn_efficiency(per_pair * len(vms_b), top.limit_conn)
+                nominal = top.tput[a, b] * eff / n_conn * len(vms_a)
+                sid = stage_of[(pid, hop)]
+                for c in range(n_conn):
+                    if rng.uniform() < straggler_prob:
+                        mult = float(rng.uniform(*straggler_speed))
+                    else:
+                        mult = float(np.exp(rng.normal(0.0, 0.05)))
+                    conn_job.append(j)
+                    conn_sid.append(sid)
+                    conn_src.append(vms_a[c % len(vms_a)])
+                    conn_dst.append(vms_b[c % len(vms_b)])
+                    conn_rate.append(nominal * mult)
+                    conn_edge_pairs.append((a, b))
+
+        flows = np.array([f for _, f in paths])
+        chunk_path.append(
+            rng.choice(len(paths), size=int(n_chunks[j]), p=flows / flows.sum())
+        )
+
+    edges_used = sorted(set(conn_edge_pairs))
+    edge_index = {e: i for i, e in enumerate(edges_used)}
+    return MultiSetup(
+        top=top0,
+        arrivals=arrivals,
+        n_chunks=n_chunks,
+        chunk_gbit=chunk_gbit,
+        chunk_path=chunk_path,
+        vm_eg_cap=np.asarray(vm_eg_cap, dtype=float),
+        vm_in_cap=np.asarray(vm_in_cap, dtype=float),
+        vm_region=np.asarray(vm_region, dtype=np.int64),
+        vm_job=np.asarray(vm_job, dtype=np.int64),
+        n_stages=len(stage_job),
+        stage_job=np.asarray(stage_job, dtype=np.int64),
+        stage_hop=np.asarray(stage_hop, dtype=np.int64),
+        stage_next=np.asarray(stage_next, dtype=np.int64),
+        first_stage=first_stage,
+        conn_job=np.asarray(conn_job, dtype=np.int64),
+        conn_sid=np.asarray(conn_sid, dtype=np.int64),
+        conn_src=np.asarray(conn_src, dtype=np.int64),
+        conn_dst=np.asarray(conn_dst, dtype=np.int64),
+        conn_rate=np.asarray(conn_rate, dtype=float),
+        conn_edge=np.asarray(
+            [edge_index[e] for e in conn_edge_pairs], dtype=np.int64
+        ),
+        edges_used=edges_used,
+        max_hops=max_hops,
+    )
+
+
+def sorted_schedule(
+    jobs: list[TransferJob], faults
+) -> list[tuple[float, int, object]]:
+    """Arrivals + faults merged into one (time, seq, payload) list. Payloads:
+    an int job index for arrivals, or the fault event itself."""
+    sched: list[tuple[float, int, object]] = []
+    for j, job in enumerate(jobs):
+        sched.append((float(job.arrival_s), len(sched), j))
+    for f in faults:
+        sched.append((float(f.t_s), len(sched), f))
+    sched.sort(key=lambda e: (e[0], e[1]))
+    return sched

@@ -66,21 +66,28 @@ class SimResult:
         return self.total_cost / max(self.volume_gb, 1e-9)
 
 
-def _maxmin_rates_arr(caps, src, dst, vm_eg_cap, vm_in_cap):
+def _maxmin_rates_arr(caps, src, dst, vm_eg_cap, vm_in_cap,
+                      eid=None, edge_cap=None):
     """Water-filling max-min fair allocation over the active connections.
 
     caps/src/dst are aligned arrays for the active set; returns the rate
     array in the same order. Resources: each connection's own cap, each VM's
-    egress cap over its outgoing conns, each VM's ingress cap over incoming.
+    egress cap over its outgoing conns, each VM's ingress cap over incoming,
+    and — when ``eid``/``edge_cap`` are given (multi-job mode) — each shared
+    wide-area link's capacity over every tenant's connections on it.
     """
     n = caps.shape[0]
     nv = max(int(src.max()), int(dst.max())) + 1
     eg_rem = vm_eg_cap[:nv].copy()
     in_rem = vm_in_cap[:nv].copy()
+    ne = 0
+    if eid is not None:
+        ne = edge_cap.shape[0]
+        ed_rem = edge_cap.copy()
 
     rate = np.zeros(n)
     fixed = np.zeros(n, dtype=bool)
-    for _ in range(2 * nv + 4):
+    for _ in range(2 * nv + ne + 4):
         un = ~fixed
         if not un.any():
             break
@@ -90,6 +97,13 @@ def _maxmin_rates_arr(caps, src, dst, vm_eg_cap, vm_in_cap):
             share_out = np.where(cnt_out > 0, eg_rem / np.maximum(cnt_out, 1), np.inf)
             share_in = np.where(cnt_in > 0, in_rem / np.maximum(cnt_in, 1), np.inf)
         share = np.minimum(share_out[src], share_in[dst])
+        if ne:
+            cnt_ed = np.bincount(eid[un], minlength=ne).astype(float)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                share_ed = np.where(
+                    cnt_ed > 0, ed_rem / np.maximum(cnt_ed, 1), np.inf
+                )
+            share = np.minimum(share, share_ed[eid])
         newly = un & (caps <= share + _EPS)
         if newly.any():
             rate[newly] = caps[newly]
@@ -101,6 +115,9 @@ def _maxmin_rates_arr(caps, src, dst, vm_eg_cap, vm_in_cap):
         in_rem -= np.bincount(dst[newly], weights=rate[newly], minlength=nv)
         np.maximum(eg_rem, 0.0, out=eg_rem)
         np.maximum(in_rem, 0.0, out=in_rem)
+        if ne:
+            ed_rem -= np.bincount(eid[newly], weights=rate[newly], minlength=ne)
+            np.maximum(ed_rem, 0.0, out=ed_rem)
         fixed |= newly
     return rate
 
@@ -438,3 +455,258 @@ def simulate_transfer(
         events=events,
     )
     return res
+
+
+# --------------------------------------------------------------------- multi
+def simulate_multi(
+    jobs,
+    faults=(),
+    *,
+    link_capacity_scale: float | None = 2.0,
+    straggler_prob: float = 0.05,
+    straggler_speed: tuple[float, float] = (0.15, 0.5),
+    relay_buffer_chunks: int = 64,
+    seed: int = 0,
+    horizon_s: float | None = None,
+):
+    """Vectorized multi-job simulator with scripted faults (ISSUE 2).
+
+    Runs every ``TransferJob`` concurrently on one fluid data plane:
+
+      * jobs arrive at ``job.arrival_s``; chunks enter their first-hop
+        queues on arrival;
+      * connections of all tenants share VM caps per job AND the wide-area
+        links — each directed region pair is a fluid resource of capacity
+        ``link_capacity_scale * top.tput[a, b]`` divided max-min fairly
+        (``link_capacity_scale=None`` disables link contention);
+      * ``events.LinkDegrade`` multiplies the affected connections' rates
+        and the shared link cap mid-transfer;
+      * ``events.VMFailure`` kills gateway VMs: their connections die and
+        any chunk they carried re-enters its stage queue and retries on a
+        surviving connection (counted in ``retried_chunks``; a stage whose
+        every connection died stalls the job);
+      * ``horizon_s`` cuts the run (jobs report status "running").
+
+    Dispatch is the dynamic (paper §6) mode; speculation is off so retry
+    accounting stays exact. Returns ``events.MultiSimResult``; the oracle
+    is ``flowsim_ref.simulate_multi_reference`` (same per-job chunk counts
+    at fixed seed — pinned by tests/test_multijob.py).
+    """
+    from .events import JobSimResult, MultiSimResult
+    from .events import materialize_jobs, sorted_schedule
+
+    su = materialize_jobs(
+        jobs, seed=seed, straggler_prob=straggler_prob,
+        straggler_speed=straggler_speed,
+    )
+    top = su.top
+    J = len(jobs)
+    nc = su.conn_job.shape[0]
+    ne = len(su.edges_used)
+    rate_eff = su.conn_rate.copy()
+    sid_arr, next_sid = su.conn_sid, su.stage_next[su.conn_sid]
+    edge_cap = None
+    if link_capacity_scale is not None:
+        edge_cap = np.array(
+            [top.tput[a, b] * link_capacity_scale for a, b in su.edges_used]
+        )
+
+    conn_alive = np.ones(nc, dtype=bool)
+    vm_alive = np.ones(su.vm_eg_cap.shape[0], dtype=bool)
+    arrived = np.zeros(J, dtype=bool)
+    chunk_arr = np.full(nc, -1, dtype=np.int64)
+    remaining = np.zeros(nc)
+    chunk_size = su.chunk_gbit[su.conn_job]  # per-conn chunk size (Gbit)
+    ready: list[deque] = [deque() for _ in range(su.n_stages)]
+    relay_occ = np.zeros(su.n_stages, dtype=np.int64)
+    done_hops: set[tuple[int, int]] = set()
+    delivered = np.zeros(J, dtype=np.int64)
+    retried = np.zeros(J, dtype=np.int64)
+    finish: list[float | None] = [None] * J
+    job_edge_gbit = np.zeros(J * ne)
+
+    sched = sorted_schedule(jobs, faults)
+    ptr = 0
+    now = 0.0
+    last_active = None
+    rates = None
+
+    def apply_due():
+        nonlocal ptr, last_active
+        from .events import LinkDegrade, VMFailure
+
+        while ptr < len(sched) and sched[ptr][0] <= now + 1e-9:
+            ev = sched[ptr][2]
+            ptr += 1
+            last_active = None  # any event can change rates/membership
+            if isinstance(ev, int):  # job arrival
+                arrived[ev] = True
+                firsts = su.first_stage[ev]
+                for ch in range(int(su.n_chunks[ev])):
+                    ready[firsts[int(su.chunk_path[ev][ch])]].append(ch)
+            elif isinstance(ev, LinkDegrade):
+                on_edge = np.array(
+                    [e == (ev.src, ev.dst) for e in su.edges_used], dtype=bool
+                )
+                rate_eff[on_edge[su.conn_edge]] *= ev.factor
+                if edge_cap is not None:
+                    edge_cap[on_edge] *= ev.factor
+            elif isinstance(ev, VMFailure):
+                kill = [
+                    v for v in np.flatnonzero(
+                        (su.vm_job == ev.job) & (su.vm_region == ev.region)
+                    )
+                    if vm_alive[v]
+                ][: ev.count]
+                if not kill:
+                    continue
+                vm_alive[kill] = False
+                hit = conn_alive & (
+                    np.isin(su.conn_src, kill) | np.isin(su.conn_dst, kill)
+                )
+                for ci in np.flatnonzero(hit):
+                    if chunk_arr[ci] >= 0:
+                        sid = int(sid_arr[ci])
+                        ready[sid].append(int(chunk_arr[ci]))
+                        if su.stage_hop[sid] > 0:
+                            relay_occ[sid] += 1
+                        retried[su.conn_job[ci]] += 1
+                        chunk_arr[ci] = -1
+                        remaining[ci] = 0.0
+                conn_alive[hit] = False
+            else:
+                raise TypeError(f"unknown event {ev!r}")
+
+    def try_refill(ci: int) -> bool:
+        sid = sid_arr[ci]
+        nsid = next_sid[ci]
+        if nsid >= 0 and relay_occ[nsid] >= relay_buffer_chunks:
+            return False
+        q = ready[sid]
+        if not q:
+            return False
+        chunk_arr[ci] = q.popleft()
+        remaining[ci] = chunk_size[ci]
+        if su.stage_hop[sid] > 0:
+            relay_occ[sid] -= 1
+        return True
+
+    max_events = (
+        int((su.n_chunks * 6).sum()) * su.max_hops + 10000 + 8 * len(sched)
+    )
+    events = 0
+    for _ in range(max_events):
+        apply_due()
+        if horizon_s is not None and now >= horizon_s - 1e-12:
+            break
+        # cascade refills (buffer drains unlock upstream)
+        while True:
+            progressed = False
+            idle = (chunk_arr < 0) & conn_alive & arrived[su.conn_job]
+            if not idle.any():
+                break
+            queue_work = np.fromiter(
+                (len(q) > 0 for q in ready), dtype=bool, count=su.n_stages
+            )[sid_arr]
+            for ci in np.flatnonzero(idle & queue_work):
+                if chunk_arr[ci] < 0 and try_refill(ci):
+                    progressed = True
+            if not progressed:
+                break
+        active_ix = np.flatnonzero(chunk_arr >= 0)
+        t_next = sched[ptr][0] if ptr < len(sched) else None
+        if active_ix.size == 0:
+            if t_next is not None and (
+                horizon_s is None or t_next < horizon_s - 1e-12
+            ):
+                now = t_next
+                continue
+            break
+        events += 1
+        if last_active is None or not np.array_equal(active_ix, last_active):
+            rates = _maxmin_rates_arr(
+                rate_eff[active_ix], su.conn_src[active_ix],
+                su.conn_dst[active_ix], su.vm_eg_cap, su.vm_in_cap,
+                eid=None if edge_cap is None else su.conn_edge[active_ix],
+                edge_cap=edge_cap,
+            )
+            last_active = active_ix
+        if float(rates.max(initial=0.0)) <= 1e-9 and t_next is None:
+            break  # all remaining links dead: no progress possible, stall
+        safe_rates = np.maximum(rates, _EPS)
+        dt = max(float((remaining[active_ix] / safe_rates).min()), 1e-9)
+        if t_next is not None and now + dt > t_next:
+            dt = t_next - now
+        horizon_hit = False
+        if horizon_s is not None and now + dt >= horizon_s - 1e-12:
+            dt = horizon_s - now
+            horizon_hit = True
+        now += dt
+        moved = rates * dt
+        remaining[active_ix] -= moved
+        job_edge_gbit += np.bincount(
+            su.conn_job[active_ix] * ne + su.conn_edge[active_ix],
+            weights=moved, minlength=J * ne,
+        )
+        completed = active_ix[remaining[active_ix] <= 1e-9]
+        for ci in completed:
+            ch = int(chunk_arr[ci])
+            sid = int(sid_arr[ci])
+            chunk_arr[ci] = -1
+            remaining[ci] = 0.0
+            key = (sid, ch)
+            if key in done_hops:
+                continue
+            done_hops.add(key)
+            nsid = int(su.stage_next[sid])
+            if nsid >= 0:
+                ready[nsid].append(ch)
+                relay_occ[nsid] += 1
+            else:
+                j = int(su.conn_job[ci])
+                delivered[j] += 1
+                if delivered[j] >= su.n_chunks[j]:
+                    finish[j] = now
+        if horizon_hit:
+            break
+        if all(f is not None for f in finish):
+            break
+
+    horizon_cut = horizon_s is not None and now >= horizon_s - 1e-9
+    out = []
+    for j, job in enumerate(jobs):
+        end = finish[j] if finish[j] is not None else now
+        dur = max(end - float(su.arrivals[j]), 1e-9)
+        eg = job_edge_gbit[j * ne : (j + 1) * ne]
+        per_edge_gb = {
+            f"{a}->{b}": eg[i] / GBIT_PER_GB
+            for i, (a, b) in enumerate(su.edges_used) if eg[i] > 0
+        }
+        eg_cost = sum(
+            eg[i] / GBIT_PER_GB * top.price_egress[a, b]
+            for i, (a, b) in enumerate(su.edges_used)
+        )
+        if finish[j] is not None:
+            status = "done"
+        elif not arrived[j]:
+            status, dur = "pending", 0.0
+        elif horizon_cut:
+            status = "running"
+        else:
+            status = "stalled"
+        vm_cost = float(job.plan.N @ job.plan.top.price_vm) * dur
+        out.append(JobSimResult(
+            job=j,
+            name=job.name,
+            time_s=dur,
+            tput_gbps=float(delivered[j] * su.chunk_gbit[j]) / max(dur, 1e-9),
+            chunks_delivered=int(delivered[j]),
+            n_chunks=int(su.n_chunks[j]),
+            retried_chunks=int(retried[j]),
+            egress_cost=float(eg_cost),
+            vm_cost=vm_cost,
+            total_cost=float(eg_cost + vm_cost),
+            status=status,
+            per_edge_gb=per_edge_gb,
+        ))
+    return MultiSimResult(jobs=out, time_s=now, events=events)

@@ -349,3 +349,294 @@ def simulate_transfer_reference(
         events=events,
     )
     return res
+
+
+# --------------------------------------------------------------------- multi
+@dataclasses.dataclass
+class _MConn:
+    """Object-per-connection state of the multi-job reference loop."""
+
+    job: int
+    sid: int  # stage id
+    edge_ix: int  # index into the scenario's edge list
+    src_vm: int
+    dst_vm: int
+    rate: float  # effective (nominal * straggler mult * degrades)
+    alive: bool = True
+    chunk: int = -1
+    remaining: float = 0.0
+
+
+def _maxmin_rates_multi(conns, active_ix, vm_eg_cap, vm_in_cap, edge_rem0):
+    """Water-filling over the active multi-job set: per-connection caps,
+    per-VM egress/ingress caps, and the shared wide-area link caps."""
+    n = len(active_ix)
+    if n == 0:
+        return {}
+    caps = np.array([conns[i].rate for i in active_ix])
+    src = np.array([conns[i].src_vm for i in active_ix], dtype=np.int64)
+    dst = np.array([conns[i].dst_vm for i in active_ix], dtype=np.int64)
+    nv = max(int(src.max()), int(dst.max())) + 1
+    eg_rem = np.asarray(vm_eg_cap, dtype=float)[:nv].copy()
+    in_rem = np.asarray(vm_in_cap, dtype=float)[:nv].copy()
+    ne = 0
+    if edge_rem0 is not None:
+        eid = np.array([conns[i].edge_ix for i in active_ix], dtype=np.int64)
+        ed_rem = edge_rem0.copy()
+        ne = ed_rem.shape[0]
+
+    rate = np.zeros(n)
+    fixed = np.zeros(n, dtype=bool)
+    for _ in range(2 * nv + ne + 4):
+        un = ~fixed
+        if not un.any():
+            break
+        cnt_out = np.bincount(src[un], minlength=nv).astype(float)
+        cnt_in = np.bincount(dst[un], minlength=nv).astype(float)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            share_out = np.where(cnt_out > 0, eg_rem / np.maximum(cnt_out, 1), np.inf)
+            share_in = np.where(cnt_in > 0, in_rem / np.maximum(cnt_in, 1), np.inf)
+        share = np.minimum(share_out[src], share_in[dst])
+        if ne:
+            cnt_ed = np.bincount(eid[un], minlength=ne).astype(float)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                share_ed = np.where(
+                    cnt_ed > 0, ed_rem / np.maximum(cnt_ed, 1), np.inf
+                )
+            share = np.minimum(share, share_ed[eid])
+        newly = un & (caps <= share + _EPS)
+        if newly.any():
+            rate[newly] = caps[newly]
+        else:
+            thresh = share[un].min()
+            newly = un & (share <= thresh + _EPS)
+            rate[newly] = share[newly]
+        eg_rem -= np.bincount(src[newly], weights=rate[newly], minlength=nv)
+        in_rem -= np.bincount(dst[newly], weights=rate[newly], minlength=nv)
+        np.maximum(eg_rem, 0.0, out=eg_rem)
+        np.maximum(in_rem, 0.0, out=in_rem)
+        if ne:
+            ed_rem -= np.bincount(eid[newly], weights=rate[newly], minlength=ne)
+            np.maximum(ed_rem, 0.0, out=ed_rem)
+        fixed |= newly
+    return {int(active_ix[i]): float(rate[i]) for i in range(n)}
+
+
+def simulate_multi_reference(
+    jobs,
+    faults=(),
+    *,
+    link_capacity_scale: float | None = 2.0,
+    straggler_prob: float = 0.05,
+    straggler_speed: tuple[float, float] = (0.15, 0.5),
+    relay_buffer_chunks: int = 64,
+    seed: int = 0,
+    horizon_s: float | None = None,
+):
+    """Object-per-connection oracle for ``flowsim.simulate_multi``.
+
+    Consumes the same materialized scenario (events.materialize_jobs, so the
+    RNG streams and dispatch order match by construction) but runs the event
+    loop on per-connection objects with dict/list bookkeeping. The vectorized
+    loop must reproduce its per-job delivered-chunk counts exactly."""
+    from .events import JobSimResult, LinkDegrade, MultiSimResult, VMFailure
+    from .events import materialize_jobs, sorted_schedule
+
+    su = materialize_jobs(
+        jobs, seed=seed, straggler_prob=straggler_prob,
+        straggler_speed=straggler_speed,
+    )
+    top = su.top
+    J = len(jobs)
+    nc = su.conn_job.shape[0]
+    conns = [
+        _MConn(
+            job=int(su.conn_job[i]), sid=int(su.conn_sid[i]),
+            edge_ix=int(su.conn_edge[i]), src_vm=int(su.conn_src[i]),
+            dst_vm=int(su.conn_dst[i]), rate=float(su.conn_rate[i]),
+        )
+        for i in range(nc)
+    ]
+    edge_cap = None
+    if link_capacity_scale is not None:
+        edge_cap = np.array(
+            [top.tput[a, b] * link_capacity_scale for a, b in su.edges_used]
+        )
+
+    vm_alive = [True] * su.vm_eg_cap.shape[0]
+    arrived = [False] * J
+    ready: dict[int, list[int]] = {s: [] for s in range(su.n_stages)}
+    relay_occ: dict[int, int] = {}
+    done_hops: set[tuple[int, int]] = set()
+    delivered = [0] * J
+    retried = [0] * J
+    finish: list[float | None] = [None] * J
+    job_edge_gbit: dict[tuple[int, int], float] = {}
+
+    sched = sorted_schedule(jobs, faults)
+    ptr = 0
+    now = 0.0
+
+    def apply_due():
+        nonlocal ptr
+        while ptr < len(sched) and sched[ptr][0] <= now + 1e-9:
+            ev = sched[ptr][2]
+            ptr += 1
+            if isinstance(ev, int):  # job arrival
+                arrived[ev] = True
+                firsts = su.first_stage[ev]
+                for ch in range(int(su.n_chunks[ev])):
+                    ready[firsts[int(su.chunk_path[ev][ch])]].append(ch)
+            elif isinstance(ev, LinkDegrade):
+                want = su.edges_used.index((ev.src, ev.dst)) \
+                    if (ev.src, ev.dst) in su.edges_used else -1
+                for c in conns:
+                    if c.edge_ix == want:
+                        c.rate *= ev.factor
+                if edge_cap is not None and want >= 0:
+                    edge_cap[want] *= ev.factor
+            elif isinstance(ev, VMFailure):
+                kill = [
+                    v for v in range(len(vm_alive))
+                    if vm_alive[v] and su.vm_job[v] == ev.job
+                    and su.vm_region[v] == ev.region
+                ][: ev.count]
+                if not kill:
+                    continue
+                for v in kill:
+                    vm_alive[v] = False
+                killset = set(kill)
+                for ci, c in enumerate(conns):
+                    if not c.alive:
+                        continue
+                    if c.src_vm in killset or c.dst_vm in killset:
+                        if c.chunk >= 0:
+                            ready[c.sid].append(c.chunk)
+                            if su.stage_hop[c.sid] > 0:
+                                relay_occ[c.sid] = relay_occ.get(c.sid, 0) + 1
+                            retried[c.job] += 1
+                            c.chunk = -1
+                            c.remaining = 0.0
+                        c.alive = False
+            else:
+                raise TypeError(f"unknown event {ev!r}")
+
+    def refill(ci: int) -> bool:
+        c = conns[ci]
+        if c.chunk >= 0 or not c.alive or not arrived[c.job]:
+            return False
+        nsid = int(su.stage_next[c.sid])
+        if nsid >= 0 and relay_occ.get(nsid, 0) >= relay_buffer_chunks:
+            return False
+        q = ready[c.sid]
+        if not q:
+            return False
+        c.chunk = q.pop(0)
+        c.remaining = float(su.chunk_gbit[c.job])
+        if su.stage_hop[c.sid] > 0:
+            relay_occ[c.sid] = relay_occ.get(c.sid, 0) - 1
+        return True
+
+    max_events = (
+        int((su.n_chunks * 6).sum()) * su.max_hops + 10000 + 8 * len(sched)
+    )
+    events = 0
+    for _ in range(max_events):
+        apply_due()
+        if horizon_s is not None and now >= horizon_s - 1e-12:
+            break
+        progressed = True
+        while progressed:  # cascade refills
+            progressed = False
+            for ci in range(nc):
+                if conns[ci].chunk < 0 and refill(ci):
+                    progressed = True
+        active = [ci for ci in range(nc) if conns[ci].chunk >= 0]
+        t_next = sched[ptr][0] if ptr < len(sched) else None
+        if not active:
+            if t_next is not None and (
+                horizon_s is None or t_next < horizon_s - 1e-12
+            ):
+                now = t_next
+                continue
+            break
+        events += 1
+        rates = _maxmin_rates_multi(
+            conns, active, su.vm_eg_cap, su.vm_in_cap, edge_cap
+        )
+        if max(rates.values(), default=0.0) <= 1e-9 and t_next is None:
+            break  # all remaining links dead: no progress possible, stall
+        dt = min(
+            conns[ci].remaining / max(rates[ci], _EPS) for ci in active
+        )
+        dt = max(dt, 1e-9)
+        if t_next is not None and now + dt > t_next:
+            dt = t_next - now
+        horizon_hit = False
+        if horizon_s is not None and now + dt >= horizon_s - 1e-12:
+            dt = horizon_s - now
+            horizon_hit = True
+        now += dt
+        for ci in active:
+            c = conns[ci]
+            moved = rates[ci] * dt
+            c.remaining -= moved
+            jkey = (c.job, c.edge_ix)
+            job_edge_gbit[jkey] = job_edge_gbit.get(jkey, 0.0) + moved
+            if c.remaining <= 1e-9:
+                ch = c.chunk
+                c.chunk = -1
+                c.remaining = 0.0
+                key = (c.sid, ch)
+                if key in done_hops:
+                    continue
+                done_hops.add(key)
+                nsid = int(su.stage_next[c.sid])
+                if nsid >= 0:
+                    ready[nsid].append(ch)
+                    relay_occ[nsid] = relay_occ.get(nsid, 0) + 1
+                else:
+                    delivered[c.job] += 1
+                    if delivered[c.job] >= su.n_chunks[c.job]:
+                        finish[c.job] = now
+        if horizon_hit:
+            break
+        if all(f is not None for f in finish):
+            break
+
+    horizon_cut = horizon_s is not None and now >= horizon_s - 1e-9
+    out = []
+    for j, job in enumerate(jobs):
+        end = finish[j] if finish[j] is not None else now
+        dur = max(end - float(su.arrivals[j]), 1e-9)
+        eg_cost = 0.0
+        per_edge_gb = {}
+        for i, (a, b) in enumerate(su.edges_used):
+            gbit = job_edge_gbit.get((j, i), 0.0)
+            eg_cost += gbit / GBIT_PER_GB * top.price_egress[a, b]
+            if gbit > 0:
+                per_edge_gb[f"{a}->{b}"] = gbit / GBIT_PER_GB
+        if finish[j] is not None:
+            status = "done"
+        elif not arrived[j]:
+            status, dur = "pending", 0.0
+        elif horizon_cut:
+            status = "running"
+        else:
+            status = "stalled"
+        vm_cost = float(job.plan.N @ job.plan.top.price_vm) * dur
+        out.append(JobSimResult(
+            job=j,
+            name=job.name,
+            time_s=dur,
+            tput_gbps=float(delivered[j] * su.chunk_gbit[j]) / max(dur, 1e-9),
+            chunks_delivered=int(delivered[j]),
+            n_chunks=int(su.n_chunks[j]),
+            retried_chunks=int(retried[j]),
+            egress_cost=float(eg_cost),
+            vm_cost=vm_cost,
+            total_cost=float(eg_cost + vm_cost),
+            status=status,
+            per_edge_gb=per_edge_gb,
+        ))
+    return MultiSimResult(jobs=out, time_s=now, events=events)

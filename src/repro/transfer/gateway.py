@@ -2,10 +2,20 @@
 
 The fluid simulator (flowsim) models timing; this module implements the
 actual mechanics on real data — chunking, bounded relay queues (hop-by-hop
-flow control), parallel workers per hop, dynamic chunk dispatch, checksum
-verification at the destination — and is what checkpoint replication
-(repro.ckpt.replicate) runs on. Object stores are pluggable (in-memory dict
-or a directory), mirroring S3/Blob/GCS semantics: immutable puts, no rename.
+flow control), parallel workers per hop, dynamic chunk dispatch, per-chunk
+checksum verification at the destination — and is what checkpoint
+replication (repro.ckpt.replicate) runs on. Object stores are pluggable
+(in-memory dict or a directory), mirroring S3/Blob/GCS semantics: immutable
+puts, no rename.
+
+Fault tolerance (ISSUE 2): every chunk carries a source-side checksum, the
+destination verifies and commits chunks independently, and failed chunks —
+a killed hop worker, a corrupted payload, a chunk stranded in a dead
+path's queues — are re-dispatched to surviving workers. Verified bytes are
+never re-sent (chunk-level checksummed resume), duplicate deliveries are
+discarded, and a ``FaultInjector`` scripts the same failure scenarios the
+fluid simulator runs (events.VMFailure / LinkDegrade analogues) against
+the real-bytes path.
 """
 
 from __future__ import annotations
@@ -13,14 +23,37 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from pathlib import Path
 
 from repro.core.plan import TransferPlan
-from .chunk import Chunk, checksum, chunk_object
+from .chunk import Chunk, checksum, chunk_manifest, chunk_object
 
 
-class BlobStore:
-    """In-memory object store with S3-like semantics."""
+class ObjectStore:
+    """Interface of an object store (S3/Blob/GCS-like semantics)."""
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def get_range(self, key: str, offset: int, length: int) -> bytes:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def keys(self) -> list[str]:
+        raise NotImplementedError
+
+    def size(self, key: str) -> int:
+        raise NotImplementedError
+
+
+class BlobStore(ObjectStore):
+    """In-memory object store."""
 
     def __init__(self):
         self._data: dict[str, bytes] = {}
@@ -51,22 +84,25 @@ class BlobStore:
             return len(self._data[key])
 
 
-class DirStore(BlobStore):
-    """Directory-backed store (used by the checkpoint replicator)."""
+class DirStore(ObjectStore):
+    """Directory-backed store (used by the checkpoint replicator).
+
+    The directory is authoritative: every read is served from disk and no
+    in-memory copy of object payloads is kept, so replicating a large
+    checkpoint costs one resident copy, not two."""
 
     def __init__(self, root: str | Path):
-        super().__init__()
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
     def _path(self, key: str) -> Path:
-        p = self.root / key.replace("/", "__")
-        return p
+        return self.root / key.replace("/", "__")
 
     def put(self, key: str, data: bytes) -> None:
-        tmp = self._path(key).with_suffix(".tmp")
+        p = self._path(key)
+        tmp = p.with_name(p.name + ".tmp")
         tmp.write_bytes(data)
-        tmp.rename(self._path(key))  # atomic within the fs
+        tmp.rename(p)  # atomic within the fs
 
     def get(self, key: str) -> bytes:
         return self._path(key).read_bytes()
@@ -87,68 +123,168 @@ class DirStore(BlobStore):
         return self._path(key).stat().st_size
 
 
+class FaultInjector:
+    """Scripted faults for the real-bytes path.
+
+    * ``kill_worker_after={(path_id, hop): n}`` — one worker on that hop
+      dies when it picks up its (n+1)-th chunk; the chunk it carried is
+      lost and re-dispatched (the gateway-kill scenario of
+      ``events.VMFailure``). With ``workers_per_hop >= 2`` the hop
+      survives on its remaining workers.
+    * ``corrupt_chunks={chunk_id, ...}`` — the payload is corrupted once in
+      flight; the destination's per-chunk checksum catches it and the
+      chunk retries (a flaky link, ``events.LinkDegrade``'s ugly cousin).
+
+    ``faults_injected`` counts every fault actually fired.
+    """
+
+    def __init__(self, *, kill_worker_after=None, corrupt_chunks=None):
+        self.kill_worker_after: dict[tuple[int, int], int] = dict(
+            kill_worker_after or {}
+        )
+        self.corrupt_chunks: set[str] = set(corrupt_chunks or ())
+        self.faults_injected = 0
+        self._lock = threading.Lock()
+        self._pickups: dict[tuple[int, int], int] = {}
+        self._killed: set[tuple[int, int]] = set()
+
+    def on_pickup(self, path_id: int, hop: int, ch: Chunk, data: bytes,
+                  attempt: int) -> tuple[str, bytes | None]:
+        """Called by a hop worker for every chunk it picks up.
+
+        Returns ("ok", data), ("kill", None) — the worker must requeue the
+        chunk and die — or ("corrupt", mangled_payload)."""
+        with self._lock:
+            key = (path_id, hop)
+            if key in self.kill_worker_after and key not in self._killed:
+                n = self._pickups.get(key, 0)
+                self._pickups[key] = n + 1
+                if n >= self.kill_worker_after[key]:
+                    self._killed.add(key)
+                    self.faults_injected += 1
+                    return "kill", None
+            if data is not None and ch.id in self.corrupt_chunks:
+                self.corrupt_chunks.discard(ch.id)
+                self.faults_injected += 1
+                return "corrupt", bytes([data[0] ^ 0xFF]) + data[1:]
+        return "ok", data
+
+
 @dataclasses.dataclass
 class GatewayReport:
     objects: int
     chunks: int
     bytes_moved: int
-    checksum_failures: int
+    checksum_failures: int  # objects whose final assembly failed to verify
     per_path_chunks: dict
+    retried_chunks: int = 0  # chunk re-dispatches (kills, corruption, stalls)
+    duplicate_chunks: int = 0  # deliveries discarded as already-verified
+    faults_injected: int = 0
+    objects_skipped: int = 0  # already present + verified at the destination
+    chunks_missing: int = 0  # gave up after max_attempts (0 == zero loss)
 
 
-_STOP = object()
+def _same_object(src_store: ObjectStore, dst_store: ObjectStore, key: str,
+                 window: int) -> bool:
+    """Streamed equality check for the resume pre-pass: size short-circuit,
+    then windowed get_range comparison — no whole-object materialization,
+    early exit on the first differing window."""
+    size = src_store.size(key)
+    if dst_store.size(key) != size:
+        return False
+    off = 0
+    while off < size:
+        n = min(window, size - off)
+        if src_store.get_range(key, off, n) != dst_store.get_range(key, off, n):
+            return False
+        off += n
+    return True
 
 
 def transfer_objects(
     plan: TransferPlan,
-    src_store: BlobStore,
-    dst_store: BlobStore,
+    src_store: ObjectStore,
+    dst_store: ObjectStore,
     object_keys: list[str],
     *,
     chunk_bytes: int = 4 << 20,
     workers_per_hop: int = 4,
     relay_buffer_chunks: int = 32,
     verify: bool = True,
+    fault_injector: FaultInjector | None = None,
+    max_attempts: int = 5,
+    stall_timeout_s: float = 1.0,
+    resume: bool = True,
 ) -> GatewayReport:
     """Move objects src->dst along the plan's decomposed paths.
 
     Every path becomes a chain of bounded queues with ``workers_per_hop``
     threads per hop — a faithful miniature of the gateway chain: bounded
     queues ARE the hop-by-hop flow control; idle workers pulling from the
-    shared source queue ARE dynamic dispatch."""
+    shared source queue ARE dynamic dispatch. The destination verifies and
+    commits chunks independently; anything lost in flight is re-dispatched
+    to a surviving path (``max_attempts`` per chunk), so a mid-transfer
+    gateway kill completes with zero data loss and no verified byte is
+    ever sent twice. ``resume=True`` additionally skips whole objects the
+    destination already holds with a matching checksum.
+    """
     paths = plan.paths()
     if not paths:
         raise ValueError("plan has no flow")
 
-    # chunk all objects; single shared dispatch queue (dynamic assignment)
-    all_chunks: list[Chunk] = []
-    sums: dict[str, str] = {}
+    skipped = 0
+    keys_to_move = []
     for key in object_keys:
-        size = src_store.size(key)
-        all_chunks.extend(chunk_object(key, size, chunk_bytes))
-        if verify:
-            sums[key] = checksum(src_store.get(key))
+        if (
+            resume and verify and dst_store.exists(key)
+            and _same_object(src_store, dst_store, key, chunk_bytes)
+        ):
+            skipped += 1
+            continue
+        keys_to_move.append(key)
 
-    source_q: "queue.Queue" = queue.Queue()
+    all_chunks, chunk_sums, object_sums = chunk_manifest(
+        src_store, keys_to_move, chunk_bytes, with_sums=verify
+    )
+    # zero-byte objects produce no chunks: commit them directly so they are
+    # not silently dropped by the chunk-delivery loop
+    chunked = {ch.object_key for ch in all_chunks}
+    for key in keys_to_move:
+        if key not in chunked:
+            dst_store.put(key, b"")
+    keys_to_move = [k for k in keys_to_move if k in chunked]
+
+    # weighted round-robin pre-binning of chunks to paths
     weights = [f for _, f in paths]
     total_w = sum(weights)
-    # weighted round-robin pre-binning of chunks to paths
-    import itertools
-
     bins: list[list[Chunk]] = [[] for _ in paths]
     cum = [w / total_w for w in weights]
     acc = [0.0] * len(paths)
     for ch in all_chunks:
         i = max(range(len(paths)), key=lambda j: cum[j] - acc[j])
         bins[i].append(ch)
-        acc[i] += 1.0 / len(all_chunks)
-
-    done_q: "queue.Queue" = queue.Queue()
+        acc[i] += 1.0 / max(len(all_chunks), 1)
     per_path_count = {i: len(b) for i, b in enumerate(bins)}
-    failures = [0]
-    bytes_moved = [0]
-    lock = threading.Lock()
 
+    done_event = threading.Event()
+    done_q: "queue.Queue" = queue.Queue()
+    retry_q: "queue.Queue" = queue.Queue()
+    lock = threading.Lock()
+    bytes_moved = [0]
+    retried = [0]
+    live = {(pid, h): workers_per_hop
+            for pid, (path, _) in enumerate(paths)
+            for h in range(len(path) - 1)}
+
+    def _put(q: queue.Queue, item) -> None:
+        while not done_event.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    first_qs: list[queue.Queue] = []
     threads: list[threading.Thread] = []
     for pid, (path, _flow) in enumerate(paths):
         hops = len(path) - 1
@@ -156,70 +292,156 @@ def transfer_objects(
         for _ in range(hops - 1):
             qs.append(queue.Queue(maxsize=relay_buffer_chunks))  # flow ctrl
         qs.append(done_q)
+        first_qs.append(qs[0])
         for ch in bins[pid]:
-            qs[0].put(ch)
-        for _ in range(workers_per_hop):
-            qs[0].put(_STOP)
+            qs[0].put((ch, 0))
 
-        def hop_worker(h: int, q_in: queue.Queue, q_out: queue.Queue,
-                       first: bool):
-            while True:
-                item = q_in.get()
-                if item is _STOP:
-                    q_out.put(_STOP)
-                    return
+        def hop_worker(pid: int, h: int, q_in: queue.Queue,
+                       q_out: queue.Queue, first: bool):
+            while not done_event.is_set():
+                try:
+                    item = q_in.get(timeout=0.05)
+                except queue.Empty:
+                    continue
                 if first:
-                    ch: Chunk = item
-                    data = src_store.get_range(ch.object_key, ch.offset, ch.length)
-                    payload = (ch, data)
+                    ch, attempt = item
+                    data = src_store.get_range(ch.object_key, ch.offset,
+                                               ch.length)
                 else:
-                    payload = item
+                    ch, data, attempt = item
+                if fault_injector is not None:
+                    action, data = fault_injector.on_pickup(
+                        pid, h, ch, data, attempt
+                    )
+                    if action == "kill":
+                        with lock:
+                            live[(pid, h)] -= 1
+                        retry_q.put((ch, attempt + 1))
+                        return  # the worker thread dies with its chunk
                 with lock:
-                    bytes_moved[0] += len(payload[1])
-                q_out.put(payload)
+                    bytes_moved[0] += len(data)
+                _put(q_out, (ch, data, attempt))
 
         for h in range(hops):
             for _ in range(workers_per_hop):
                 t = threading.Thread(
-                    target=hop_worker, args=(h, qs[h], qs[h + 1], h == 0),
+                    target=hop_worker, args=(pid, h, qs[h], qs[h + 1], h == 0),
                     daemon=True,
                 )
                 threads.append(t)
                 t.start()
 
-    # destination writer: reassemble objects
-    buffers: dict[str, dict[int, bytes]] = {}
-    expect: dict[str, int] = {}
-    for key in object_keys:
-        size = src_store.size(key)
-        expect[key] = len(chunk_object(key, size, chunk_bytes))
-        buffers[key] = {}
+    # retry feeder: re-dispatch lost chunks onto any path whose every hop
+    # still has a live worker (dynamic dispatch across surviving gateways)
+    attempts: dict[str, int] = {}
+    dead: set[str] = set()
+    verified: set[str] = set()
+    rr = [0]
 
-    stops_expected = sum(workers_per_hop for _ in paths)
-    stops = 0
-    delivered = 0
-    while delivered < len(all_chunks) and stops < stops_expected * 2:
-        item = done_q.get()
-        if item is _STOP:
-            stops += 1
+    def alive_paths() -> list[int]:
+        with lock:
+            return [
+                pid for pid, (path, _) in enumerate(paths)
+                if all(live[(pid, h)] > 0 for h in range(len(path) - 1))
+            ]
+
+    def feeder():
+        while not done_event.is_set():
+            try:
+                ch, attempt = retry_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if ch.id in verified:
+                continue  # a duplicate copy already landed: nothing to do
+            if attempt > max_attempts:
+                dead.add(ch.id)
+                continue
+            targets = alive_paths()
+            if not targets:
+                dead.add(ch.id)
+                continue
+            with lock:
+                retried[0] += 1
+            pid = targets[rr[0] % len(targets)]
+            rr[0] += 1
+            attempts[ch.id] = max(attempts.get(ch.id, 0), attempt)
+            first_qs[pid].put((ch, attempt))
+
+    feeder_t = threading.Thread(target=feeder, daemon=True)
+    feeder_t.start()
+
+    # destination: verify + commit chunks independently, reassemble objects
+    buffers: dict[str, dict[int, bytes]] = {k: {} for k in keys_to_move}
+    expect = {
+        k: len(chunk_object(k, src_store.size(k), chunk_bytes))
+        for k in keys_to_move
+    }
+    duplicates = 0
+    failures = 0
+    stall_rounds = 0
+    # adaptive stall detection: a pipeline is only declared stuck once the
+    # quiet period exceeds both the configured window and twice the worst
+    # inter-delivery gap seen so far, so a slow-but-healthy transfer (cold
+    # disk, big chunks) is not flooded with wholesale re-dispatches
+    max_gap = stall_timeout_s
+    last_delivery = time.monotonic()
+    while len(verified) + len(dead - verified) < len(all_chunks):
+        try:
+            ch, data, attempt = done_q.get(timeout=stall_timeout_s)
+        except queue.Empty:
+            quiet = time.monotonic() - last_delivery
+            if quiet < max(stall_timeout_s, 2.0 * max_gap):
+                continue  # plausibly just slow: keep waiting
+            # Stuck: every in-flight copy died or sits behind a dead hop.
+            # Re-dispatch the missing chunks — the checksummed-resume path:
+            # verified chunks are never re-sent. Stall re-sends are bounded
+            # by their own round counter (reset on progress), NOT by
+            # per-chunk attempts, so timeouts alone never fail a transfer.
+            stall_rounds += 1
+            missing = [c for c in all_chunks
+                       if c.id not in verified and c.id not in dead]
+            if not missing or stall_rounds > max_attempts:
+                break
+            for c in missing:
+                retry_q.put((c, attempts.get(c.id, 0)))
+            last_delivery = time.monotonic()  # re-arm for the next round
             continue
-        ch, data = item
+        now_t = time.monotonic()
+        max_gap = max(max_gap, now_t - last_delivery)
+        last_delivery = now_t
+        stall_rounds = 0
+        if ch.id in verified:
+            duplicates += 1
+            continue
+        if verify and checksum(data) != chunk_sums[ch.id]:
+            retry_q.put((ch, attempt + 1))
+            continue
+        verified.add(ch.id)
+        dead.discard(ch.id)
         buffers[ch.object_key][ch.index] = data
-        delivered += 1
         if len(buffers[ch.object_key]) == expect[ch.object_key]:
             parts = buffers[ch.object_key]
             blob = b"".join(parts[i] for i in range(len(parts)))
-            if verify and checksum(blob) != sums[ch.object_key]:
-                failures[0] += 1
+            if verify and checksum(blob) != object_sums[ch.object_key]:
+                failures += 1
             dst_store.put(ch.object_key, blob)
 
+    done_event.set()
+    feeder_t.join(timeout=2.0)
     for t in threads:
-        t.join(timeout=5.0)
+        t.join(timeout=2.0)
 
+    missing = len(all_chunks) - len(verified)
     return GatewayReport(
         objects=len(object_keys),
         chunks=len(all_chunks),
         bytes_moved=bytes_moved[0],
-        checksum_failures=failures[0],
+        checksum_failures=failures,
         per_path_chunks=per_path_count,
+        retried_chunks=retried[0],
+        duplicate_chunks=duplicates,
+        faults_injected=0 if fault_injector is None
+        else fault_injector.faults_injected,
+        objects_skipped=skipped,
+        chunks_missing=missing,
     )

@@ -1,0 +1,80 @@
+"""transfer/compression unit coverage: quantize/dequantize round trip and
+error-feedback accumulation (previously exercised only via integration)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.transfer.compression import (
+    compress,
+    compress_with_error_feedback,
+    dequantize_int8_blockwise,
+    init_error_feedback,
+    quantize_int8_blockwise,
+)
+
+
+@pytest.mark.parametrize("n,block", [(1024, 256), (1000, 256), (7, 4), (256, 256)])
+def test_quantize_dequantize_error_bound(n, block):
+    """Per-block symmetric int8: |x - deq(q)| <= blockwise absmax / 127
+    (half-step rounding => <= scale/2, bounded by scale)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=n), jnp.float32)
+    q, scales = quantize_int8_blockwise(x, block)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert scales.shape[0] == -(-n // block)
+    y = dequantize_int8_blockwise(q, scales, block)[:n]
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    xb = np.asarray(x)
+    for b in range(scales.shape[0]):
+        lo, hi = b * block, min((b + 1) * block, n)
+        absmax = np.abs(xb[lo:hi]).max()
+        # round() error is at most half a quantization step per block
+        assert err[lo:hi].max() <= absmax / 127.0 * 0.5 + 1e-7
+
+
+def test_quantize_preserves_shape_and_zero_blocks():
+    x = jnp.zeros((3, 5, 7), jnp.float32)
+    q, scales = quantize_int8_blockwise(x, block=16)
+    assert q.shape == x.shape
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(scales) == 1.0)  # zero blocks use unit scale
+    assert np.all(np.asarray(compress(x)) == 0.0)
+
+
+def test_compress_round_trip_is_idempotent():
+    """Quantizing an already-quantized tensor is exact: the grid points are
+    fixed points of the transform."""
+    x = jnp.asarray(np.random.default_rng(1).normal(size=512), jnp.float32)
+    y1 = compress(x)
+    y2 = compress(y1)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=1e-6)
+
+
+def test_error_feedback_single_step_identity():
+    """One EF step: sent + residual == corrected gradient, exactly."""
+    g = {"w": jnp.asarray(np.random.default_rng(2).normal(size=300), jnp.float32)}
+    ef = init_error_feedback(g)
+    assert np.all(np.asarray(ef["w"]) == 0.0)
+    sent, ef2 = compress_with_error_feedback(g, ef)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"]) + np.asarray(ef2["w"]), np.asarray(g["w"]),
+        rtol=0, atol=1e-6,
+    )
+
+
+def test_error_feedback_accumulation_bounded():
+    """The carried residual stays bounded by one quantization step — the
+    error does NOT accumulate across steps (Karimireddy et al. 2019)."""
+    rng = np.random.default_rng(3)
+    g = {"w": jnp.asarray(rng.normal(size=513) * 0.05, jnp.float32)}
+    ef = init_error_feedback(g)
+    step_bound = float(jnp.max(jnp.abs(g["w"]))) * 2.0 / 127.0 + 1e-6
+    for i in range(25):
+        sent, ef = compress_with_error_feedback(g, ef)
+        # residual bounded by half a step of the corrected signal's scale;
+        # corrected = g + e, |e| <= bound => stays a contraction
+        assert float(jnp.max(jnp.abs(ef["w"]))) <= 2.0 * step_bound
+    # and the pytree structure is preserved
+    assert jax.tree.structure(sent) == jax.tree.structure(g)
+    assert jax.tree.structure(ef) == jax.tree.structure(g)

@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.core import Planner, default_topology, direct_plan, toy_topology
+from repro.core import Planner, default_topology, direct_plan
 from repro.transfer import (
     execute_plan,
     simulate_transfer,

@@ -11,7 +11,6 @@ try:
 except ImportError:  # optional dep: deterministic fallback sweeps instead
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_bhsd_ref
 from repro.kernels.quantize.ops import dequantize_int8, quantize_int8

@@ -1,6 +1,5 @@
 """Hypothesis property tests on the planner's invariants."""
 
-import numpy as np
 
 try:
     from hypothesis import HealthCheck, given, settings, strategies as st

@@ -1,0 +1,150 @@
+"""TransferService: multi-job admission, fault-driven re-planning on the
+degraded topology via cached-structure refits."""
+
+import numpy as np
+import pytest
+
+from repro.core import default_topology
+from repro.transfer import (
+    LinkDegrade,
+    TransferRequest,
+    TransferService,
+    VMFailure,
+)
+from repro.transfer.flowsim_ref import simulate_multi_reference
+
+SRC, DST = "aws:us-west-2", "aws:eu-central-1"
+
+
+@pytest.fixture(scope="module")
+def top():
+    return default_topology()
+
+
+def _service(top, **kw):
+    svc = TransferService(top, backend="jax", max_relays=6, **kw)
+    svc.submit(TransferRequest("a", SRC, DST, 3.0, 4.0))
+    svc.submit(TransferRequest("b", SRC, DST, 3.0, 4.0, arrival_s=1.0))
+    svc.submit(TransferRequest("c", "gcp:us-central1", DST, 3.0, 4.0))
+    return svc
+
+
+def test_service_runs_queue_to_completion(top):
+    rep = _service(top).run()
+    assert rep.all_done
+    assert rep.segments == 1 and not rep.replans
+    for j in rep.jobs:
+        assert j.delivered_gb == pytest.approx(j.request.volume_gb, rel=0.02)
+        assert j.realized_cost > 0
+        assert 0.1 < j.tput_ratio <= 1.05
+
+
+def test_service_replans_on_link_degrade_with_cached_structure(top):
+    """Acceptance: re-planning a degraded topology reuses the cached
+    LPStructure — zero re-assemblies during the re-plan — and the
+    re-planned remainder is feasible and respects the degraded link."""
+    svc = _service(top)
+    s, d = top.index(SRC), top.index(DST)
+    rep = svc.run(faults=[LinkDegrade(t_s=3.0, src=s, dst=d, factor=0.3)])
+    assert rep.replans, "jobs on the degraded link must be re-planned"
+    for r in rep.replans:
+        # milp.N_STRUCT_BUILDS was snapshotted around the re-plan: zero
+        # LPStructure assemblies means every constrained solve rode on the
+        # structures cached at admission time.
+        assert r.structure_builds == 0, "re-plan re-assembled an LPStructure"
+        assert r.reused_structure
+        plan = r.plan
+        assert plan.solver_status == "optimal"
+        assert plan.validate() == []  # cost-feasible on the base constraints
+        # ... and on the degraded 4b row of the dead link:
+        phi = svc.degraded_links[(s, d)]
+        cap = phi * top.tput[s, d] * plan.M[s, d] / top.limit_conn
+        assert plan.F[s, d] <= cap + 1e-6
+        assert np.isfinite(plan.total_cost)
+        assert r.latency_s < 5.0
+    assert rep.all_done
+
+
+def test_service_replans_vm_failure_and_survives(top):
+    svc = _service(top)
+    s = top.index(SRC)
+    rep = svc.run(faults=[VMFailure(t_s=2.0, job=0, region=s, count=1)])
+    (ra,) = [j for j in rep.jobs if j.request.name == "a"]
+    assert ra.replans, "the failed job must be re-planned"
+    new_plan = ra.replans[-1].plan
+    # the unhealthy region can host at most limit_vm - 1 replacement VMs
+    assert new_plan.N[s] <= top.limit_vm - 1 + 1e-9
+    assert rep.all_done
+    assert ra.delivered_gb == pytest.approx(ra.request.volume_gb, rel=0.02)
+
+
+def test_vm_failure_is_scoped_to_the_failed_tenant(top):
+    """Job 0 losing every VM in the source region must not constrain job
+    1's re-plan: VM quota is per tenant, only link health is shared."""
+    svc = _service(top)
+    s, d = top.index(SRC), top.index(DST)
+    rep = svc.run(faults=[
+        VMFailure(t_s=2.0, job=0, region=s, count=top.limit_vm),
+        LinkDegrade(t_s=3.0, src=s, dst=d, factor=0.5),
+    ])
+    (rb,) = [j for j in rep.jobs if j.request.name == "b"]
+    assert rb.status == "done"
+    assert rb.replans, "job b shares the degraded link and must re-plan"
+    # job b's re-plan may still provision freely in the source region
+    assert rb.replans[-1].plan.solver_status == "optimal"
+    assert svc.vm_caps_by_job.get(1) is None
+
+
+def test_fault_after_completion_does_not_inflate_makespan(top):
+    """A scripted fault long after every job finished must not drag the
+    reported makespan out to the fault time."""
+    svc = _service(top)
+    s, d = top.index(SRC), top.index(DST)
+    rep = svc.run(faults=[LinkDegrade(t_s=500.0, src=s, dst=d, factor=0.5)])
+    assert rep.all_done and not rep.replans
+    assert rep.time_s < 400.0
+
+
+def test_service_reports_realized_vs_planned(top):
+    rep = _service(top).run()
+    for j in rep.jobs:
+        assert j.planned_cost > 0 and j.planned_tput_gbps > 0
+        assert j.cost_ratio == pytest.approx(
+            j.realized_cost / j.planned_cost, rel=1e-9
+        )
+        assert j.tput_ratio == pytest.approx(
+            j.realized_tput_gbps / j.planned_tput_gbps, rel=1e-9
+        )
+
+
+def test_admission_after_faults_plans_on_degraded_view(top):
+    """A job submitted to a service that already carries degraded links is
+    planned (and its predictions priced) against that view — it routes
+    around the dead link instead of limping through it mispredicted."""
+    svc = TransferService(top, backend="jax", max_relays=6)
+    svc.submit(TransferRequest("first", SRC, DST, 2.0, 4.0))
+    s, d = top.index(SRC), top.index(DST)
+    svc.run(faults=[LinkDegrade(t_s=1.0, src=s, dst=d, factor=0.05)])
+    assert svc.degraded_links  # the degraded view persists across runs
+    svc.submit(TransferRequest("late", SRC, DST, 2.0, 4.0))
+    rep = svc.run()
+    (late,) = [j for j in rep.jobs if j.request.name == "late"]
+    assert late.status == "done"
+    plan = late.plan
+    # the admission plan respects the degraded 4b row of the dead link
+    phi = svc.degraded_links[(s, d)]
+    assert plan.F[s, d] <= phi * top.tput[s, d] * plan.M[s, d] \
+        / top.limit_conn + 1e-6
+
+
+def test_service_on_reference_simulator(top):
+    """The orchestrator is simulator-agnostic: running the segment sims on
+    the object-per-connection oracle gives the same delivered volumes."""
+    s, d = top.index(SRC), top.index(DST)
+    faults = [LinkDegrade(t_s=3.0, src=s, dst=d, factor=0.5)]
+    fast = _service(top).run(faults=faults)
+    slow = _service(top).run(faults=faults, sim=simulate_multi_reference)
+    assert [j.delivered_gb for j in fast.jobs] == pytest.approx(
+        [j.delivered_gb for j in slow.jobs]
+    )
+    assert [j.status for j in fast.jobs] == [j.status for j in slow.jobs]

@@ -1,6 +1,5 @@
 """Sharding-rule resolution and elastic rescale planning."""
 
-import jax
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """Training loop, fault tolerance, checkpointing, pipeline resume."""
 
-import shutil
 
 import jax
 import jax.numpy as jnp
