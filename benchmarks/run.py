@@ -27,6 +27,7 @@ from . import (  # noqa: F401
     fig9_microbench,
     fig10_overlay_vs_vms,
     flowsim_bench,
+    multicast_bench,
     multijob_bench,
     roofline,
     solver_bench,
@@ -44,6 +45,7 @@ MODULES = {
     "solver": solver_bench,
     "flowsim": flowsim_bench,
     "multijob": multijob_bench,
+    "multicast": multicast_bench,
     "roofline": roofline,
 }
 

@@ -1,8 +1,10 @@
 """Cross-region checkpoint replication — the framework's verbatim Skyplane
 job. After a checkpoint commits, its files are bulk-transferred from the
-training region's object store to disaster-recovery regions through the
-cost/throughput-optimal overlay, and executed on the real-bytes gateway
-chain (transfer.gateway) with checksum verification.
+training region's object store to the disaster-recovery regions through ONE
+multicast overlay (ISSUE 3): the planner builds distribution trees whose
+shared hops are billed once, instead of paying source egress per DR region,
+and the real-bytes gateway fans chunks out at the relays with per-
+destination checksum verification.
 """
 
 from __future__ import annotations
@@ -10,18 +12,27 @@ from __future__ import annotations
 import dataclasses
 from pathlib import Path
 
+from repro.core.plan import MulticastPlan
 from repro.core.planner import Planner
 from repro.core.topology import Topology
 from repro.transfer.gateway import (
     DirStore,
     GatewayReport,
+    MulticastGatewayReport,
     ObjectStore,
-    transfer_objects,
+    transfer_objects_multicast,
 )
 
 
 @dataclasses.dataclass
 class ReplicationReport:
+    """Per-destination view of one multicast replication.
+
+    ``plan_cost`` / ``plan_cost_per_gb`` are the cost of the WHOLE
+    one-to-many transfer (shared hops are billed once, so per-destination
+    cost is not separable); ``plan_tput_gbps`` is this destination's
+    planned delivery rate."""
+
     destination: str
     plan_tput_gbps: float
     plan_cost: float
@@ -42,11 +53,27 @@ def replicate_checkpoint(
     max_relays: int = 8,
     volume_gb: float | None = None,
 ) -> list[ReplicationReport]:
-    """Replicate all files of a committed checkpoint to each DR region.
+    """Replicate all files of a committed checkpoint to every DR region
+    through one multicast transfer.
 
-    Exactly one of cost_ceiling_per_gb / tput_floor_gbps selects the
-    planner mode (paper §4: tput-max under cost ceiling, or cost-min under
-    tput floor). Defaults to cost-min at half the max achievable rate."""
+    At most one of ``cost_ceiling_per_gb`` / ``tput_floor_gbps`` selects the
+    planner mode (paper §4: tput-max under a cost ceiling, or cost-min under
+    a per-destination tput floor); passing both raises — silently ignoring
+    the floor would hand back a plan violating the caller's SLO. With
+    neither, cost-min at half the max achievable uniform rate. Every entry
+    of ``dst_regions`` must have a store in ``dst_stores`` — checked before
+    any planning or byte movement."""
+    if cost_ceiling_per_gb is not None and tput_floor_gbps is not None:
+        raise ValueError(
+            "pass at most one of cost_ceiling_per_gb / tput_floor_gbps "
+            "(they select mutually exclusive planner modes)"
+        )
+    missing = [d for d in dst_regions if d not in dst_stores]
+    if missing:
+        raise ValueError(f"dst_regions missing from dst_stores: {missing}")
+    if not dst_regions:
+        raise ValueError("no destination regions")
+
     ckpt_path = Path(ckpt_path)
     src_store = DirStore(ckpt_path)
     keys = src_store.keys()
@@ -54,27 +81,44 @@ def replicate_checkpoint(
         volume_gb = sum(src_store.size(k) for k in keys) / 1e9
     planner = Planner(top, max_relays=max_relays)
 
+    if cost_ceiling_per_gb is not None:
+        plan = planner.plan_multicast_tput_max(
+            src_region, dst_regions, cost_ceiling_per_gb, volume_gb
+        )
+    else:
+        goal = tput_floor_gbps or \
+            planner.max_multicast_throughput(src_region, dst_regions) * 0.5
+        plan = planner.plan_multicast_cost_min(
+            src_region, dst_regions, goal, volume_gb
+        )
+
+    gw = transfer_objects_multicast(
+        plan, src_store, dst_stores, keys
+    )
+    return reports_from(plan, gw, dst_regions, top)
+
+
+def reports_from(
+    plan: MulticastPlan,
+    gw: MulticastGatewayReport,
+    dst_regions: list[str],
+    top: Topology,
+) -> list[ReplicationReport]:
+    """Per-destination ReplicationReports for a finished multicast run."""
     reports = []
     for dst in dst_regions:
-        if cost_ceiling_per_gb is not None:
-            plan = planner.plan_tput_max(
-                src_region, dst, cost_ceiling_per_gb, volume_gb
-            )
-        else:
-            goal = tput_floor_gbps or planner.max_throughput(src_region, dst) * 0.5
-            plan = planner.plan_cost_min(src_region, dst, goal, volume_gb)
-        gw = transfer_objects(plan, src_store, dst_stores[dst], keys)
+        d = top.index(dst)
         relays = sorted(
-            {r for path, _ in plan.paths() for r in path[1:-1]}
+            {r for path, _ in plan.paths_to(d) for r in path[1:-1]}
         )
         reports.append(
             ReplicationReport(
                 destination=dst,
-                plan_tput_gbps=plan.throughput,
+                plan_tput_gbps=plan.delivered_gbps(d),
                 plan_cost=plan.total_cost,
                 plan_cost_per_gb=plan.cost_per_gb,
                 relay_regions=[top.keys()[r] for r in relays],
-                gateway=gw,
+                gateway=gw.per_dest[dst],
             )
         )
     return reports

@@ -49,6 +49,7 @@ baseline.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -411,6 +412,424 @@ def structure(top: Topology, src: int, dst: int) -> LPStructure:
     s = cache.get(key)
     if s is None:
         s = LPStructure(top, src, dst)
+        cache[key] = s
+    return s
+
+
+# ---------------------------------------------------------------- multicast
+@dataclasses.dataclass
+class McPinPattern:
+    """Column partition + reduced matrices for one (pin_n, pin_m) choice of
+    the multicast structure. Mirrors ``PinPattern`` except the goal rows are
+    arrays (one 4c and one 4d row per destination commodity)."""
+
+    pinned: np.ndarray  # [nx] bool
+    A_ub_free: np.ndarray
+    A_ub_pin: np.ndarray
+    keep_ub: np.ndarray
+    drop_ub: np.ndarray
+    A_eq_free: np.ndarray
+    keep_eq: np.ndarray
+    drop_eq: np.ndarray
+    c_free: np.ndarray
+    integer_mask_free: np.ndarray
+    rows_4c: np.ndarray  # [D] goal rows remapped into kept-row space
+    rows_4d: np.ndarray
+
+    @property
+    def n_free(self) -> int:
+        return self.A_ub_free.shape[1]
+
+
+@dataclasses.dataclass
+class MulticastLPData:
+    """Concrete multicast LP (same contract as LPData, D commodities)."""
+
+    c: np.ndarray
+    A_ub: np.ndarray
+    b_ub: np.ndarray
+    A_eq: np.ndarray
+    b_eq: np.ndarray
+    integer_mask: np.ndarray
+    edges: list[tuple[int, int]]
+    num_regions: int
+    src: int
+    dsts: tuple[int, ...]
+    goals: np.ndarray  # [D] per-destination throughput floors (Gbit/s)
+    fixed_values: np.ndarray | None = None
+    trivially_infeasible: bool = False
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    def _full_x(self, x: np.ndarray) -> np.ndarray:
+        if self.fixed_values is None:
+            return x
+        full = self.fixed_values.copy()
+        full[np.isnan(self.fixed_values)] = x
+        return full
+
+    def split(
+        self, x: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """solver x -> (G [V,V], F [D,V,V], N [V], M [V,V])."""
+        x = self._full_x(np.asarray(x, dtype=float))
+        e, v, d = self.n_edges, self.num_regions, len(self.dsts)
+        eu, ew = _edge_arrays(self.edges)
+        G = np.zeros((v, v))
+        F = np.zeros((d, v, v))
+        M = np.zeros((v, v))
+        G[eu, ew] = x[:e]
+        for k in range(d):
+            F[k][eu, ew] = x[(1 + k) * e : (2 + k) * e]
+        off = (1 + d) * e
+        N = np.asarray(x[off : off + v], dtype=float).copy()
+        M[eu, ew] = x[off + v :]
+        return G, F, N, M
+
+
+class MulticastLPStructure:
+    """Cached multicast LP assembly for one (top, src, dsts) — the one-to-many
+    extension of Eq. 4a-4j (paper §5.1.4) used by checkpoint replication.
+
+    Decision vector:  x = [ G (E), F^0..F^{D-1} (D*E), N (V), M (E) ]
+
+      G_e    envelope flow on edge e — the rate at which *bytes actually
+             traverse* the link. A chunk forwarded over a hop serves every
+             downstream destination, so egress is billed on G exactly once
+             no matter how many commodities ride the link.
+      F^d_e  commodity flow toward destination d (F^d_e <= G_e).
+      N, M   shared VM / connection allocations, as in the unicast MILP.
+
+    Objective: <G, Cost_egress> + <N, Cost_vm> — the "bill each link once"
+    cost lever that makes one-to-many trees cheaper than N unicasts.
+
+    Inequality rows, fixed order (D = len(dsts)):
+      4b   G_e <= (tput_e / limit_conn) * M_e                     [E]
+      dom  F^d_e <= G_e                                           [D*E]
+      4c   sum_{e out of src} F^d_e >= goal_d                     [D]
+      4d   sum_{e into d} F^d_e >= goal_d                         [D]
+      4f/4g  VM ingress/egress caps on G                          [2V]
+      4h/4i  connection caps                                      [2V]
+      4j   N_v <= Limit_vm                                        [V]
+    Equalities: per-commodity flow conservation at every touched region
+    except {src, d} (a destination may relay to other destinations).
+
+    Like ``LPStructure``, assembly is O(rows*cols) exactly once per
+    (topology, src, dsts) — counted in ``N_STRUCT_BUILDS`` — and every
+    variant (per-goal RHS, pinned N/M refits, degraded-link cuts via
+    ``extra_ub``) derives in O(rows) from the cached matrices, so
+    failure-driven re-planning is a pure cache hit.
+    """
+
+    def __init__(self, top: Topology, src: int, dsts: tuple[int, ...]):
+        global N_STRUCT_BUILDS
+        N_STRUCT_BUILDS += 1
+        self.top = top
+        self.src = src
+        self.dsts = tuple(int(d) for d in dsts)
+        if src in self.dsts:
+            raise ValueError("source cannot be a multicast destination")
+        if len(set(self.dsts)) != len(self.dsts):
+            raise ValueError("duplicate multicast destinations")
+        # edges into the source are never useful; edges out of a destination
+        # stay (a destination can relay on toward another destination)
+        self.edges = top.edge_list(src, None)
+        self.eu, self.ew = _edge_arrays(self.edges)
+        e, v, D = len(self.edges), top.num_regions, len(self.dsts)
+        self.n_edges = e
+        self.num_regions = v
+        self.n_dsts = D
+        nx = (1 + D) * e + v + e
+        self.nx = nx
+        self.iN = (1 + D) * e  # first N column
+        self.iM = (1 + D) * e + v  # first M column
+        ar = np.arange(e)
+
+        # ---- objective: egress billed once on the envelope, VMs as usual
+        c = np.zeros(nx)
+        c[:e] = top.price_egress[self.eu, self.ew] / GBIT_PER_GB
+        c[self.iN : self.iN + v] = top.price_vm
+        self.c = c
+
+        # ---- A_ub in the fixed row order documented above
+        m_ub = e + D * e + 2 * D + 5 * v
+        self.rows_4c = e + D * e + np.arange(D)
+        self.rows_4d = e + D * e + D + np.arange(D)
+        r_4f = e + D * e + 2 * D
+        A = np.zeros((m_ub, nx))
+        b0 = np.zeros(m_ub)
+        # 4b on the envelope
+        A[ar, ar] = 1.0
+        A[ar, self.iM + ar] = -top.tput[self.eu, self.ew] / top.limit_conn
+        # dominance F^d <= G
+        for k in range(D):
+            A[e + k * e + ar, (1 + k) * e + ar] = 1.0
+            A[e + k * e + ar, ar] = -1.0
+        # 4c / 4d per commodity (b filled per-goal in lp())
+        for k, d in enumerate(self.dsts):
+            A[self.rows_4c[k], (1 + k) * e + ar[self.eu == src]] = -1.0
+            A[self.rows_4d[k], (1 + k) * e + ar[self.ew == d]] = -1.0
+        # 4f / 4g on the envelope
+        A[r_4f + self.ew, ar] = 1.0
+        A[r_4f + np.arange(v), self.iN + np.arange(v)] = -top.limit_ingress
+        A[r_4f + v + self.eu, ar] = 1.0
+        A[r_4f + v + np.arange(v), self.iN + np.arange(v)] = -top.limit_egress
+        # 4h / 4i
+        A[r_4f + 2 * v + self.eu, self.iM + ar] = 1.0
+        A[r_4f + 2 * v + np.arange(v), self.iN + np.arange(v)] = \
+            -float(top.limit_conn)
+        A[r_4f + 3 * v + self.ew, self.iM + ar] = 1.0
+        A[r_4f + 3 * v + np.arange(v), self.iN + np.arange(v)] = \
+            -float(top.limit_conn)
+        # 4j
+        A[r_4f + 4 * v + np.arange(v), self.iN + np.arange(v)] = 1.0
+        b0[r_4f + 4 * v :] = float(top.limit_vm)
+        self.A_ub = A
+        self.b_ub0 = b0
+
+        # ---- per-commodity flow conservation
+        inc = np.zeros((v, e))
+        np.add.at(inc, (self.ew, ar), 1.0)
+        np.add.at(inc, (self.eu, ar), -1.0)
+        touched = np.zeros(v, dtype=bool)
+        touched[self.eu] = True
+        touched[self.ew] = True
+        eq_rows = []
+        for k, d in enumerate(self.dsts):
+            relay = touched.copy()
+            relay[[src, d]] = False
+            if not relay.any():
+                continue
+            block = np.zeros((int(relay.sum()), nx))
+            block[:, (1 + k) * e : (2 + k) * e] = inc[relay]
+            eq_rows.append(block)
+        self.A_eq = np.vstack(eq_rows) if eq_rows else np.zeros((0, nx))
+        self.b_eq = np.zeros(self.A_eq.shape[0])
+
+        self.integer_mask = np.zeros(nx, dtype=bool)
+        self.integer_mask[self.iN :] = True  # N and M
+
+        self._pin_patterns: dict[tuple[bool, bool], McPinPattern] = {}
+        self._reduced_cache: dict = {}
+
+    # ----------------------------------------------------------- exact presolve
+    def reduced(
+        self, region_support: np.ndarray
+    ) -> tuple["MulticastLPStructure", np.ndarray] | None:
+        """Exact presolve for pinned solves: the sub-structure over supported
+        regions. The source and every destination are force-kept even with
+        N = 0 pinned — their 4f/4g rows then force zero delivery, which the
+        scale probe reports faithfully — so only dead relays are dropped
+        (lossless, as in ``LPStructure.reduced``). Cached per support;
+        returns None when no edge survives."""
+        region_support = np.asarray(region_support, dtype=bool).copy()
+        region_support[[self.src, *self.dsts]] = True
+        key = region_support.tobytes()
+        hit = self._reduced_cache.get(key)
+        if hit is not None:
+            return hit if hit != "empty" else None
+        keep = np.flatnonzero(region_support)
+        rtop = self.top.subgraph([int(i) for i in keep])
+        rs = int(np.searchsorted(keep, self.src))
+        rds = tuple(int(np.searchsorted(keep, d)) for d in self.dsts)
+        rstruct = MulticastLPStructure(rtop, rs, rds)
+        if rstruct.n_edges == 0:
+            self._reduced_cache[key] = "empty"
+            return None
+        out = (rstruct, keep)
+        self._reduced_cache[key] = out
+        return out
+
+    def reduced_cached(self, region_support: np.ndarray):
+        """Like ``reduced`` but NEVER assembles: returns the cached
+        reduction, None for a cached-empty support, or "miss". Constrained
+        re-plans use this so a cold support falls back to the full-size
+        solve instead of building a structure mid-replan (the
+        N_STRUCT_BUILDS == 0 contract of failure-driven re-planning)."""
+        region_support = np.asarray(region_support, dtype=bool).copy()
+        region_support[[self.src, *self.dsts]] = True
+        hit = self._reduced_cache.get(region_support.tobytes())
+        if hit is None:
+            return "miss"
+        return None if hit == "empty" else hit
+
+    # ------------------------------------------------------------ pin patterns
+    def pin_pattern(self, pin_n: bool, pin_m: bool) -> McPinPattern:
+        key = (pin_n, pin_m)
+        pat = self._pin_patterns.get(key)
+        if pat is not None:
+            return pat
+        v = self.num_regions
+        pinned = np.zeros(self.nx, dtype=bool)
+        if pin_n:
+            pinned[self.iN : self.iN + v] = True
+        if pin_m:
+            pinned[self.iM :] = True
+        free = ~pinned
+        A_ub_free = self.A_ub[:, free]
+        A_eq_free = self.A_eq[:, free]
+        drop_ub = (
+            np.abs(A_ub_free).max(axis=1, initial=0.0) < _ZERO_ROW_TOL
+            if pinned.any()
+            else np.zeros(self.A_ub.shape[0], dtype=bool)
+        )
+        # eq rows only touch F columns, which are never pinned
+        drop_eq = np.zeros(self.A_eq.shape[0], dtype=bool)
+        keep_ub = ~drop_ub
+        newpos = np.cumsum(keep_ub) - 1
+        # goal rows touch F columns only: never dropped by pinning
+        pat = McPinPattern(
+            pinned=pinned,
+            A_ub_free=np.ascontiguousarray(A_ub_free[keep_ub]),
+            A_ub_pin=np.ascontiguousarray(self.A_ub[:, pinned]),
+            keep_ub=keep_ub,
+            drop_ub=drop_ub,
+            A_eq_free=np.ascontiguousarray(A_eq_free),
+            keep_eq=~drop_eq,
+            drop_eq=drop_eq,
+            c_free=self.c[free],
+            integer_mask_free=self.integer_mask[free],
+            rows_4c=newpos[self.rows_4c].astype(np.int64),
+            rows_4d=newpos[self.rows_4d].astype(np.int64),
+        )
+        self._pin_patterns[key] = pat
+        return pat
+
+    def pin_values(
+        self, fixed_n: np.ndarray | None, fixed_m: np.ndarray | None
+    ) -> np.ndarray:
+        fv = np.full(self.nx, np.nan)
+        if fixed_n is not None:
+            fv[self.iN : self.iN + self.num_regions] = np.asarray(
+                fixed_n, dtype=float
+            )
+        if fixed_m is not None:
+            fm = np.asarray(fixed_m, dtype=float)
+            fv[self.iM :] = fm[self.eu, self.ew]
+        return fv
+
+    # ---------------------------------------------------------------- LP build
+    def _b_and_trivial(
+        self,
+        goals: np.ndarray,
+        pat: McPinPattern,
+        fv: np.ndarray,
+        extra_ub,
+    ):
+        """(b_ub_kept, A_extra_free, b_extra, trivially_infeasible)."""
+        b_ub = self.b_ub0.copy()
+        b_ub[self.rows_4c] = -goals
+        b_ub[self.rows_4d] = -goals
+        trivial = False
+        if pat.pinned.any():
+            xpin = fv[pat.pinned]
+            b_ub = b_ub - pat.A_ub_pin @ xpin
+            trivial = bool((b_ub[pat.drop_ub] < -_RHS_TOL).any())
+        A_ex, b_ex = None, None
+        if extra_ub:
+            ex_rows = np.stack([np.asarray(r, dtype=float) for r, _ in extra_ub])
+            ex_b = np.array([float(b) for _, b in extra_ub])
+            if pat.pinned.any():
+                ex_b = ex_b - ex_rows[:, pat.pinned] @ fv[pat.pinned]
+            ex_free = ex_rows[:, ~pat.pinned]
+            ex_zero = np.abs(ex_free).max(axis=1, initial=0.0) < _ZERO_ROW_TOL
+            if (ex_b[ex_zero] < -_RHS_TOL).any():
+                trivial = True
+            A_ex, b_ex = ex_free[~ex_zero], ex_b[~ex_zero]
+        return b_ub[pat.keep_ub], A_ex, b_ex, trivial
+
+    def lp(
+        self,
+        goals: np.ndarray,
+        *,
+        fixed_n: np.ndarray | None = None,
+        fixed_m: np.ndarray | None = None,
+        extra_ub: list[tuple[np.ndarray, float]] | None = None,
+    ) -> MulticastLPData:
+        """O(rows) multicast LP for per-destination goals (Gbit/s)."""
+        goals = np.asarray(goals, dtype=float)
+        pat = self.pin_pattern(fixed_n is not None, fixed_m is not None)
+        fv = self.pin_values(fixed_n, fixed_m)
+        b_keep, A_ex, b_ex, trivial = self._b_and_trivial(
+            goals, pat, fv, extra_ub
+        )
+        A_ub = pat.A_ub_free
+        if A_ex is not None and A_ex.size:
+            A_ub = np.vstack([A_ub, A_ex])
+            b_keep = np.concatenate([b_keep, b_ex])
+        return MulticastLPData(
+            c=pat.c_free, A_ub=A_ub, b_ub=b_keep,
+            A_eq=pat.A_eq_free, b_eq=self.b_eq.copy(),
+            integer_mask=pat.integer_mask_free, edges=self.edges,
+            num_regions=self.num_regions, src=self.src, dsts=self.dsts,
+            goals=goals,
+            fixed_values=fv if pat.pinned.any() else None,
+            trivially_infeasible=trivial,
+        )
+
+    def probe_lp(
+        self,
+        goals: np.ndarray,
+        *,
+        fixed_n: np.ndarray | None = None,
+        fixed_m: np.ndarray | None = None,
+        extra_ub: list[tuple[np.ndarray, float]] | None = None,
+        cap: float | None = 1.0,
+    ):
+        """Uniform-scale feasibility probe: max t s.t. every commodity
+        delivers >= t * goal_d. Always feasible (x=0, t=0), so the round-down
+        pipeline never hands the IPM an infeasible instance — the multicast
+        analogue of the unicast max-flow probe.
+
+        Returns (c, A_ub, b_ub, A_eq, b_eq) over [free columns | t], or None
+        when the pinned RHS is trivially infeasible. ``cap`` bounds t (1.0
+        for feasibility checks — only "can we hit the goals" matters; None
+        for max-rate probes with unit goals).
+        """
+        goals = np.asarray(goals, dtype=float)
+        pat = self.pin_pattern(fixed_n is not None, fixed_m is not None)
+        fv = self.pin_values(fixed_n, fixed_m)
+        # goal rows move into the t column: RHS uses goals=0
+        b_keep, A_ex, b_ex, trivial = self._b_and_trivial(
+            np.zeros_like(goals), pat, fv, extra_ub
+        )
+        if trivial:
+            return None
+        tcol = np.zeros(self.A_ub.shape[0])
+        tcol[self.rows_4c] = goals
+        tcol[self.rows_4d] = goals
+        A_ub = np.hstack([pat.A_ub_free, tcol[pat.keep_ub][:, None]])
+        if A_ex is not None and A_ex.size:
+            A_ub = np.vstack(
+                [A_ub, np.hstack([A_ex, np.zeros((A_ex.shape[0], 1))])]
+            )
+            b_keep = np.concatenate([b_keep, b_ex])
+        if cap is not None:
+            cap_row = np.zeros(A_ub.shape[1])
+            cap_row[-1] = 1.0
+            A_ub = np.vstack([A_ub, cap_row[None, :]])
+            b_keep = np.concatenate([b_keep, [float(cap)]])
+        A_eq = np.hstack(
+            [pat.A_eq_free, np.zeros((pat.A_eq_free.shape[0], 1))]
+        )
+        c = np.zeros(A_ub.shape[1])
+        c[-1] = -1.0
+        return c, A_ub, b_keep, A_eq, self.b_eq.copy()
+
+
+def multicast_structure(
+    top: Topology, src: int, dsts: Sequence[int]
+) -> MulticastLPStructure:
+    """The cached MulticastLPStructure for (top, src, dsts). Shares the
+    Topology-instance cache with the unicast structures (distinct key space),
+    so re-planning a degraded multicast job is a pure cache hit."""
+    cache = top._lp_struct_cache
+    key = ("mc", src, tuple(int(d) for d in dsts))
+    s = cache.get(key)
+    if s is None:
+        s = MulticastLPStructure(top, src, tuple(int(d) for d in dsts))
         cache[key] = s
     return s
 

@@ -34,8 +34,13 @@ import dataclasses
 import numpy as np
 
 from . import milp
-from .plan import TransferPlan
-from .solver.bnb import solve_milp, solve_milp_batched
+from .plan import MulticastPlan, TransferPlan
+from .solver.bnb import (
+    _mc_scale_probe,
+    solve_milp,
+    solve_milp_batched,
+    solve_multicast,
+)
 from .solver.ipm import solve_lp
 from .topology import Topology
 
@@ -162,6 +167,139 @@ class Planner:
         best = max(feasible, key=lambda p: p.tput_goal)
         return best.plan
 
+    # -------------------------------------------------------------- multicast
+    def plan_multicast_cost_min(
+        self,
+        src: str,
+        dsts: list[str],
+        tput_floor_gbps,
+        volume_gb: float,
+        *,
+        degraded_links: dict[tuple[int, int], float] | None = None,
+        vm_caps: dict[int, float] | None = None,
+    ) -> MulticastPlan:
+        """One-to-many cost-min: minimize $ with every destination receiving
+        at least its throughput floor, billing each overlay link's egress
+        once for the shared chunk stream (core/milp.MulticastLPStructure).
+
+        ``tput_floor_gbps`` is a scalar floor applied to every destination
+        or a per-destination sequence (zeros drop a destination from the
+        trees — how the service re-plans only the surviving branches of a
+        partially completed replication). degraded_links / vm_caps take
+        full-topology indices and become extra rows on the cached structure,
+        exactly as in ``plan_cost_min`` — re-planning re-assembles nothing.
+
+        A single destination delegates to the unicast round-down, so the
+        plan is bit-for-bit the one ``plan_cost_min`` returns.
+        """
+        goals = np.asarray(tput_floor_gbps, dtype=float)
+        if goals.ndim == 0:
+            goals = np.full(len(dsts), float(goals))
+        if goals.shape != (len(dsts),):
+            raise ValueError("need one throughput floor per destination")
+        if len(dsts) == 1:
+            uni = self.plan_cost_min(
+                src, dsts[0], float(goals[0]), volume_gb,
+                degraded_links=degraded_links, vm_caps=vm_caps,
+            )
+            return MulticastPlan(
+                top=self.top, src=uni.src, dsts=[uni.dst],
+                tput_goals=goals, volume_gb=volume_gb,
+                G=uni.F.copy(), F=uni.F[None, :, :].copy(),
+                N=uni.N, M=uni.M, solver_status=uni.solver_status,
+            )
+        sub, s, ds, keep = self._prune_mc(src, dsts)
+        cuts = None
+        if degraded_links or vm_caps:
+            struct = milp.multicast_structure(sub, s, ds)
+            cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
+        res = solve_multicast(sub, s, ds, goals, extra_ub=cuts or None)
+        return self._lift_mc(sub, keep, src, dsts, goals, volume_gb, res)
+
+    def plan_multicast_tput_max(
+        self,
+        src: str,
+        dsts: list[str],
+        cost_ceiling_per_gb: float,
+        volume_gb: float,
+        *,
+        n_samples: int = 12,
+    ) -> MulticastPlan:
+        """One-to-many throughput-max under a cost ceiling (§5.2 applied to
+        the multicast MILP): sweep uniform per-destination floors, estimate
+        the cost frontier from ONE batched relaxation solve (the sweep LPs
+        share every matrix of the cached structure and differ only in the
+        goal rows of b), then integerize candidates fastest-first until one
+        fits the ceiling."""
+        if len(dsts) == 1:
+            uni = self.plan_tput_max(src, dsts[0], cost_ceiling_per_gb,
+                                     volume_gb)
+            return MulticastPlan(
+                top=self.top, src=uni.src, dsts=[uni.dst],
+                tput_goals=np.array([uni.tput_goal]), volume_gb=volume_gb,
+                G=uni.F.copy(), F=uni.F[None, :, :].copy(),
+                N=uni.N, M=uni.M, solver_status=uni.solver_status,
+            )
+        from .solver.ipm_batch import solve_lp_batched_auto
+
+        sub, s, ds, keep = self._prune_mc(src, dsts)
+        hi = self.max_multicast_throughput(src, dsts)
+        if hi <= 0:
+            raise ValueError(f"no multicast path from {src} to {dsts}")
+        rates = np.linspace(hi / n_samples, hi * 0.999, n_samples)
+        struct = milp.multicast_structure(sub, s, ds)
+        lp = struct.lp(np.full(len(ds), float(rates[0])))
+        b_batch = np.tile(lp.b_ub[None, :], (n_samples, 1))
+        for i, g in enumerate(rates):
+            b_batch[i, struct.rows_4c] = -g
+            b_batch[i, struct.rows_4d] = -g
+        _, _funs, ok = solve_lp_batched_auto(
+            lp.c, lp.A_ub, b_batch, lp.A_eq, lp.b_eq
+        )
+        # the batched relaxation sweep prunes infeasible rates; exact
+        # integerized costs are re-checked below, fastest-first
+        cand = sorted(
+            (float(g) for i, g in enumerate(rates) if ok[i]),
+            reverse=True,
+        )
+        best: MulticastPlan | None = None
+        for g in cand:
+            plan = self.plan_multicast_cost_min(src, dsts, g, volume_gb)
+            if plan.solver_status != "optimal":
+                continue
+            if best is None or plan.cost_per_gb < best.cost_per_gb:
+                best = plan
+            if plan.cost_per_gb <= cost_ceiling_per_gb + 1e-9:
+                return plan
+        if best is None:
+            raise RuntimeError(f"no feasible multicast plan {src}->{dsts}")
+        best.solver_status = "cost_ceiling_infeasible"
+        return best
+
+    def max_multicast_throughput(
+        self,
+        src: str,
+        dsts: list[str],
+        *,
+        degraded_links: dict[tuple[int, int], float] | None = None,
+        vm_caps: dict[int, float] | None = None,
+    ) -> float:
+        """Max uniform per-destination rate (Gbit/s) with N at the VM limit
+        — the multicast scale probe with unit goals and no cap."""
+        sub, s, ds, keep = self._prune_mc(src, dsts)
+        struct = milp.multicast_structure(sub, s, ds)
+        cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
+        fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
+        if vm_caps:
+            inv = {full: i for i, full in enumerate(keep)}
+            for r, cap in vm_caps.items():
+                if r in inv:
+                    fixed_n[inv[r]] = min(fixed_n[inv[r]], float(cap))
+        return _mc_scale_probe(
+            struct, np.ones(len(ds)), fixed_n=fixed_n,
+            extra_ub=cuts or None, cap=None,
+        )
+
     def pareto_frontier_fast(
         self,
         src: str,
@@ -284,6 +422,102 @@ class Planner:
             row[e + sr] = 1.0  # N_r <= cap (unhealthy region)
             cuts.append((row, float(cap)))
         return cuts
+
+    @staticmethod
+    def _mc_degrade_cuts(
+        struct,
+        keep: list[int],
+        degraded_links: dict[tuple[int, int], float] | None,
+        vm_caps: dict[int, float] | None,
+    ) -> list[tuple[np.ndarray, float]]:
+        """Degraded-topology rows in the multicast variable space: the
+        tightened 4b row binds the *envelope* (what actually crosses the
+        link), and VM caps bind N — all as extra_ub on the cached
+        structure, nothing re-assembled."""
+        inv = {full: i for i, full in enumerate(keep)}
+        edge_ix = {edge: k for k, edge in enumerate(struct.edges)}
+        cuts: list[tuple[np.ndarray, float]] = []
+        for (a, b), phi in (degraded_links or {}).items():
+            sa, sb = inv.get(a), inv.get(b)
+            if sa is None or sb is None or (sa, sb) not in edge_ix:
+                continue
+            k = edge_ix[(sa, sb)]
+            row = np.zeros(struct.nx)
+            row[k] = 1.0  # G_e <= phi * tput_e / limit_conn * M_e
+            row[struct.iM + k] = -float(phi) * struct.top.tput[sa, sb] \
+                / struct.top.limit_conn
+            cuts.append((row, 0.0))
+        for r, cap in (vm_caps or {}).items():
+            sr = inv.get(r)
+            if sr is None or float(cap) >= struct.top.limit_vm:
+                continue
+            row = np.zeros(struct.nx)
+            row[struct.iN + sr] = 1.0
+            cuts.append((row, float(cap)))
+        return cuts
+
+    def _prune_mc(self, src: str, dsts: list[str]):
+        """Pruned candidate subgraph for one-to-many planning: source, all
+        destinations, and the ``max_relays`` regions with the best two-hop
+        bottleneck score toward ANY destination. Memoized per (src, dsts)
+        so the multicast LP structure cached on it survives re-planning."""
+        key = (src, tuple(dsts))
+        hit = self._prune_cache.get(key)
+        if hit is not None:
+            return hit
+        s_full = self.top.index(src)
+        d_full = [self.top.index(d) for d in dsts]
+        v = self.top.num_regions
+        if v <= self.max_relays + 1 + len(dsts):
+            keep = list(range(v))
+        else:
+            score = np.full(v, -np.inf)
+            for d in d_full:
+                score = np.maximum(
+                    score, np.minimum(self.top.tput[s_full, :],
+                                      self.top.tput[:, d])
+                )
+            score[[s_full, *d_full]] = -np.inf
+            order = np.argsort(-score)
+            relays = [int(i) for i in order[: self.max_relays]
+                      if np.isfinite(score[i])]
+            keep = sorted({s_full, *d_full, *relays})
+        sub = self.top.subgraph(keep)
+        s = keep.index(s_full)
+        ds = tuple(keep.index(d) for d in d_full)
+        out = (sub, s, ds, keep)
+        self._prune_cache[key] = out
+        return out
+
+    def _lift_mc(
+        self, sub, keep, src, dsts, goals, volume_gb, res
+    ) -> MulticastPlan:
+        v = self.top.num_regions
+        D = len(dsts)
+        ix = np.asarray(keep)
+        G = np.zeros((v, v))
+        F = np.zeros((D, v, v))
+        M = np.zeros((v, v))
+        N = np.zeros(v)
+        G[np.ix_(ix, ix)] = res.G
+        F[np.ix_(np.arange(D), ix, ix)] = res.F
+        M[np.ix_(ix, ix)] = res.M
+        N[ix] = res.N
+        achieved = getattr(res, "achieved_goals", None)
+        tgt = (np.minimum(goals, achieved) if achieved is not None
+               else np.asarray(goals, dtype=float))
+        return MulticastPlan(
+            top=self.top,
+            src=self.top.index(src),
+            dsts=[self.top.index(d) for d in dsts],
+            tput_goals=tgt,
+            volume_gb=volume_gb,
+            G=G,
+            F=F,
+            N=N,
+            M=M,
+            solver_status=res.status,
+        )
 
     def _prune(self, src: str, dst: str):
         """Pruned candidate subgraph for (src, dst), memoized so the LP

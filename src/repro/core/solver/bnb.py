@@ -423,6 +423,255 @@ def solve_milp(
     return best
 
 
+# ------------------------------------------------------------------ multicast
+@dataclasses.dataclass
+class MulticastMILPResult:
+    """Round-down result of the multicast MILP (one source, D commodities)."""
+
+    G: np.ndarray  # [V,V] envelope Gbit/s — what egress is billed on
+    F: np.ndarray  # [D,V,V] per-commodity Gbit/s
+    N: np.ndarray  # [V] ints
+    M: np.ndarray  # [V,V] ints
+    objective: float  # $/s while the transfer runs
+    status: str
+    lp_objective: float
+    achieved_goals: np.ndarray  # [D] Gbit/s the integral plan provides
+    scale: float = 0.0  # uniform fraction of the requested goals achieved
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+
+def _mc_empty(top, n_dsts: int, status: str,
+              lp_obj: float = math.inf) -> MulticastMILPResult:
+    v = top.num_regions
+    return MulticastMILPResult(
+        G=np.zeros((v, v)), F=np.zeros((n_dsts, v, v)), N=np.zeros(v),
+        M=np.zeros((v, v)), objective=math.inf, status=status,
+        lp_objective=lp_obj, achieved_goals=np.zeros(n_dsts),
+    )
+
+
+def _mc_reduction(struct, fixed_n, allow_build: bool = True):
+    """Exact presolve routing for pinned multicast solves.
+
+    Returns "identity" when every region is live (or the solve must run
+    full-size), else (rstruct, keep, rn) — src and all destinations are
+    force-kept by ``reduced`` — or None when the reduction has no edges
+    left. ``allow_build=False`` (constrained re-plans) only ever REUSES a
+    cached reduction: a cold support solves full-size rather than
+    assembling anything mid-replan."""
+    support = np.asarray(fixed_n) > 0
+    support = support.copy()
+    support[[struct.src, *struct.dsts]] = True
+    if support.all():
+        return "identity"
+    if allow_build:
+        red = struct.reduced(support)
+    else:
+        red = struct.reduced_cached(support)
+        if red == "miss":
+            return "identity"
+    if red is None:
+        return None
+    rstruct, keep = red
+    return rstruct, keep, np.asarray(fixed_n, dtype=float)[keep]
+
+
+def _mc_map_cuts(struct, rstruct, keep, extra_ub):
+    """Map extra_ub rows from ``struct``'s variable space into a reduced
+    structure's. Exact: a dropped region has N pinned to 0, which forces
+    every G/F/M variable on its edges to 0 (4f-4i), so dropped columns
+    contribute nothing — kept columns are re-indexed, dropped ones vanish.
+    Rows that become all-zero are handled by the RHS-shift machinery."""
+    if not extra_ub:
+        return extra_ub
+    inv = {int(r): i for i, r in enumerate(keep)}
+    redge_ix = {e: i for i, e in enumerate(rstruct.edges)}
+    e_full, e_red = struct.n_edges, rstruct.n_edges
+    D = struct.n_dsts
+    kept_k, red_k = [], []
+    for k, (u, w) in enumerate(struct.edges):
+        ru, rw = inv.get(u), inv.get(w)
+        if ru is not None and rw is not None and (ru, rw) in redge_ix:
+            kept_k.append(k)
+            red_k.append(redge_ix[(ru, rw)])
+    kept_k = np.asarray(kept_k, dtype=np.int64)
+    red_k = np.asarray(red_k, dtype=np.int64)
+    kept_r = np.asarray(sorted(inv), dtype=np.int64)
+    red_r = np.asarray([inv[int(r)] for r in kept_r], dtype=np.int64)
+    out = []
+    for row, b in extra_ub:
+        row = np.asarray(row, dtype=float)
+        nrow = np.zeros(rstruct.nx)
+        for blk in range(1 + D):  # G then each commodity
+            nrow[blk * e_red + red_k] = row[blk * e_full + kept_k]
+        nrow[rstruct.iN + red_r] = row[struct.iN + kept_r]
+        nrow[rstruct.iM + red_k] = row[struct.iM + kept_k]
+        out.append((nrow, float(b)))
+    return out
+
+
+def _mc_scale_probe(struct, goals, *, fixed_n=None, fixed_m=None,
+                    extra_ub=None, cap: float | None = 1.0) -> float:
+    """Max uniform scale t with deliveries >= t * goal_d (see
+    MulticastLPStructure.probe_lp). Returns 0.0 on failure."""
+    if float(np.max(goals, initial=0.0)) <= 0.0:
+        return cap if cap is not None else math.inf
+    if fixed_n is not None:
+        red = _mc_reduction(struct, fixed_n, allow_build=not extra_ub)
+        if red is None:
+            return 0.0
+        if red != "identity":
+            rstruct, keep, rn = red
+            rM = (None if fixed_m is None
+                  else np.asarray(fixed_m)[np.ix_(keep, keep)])
+            return _mc_scale_probe(
+                rstruct, goals, fixed_n=rn, fixed_m=rM,
+                extra_ub=_mc_map_cuts(struct, rstruct, keep, extra_ub),
+                cap=cap,
+            )
+    probe = struct.probe_lp(goals, fixed_n=fixed_n, fixed_m=fixed_m,
+                            extra_ub=extra_ub, cap=cap)
+    if probe is None:
+        return 0.0
+    c, A_ub, b_ub, A_eq, b_eq = probe
+    res = solve_lp(c, A_ub, b_ub, A_eq, b_eq)
+    t = max(float(-(c @ res.x)), 0.0)
+    if res.ok:
+        return t
+    if (res.status == "max_iter" and res.primal_residual < 1e-5
+            and res.gap < 1e-6):
+        return t * (1.0 - 10.0 * res.primal_residual)
+    return 0.0
+
+
+def _mc_min_cost(struct, goals, *, fixed_n=None, fixed_m=None, extra_ub=None):
+    """Min-cost multicast solve at known-achievable goals; None on failure.
+
+    Returns ((G, F, N, M) in ``struct``'s full region space, objective)."""
+    if fixed_n is not None:
+        red = _mc_reduction(struct, fixed_n, allow_build=not extra_ub)
+        if red is None:
+            return None
+        if red != "identity":
+            rstruct, keep, rn = red
+            rM = (None if fixed_m is None
+                  else np.asarray(fixed_m)[np.ix_(keep, keep)])
+            fit = _mc_min_cost(
+                rstruct, goals, fixed_n=rn, fixed_m=rM,
+                extra_ub=_mc_map_cuts(struct, rstruct, keep, extra_ub),
+            )
+            if fit is None:
+                return None
+            (rG, rF, rN, rMM), fun = fit
+            v = struct.num_regions
+            G = np.zeros((v, v))
+            F = np.zeros((len(struct.dsts), v, v))
+            N = np.zeros(v)
+            M = np.zeros((v, v))
+            G[np.ix_(keep, keep)] = rG
+            F[np.ix_(np.arange(len(struct.dsts)), keep, keep)] = rF
+            N[keep] = rN
+            M[np.ix_(keep, keep)] = rMM
+            return (G, F, N, M), fun
+    lp = struct.lp(goals, fixed_n=fixed_n, fixed_m=fixed_m, extra_ub=extra_ub)
+    if lp.trivially_infeasible:
+        return None
+    res = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not _near_ok(res):
+        return None
+    return lp.split(res.x), float(res.fun)
+
+
+def solve_multicast(
+    top,
+    src: int,
+    dsts,
+    goals,
+    *,
+    extra_ub=None,
+) -> MulticastMILPResult:
+    """§5.1.3 round-down for the multicast MILP: one source, a commodity per
+    destination, egress billed once on the shared envelope.
+
+    Same pipeline shape as the unicast ``solve_milp``: root relaxation ->
+    floor N + feasibility-repair ladder -> fixed-N refit + connection
+    floor/top-up -> fixed-N+M refit — except the max-flow probes become
+    uniform-scale probes (max t with every commodity delivering t * goal_d),
+    which are always-feasible LPs. Every solve derives O(rows) from the
+    cached ``milp.MulticastLPStructure``; ``extra_ub`` rows (degraded links,
+    VM caps) ride on it without any re-assembly.
+    """
+    dsts = tuple(int(d) for d in dsts)
+    goals = np.asarray(goals, dtype=float)
+    if goals.ndim == 0:
+        goals = np.full(len(dsts), float(goals))
+    if goals.shape != (len(dsts),):
+        raise ValueError(f"need one goal per destination, got {goals.shape}")
+    struct = milp.multicast_structure(top, src, dsts)
+    v = struct.num_regions
+
+    if float(goals.max(initial=0.0)) <= 0.0:
+        out = _mc_empty(top, len(dsts), "optimal", 0.0)
+        out.objective = 0.0
+        out.scale = 1.0
+        return out
+
+    # ---- root relaxation
+    lp = struct.lp(goals, extra_ub=extra_ub)
+    if lp.trivially_infeasible:
+        return _mc_empty(top, len(dsts), "infeasible")
+    root = solve_lp(lp.c, lp.A_ub, lp.b_ub, lp.A_eq, lp.b_eq)
+    if not _near_ok(root):
+        return _mc_empty(top, len(dsts), root.status)
+    _, _, n_frac, _ = lp.split(root.x)
+
+    # ---- feasibility repair: floor N, bump until the goals are reachable
+    n_int, t1 = None, 0.0
+    for n_try in _repair_candidates(n_frac, top.limit_vm):
+        t = _mc_scale_probe(struct, goals, fixed_n=n_try, extra_ub=extra_ub)
+        if t >= 1.0 - 1e-6:
+            n_int, t1 = n_try, t
+            break
+    if n_int is None:
+        return _mc_empty(top, len(dsts), "infeasible", root.fun)
+
+    # ---- fixed-N refit: fractional M at the probed-achievable goals
+    fit = _mc_min_cost(struct, goals * min(1.0, t1) * (1.0 - 1e-9),
+                       fixed_n=n_int, extra_ub=extra_ub)
+    if fit is None:
+        return _mc_empty(top, len(dsts), "infeasible", root.fun)
+    (_, _, _, M_frac), _ = fit
+    M_int = np.floor(M_frac + _INT_TOL)
+    _topup_connections(top, M_frac, M_int, n_int)
+
+    # ---- fixed-N+M: probe the residual scale, refit G and F at it
+    t2 = _mc_scale_probe(struct, goals, fixed_n=n_int, fixed_m=M_int,
+                         extra_ub=extra_ub)
+    scale = min(1.0, t2) * (1.0 - 1e-9)
+    if scale <= 0.0:
+        return _mc_empty(top, len(dsts), "infeasible", root.fun)
+    achieved = goals * scale
+    fit = _mc_min_cost(struct, achieved, fixed_n=n_int, fixed_m=M_int,
+                       extra_ub=extra_ub)
+    if fit is None:
+        return _mc_empty(top, len(dsts), "infeasible", root.fun)
+    (G, F, _, _), _ = fit
+    # commodity flows are free in the objective (only the envelope is
+    # billed), so a zero-goal commodity can come back carrying junk flow —
+    # scrub it, or a finished destination would re-enter the trees
+    F[achieved <= 0.0] = 0.0
+    obj = float((G * top.price_egress).sum() / GBIT_PER_GB
+                + n_int @ top.price_vm)
+    return MulticastMILPResult(
+        G=G, F=F, N=n_int.astype(np.int64), M=M_int.astype(np.int64),
+        objective=obj, status="optimal", lp_objective=float(root.fun),
+        achieved_goals=achieved, scale=float(scale),
+    )
+
+
 # --------------------------------------------------------------------- batched
 def solve_milp_batched(
     top,

@@ -26,6 +26,8 @@ from .gateway import (  # noqa: F401
     DirStore,
     FaultInjector,
     GatewayReport,
+    MulticastGatewayReport,
     ObjectStore,
     transfer_objects,
+    transfer_objects_multicast,
 )

@@ -29,17 +29,29 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.plan import TransferPlan
+from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.topology import GBIT_PER_GB
 
 from .flowsim import conn_efficiency
 
+# One tolerance for every time comparison of the multi-job event loops
+# (schedule due-ness, horizon cuts, final horizon classification). Both
+# simulators — vectorized and reference — must use THIS constant: a
+# boundary event classified differently on the two sides breaks the
+# chunk-for-chunk equivalence the tests pin.
+T_EPS = 1e-9
+
 
 @dataclasses.dataclass
 class TransferJob:
-    """One tenant job of the multi-job data plane."""
+    """One tenant job of the multi-job data plane.
 
-    plan: TransferPlan
+    ``plan`` is either a point-to-point ``TransferPlan`` or a one-to-many
+    ``MulticastPlan`` — a multicast job uploads each chunk once, fans out
+    at the relays of its distribution trees, and completes when every
+    destination holds every chunk."""
+
+    plan: TransferPlan | MulticastPlan
     name: str = ""
     arrival_s: float = 0.0
     chunk_mb: float = 16.0
@@ -77,7 +89,7 @@ class JobSimResult:
     name: str
     time_s: float  # arrival -> completion (or horizon / stall point)
     tput_gbps: float
-    chunks_delivered: int
+    chunks_delivered: int  # multicast: chunks EVERY destination holds
     n_chunks: int
     retried_chunks: int
     egress_cost: float
@@ -85,6 +97,8 @@ class JobSimResult:
     total_cost: float
     status: str  # "done" | "running" | "stalled" | "pending"
     per_edge_gb: dict
+    # multicast only: destination region -> chunks delivered there
+    per_dst_delivered: dict | None = None
 
     @property
     def done(self) -> bool:
@@ -114,24 +128,36 @@ class MultiSimResult:
 class MultiSetup:
     """Everything both event loops need, materialized once per scenario.
 
-    Connections are globally indexed in ascending (job, path, hop, conn)
-    order; stages in ascending (job, path, hop) order — the dispatch order
-    both simulators iterate in, which is what makes them comparable."""
+    Connections are globally indexed in ascending (job, path/tree, hop/edge,
+    conn) order; stages in ascending (job, path/tree, hop/edge) order — the
+    dispatch order both simulators iterate in, which is what makes them
+    comparable.
+
+    A unicast job's stages form a chain (each stage has at most one child);
+    a multicast job's stages are the edges of its distribution trees — a
+    stage can have several children (fan-out at a relay) and can both
+    deliver (its head region is a destination) and forward on. Completion
+    is tracked per (job, destination) "slot": a unicast job has one slot,
+    a multicast job one per destination its trees serve."""
 
     top: object  # Topology of jobs[0] (shared link grid / prices)
     arrivals: np.ndarray  # [J]
     n_chunks: np.ndarray  # [J] chunks per job
     chunk_gbit: np.ndarray  # [J] chunk size per job (Gbit)
-    chunk_path: list[np.ndarray]  # per job: chunk id -> path id
+    chunk_path: list[np.ndarray]  # per job: chunk id -> path/tree id
     vm_eg_cap: np.ndarray  # [NV] per-VM egress cap
     vm_in_cap: np.ndarray
     vm_region: np.ndarray  # [NV]
     vm_job: np.ndarray  # [NV]
     n_stages: int
     stage_job: np.ndarray  # [NS]
-    stage_hop: np.ndarray
-    stage_next: np.ndarray  # downstream stage id, -1 at the last hop
-    first_stage: list[list[int]]  # per job: path id -> its hop-0 stage
+    stage_hop: np.ndarray  # [NS] 0 at source-egress stages
+    stage_children: list[list[int]]  # [NS] downstream stage ids (fan-out)
+    stage_deliver: np.ndarray  # [NS] completion slot fed here, -1 if none
+    first_stage: list[list[list[int]]]  # per job: path/tree -> root stages
+    slot_job: np.ndarray  # [NSLOT]
+    slot_dst: np.ndarray  # [NSLOT] destination region (unicast: plan.dst)
+    job_slots: list[list[int]]  # per job: its slot ids
     conn_job: np.ndarray  # [NC] all ascending (job, path, hop, conn)
     conn_sid: np.ndarray
     conn_src: np.ndarray  # global VM ids
@@ -182,8 +208,12 @@ def materialize_jobs(
 
     stage_job: list[int] = []
     stage_hop: list[int] = []
-    stage_next: list[int] = []
-    first_stage: list[list[int]] = []
+    stage_children: list[list[int]] = []
+    stage_deliver: list[int] = []
+    first_stage: list[list[list[int]]] = []
+    slot_job: list[int] = []
+    slot_dst: list[int] = []
+    job_slots: list[list[int]] = []
 
     conn_job: list[int] = []
     conn_sid: list[int] = []
@@ -193,13 +223,27 @@ def materialize_jobs(
     conn_edge_pairs: list[tuple[int, int]] = []
     max_hops = 1
 
+    def add_conns(j, top, rng, sid, a, b, n_conn, vms_a, vms_b):
+        per_pair = max(n_conn / (len(vms_a) * len(vms_b)), 1e-9)
+        eff = conn_efficiency(per_pair * len(vms_b), top.limit_conn)
+        nominal = top.tput[a, b] * eff / n_conn * len(vms_a)
+        for c in range(n_conn):
+            if rng.uniform() < straggler_prob:
+                mult = float(rng.uniform(*straggler_speed))
+            else:
+                mult = float(np.exp(rng.normal(0.0, 0.05)))
+            conn_job.append(j)
+            conn_sid.append(sid)
+            conn_src.append(vms_a[c % len(vms_a)])
+            conn_dst.append(vms_b[c % len(vms_b)])
+            conn_rate.append(nominal * mult)
+            conn_edge_pairs.append((a, b))
+
     for j, job in enumerate(jobs):
         plan = job.plan
         top = plan.top
         rng = np.random.default_rng([seed, j])
-        paths = plan.paths()
-        if not paths:
-            raise ValueError(f"job {j} ({job.name!r}) carries no flow")
+        multicast = isinstance(plan, MulticastPlan)
 
         volume_gbit = plan.volume_gb * GBIT_PER_GB
         cg = job.chunk_mb * 8.0 / 1024.0
@@ -218,30 +262,114 @@ def materialize_jobs(
                 vm_job.append(j)
             vm_of[r] = ids
 
-        # ---- stages: one per (path, hop)
-        stage_of: dict[tuple[int, int], int] = {}
-        path_len = {pid: len(p) - 1 for pid, (p, _) in enumerate(paths)}
-        max_hops = max(max_hops, max(path_len.values()))
-        for pid, (path, _) in enumerate(paths):
-            for hop in range(path_len[pid]):
-                stage_of[(pid, hop)] = len(stage_job)
-                stage_job.append(j)
-                stage_hop.append(hop)
-                stage_next.append(-1)
-        for (pid, hop), sid in stage_of.items():
-            if hop + 1 < path_len[pid]:
-                stage_next[sid] = stage_of[(pid, hop + 1)]
-        first_stage.append([stage_of[(pid, 0)] for pid in range(len(paths))])
+        if not multicast:
+            paths = plan.paths()
+            if not paths:
+                raise ValueError(f"job {j} ({job.name!r}) carries no flow")
+            slot0 = len(slot_job)
+            slot_job.append(j)
+            slot_dst.append(plan.dst)
+            job_slots.append([slot0])
 
-        # ---- connections: same nominal-rate formula as the single-job sim
-        edge_flow_total: dict[tuple[int, int], float] = {}
-        for path, flow in paths:
-            for a, b in zip(path[:-1], path[1:]):
-                edge_flow_total[(a, b)] = edge_flow_total.get((a, b), 0.0) + flow
-        for pid, (path, flow) in enumerate(paths):
-            for hop, (a, b) in enumerate(zip(path[:-1], path[1:])):
+            # ---- stages: one per (path, hop), chained
+            stage_of: dict[tuple[int, int], int] = {}
+            path_len = {pid: len(p) - 1 for pid, (p, _) in enumerate(paths)}
+            max_hops = max(max_hops, max(path_len.values()))
+            for pid, (path, _) in enumerate(paths):
+                for hop in range(path_len[pid]):
+                    stage_of[(pid, hop)] = len(stage_job)
+                    stage_job.append(j)
+                    stage_hop.append(hop)
+                    stage_children.append([])
+                    stage_deliver.append(-1)
+            for (pid, hop), sid in stage_of.items():
+                if hop + 1 < path_len[pid]:
+                    stage_children[sid] = [stage_of[(pid, hop + 1)]]
+                else:
+                    stage_deliver[sid] = slot0
+            first_stage.append(
+                [[stage_of[(pid, 0)]] for pid in range(len(paths))]
+            )
+
+            # ---- connections: same nominal-rate formula as the 1-job sim
+            edge_flow_total: dict[tuple[int, int], float] = {}
+            for path, flow in paths:
+                for a, b in zip(path[:-1], path[1:]):
+                    edge_flow_total[(a, b)] = \
+                        edge_flow_total.get((a, b), 0.0) + flow
+            for pid, (path, flow) in enumerate(paths):
+                for hop, (a, b) in enumerate(zip(path[:-1], path[1:])):
+                    m_edge = int(round(plan.M[a, b]))
+                    share = flow / edge_flow_total[(a, b)]
+                    n_conn = max(1, int(round(m_edge * share)))
+                    vms_a = vm_of.get(a) or []
+                    vms_b = vm_of.get(b) or []
+                    if not vms_a or not vms_b:
+                        raise ValueError(
+                            f"job {j} has flow on edge {a}->{b} but no VMs"
+                        )
+                    add_conns(j, top, rng, stage_of[(pid, hop)], a, b,
+                              n_conn, vms_a, vms_b)
+
+            flows = np.array([f for _, f in paths])
+            chunk_path.append(
+                rng.choice(len(paths), size=int(n_chunks[j]),
+                           p=flows / flows.sum())
+            )
+            continue
+
+        # -------------------------------------------------- multicast job
+        trees = plan.trees()
+        if not trees:
+            raise ValueError(f"job {j} ({job.name!r}) carries no flow")
+        served = sorted({d for t in trees for d in t.paths})
+        slot_of = {}
+        slots_j = []
+        for d in served:
+            slot_of[d] = len(slot_job)
+            slots_j.append(len(slot_job))
+            slot_job.append(j)
+            slot_dst.append(d)
+        job_slots.append(slots_j)
+
+        # ---- stages: one per (tree, edge), children = tree fan-out
+        stage_of_edge: list[dict[tuple[int, int], int]] = []
+        firsts_j: list[list[int]] = []
+        for t in trees:
+            edges = t.edges()
+            max_hops = max(max_hops, len(edges))
+            hop_of: dict[tuple[int, int], int] = {}
+            for p in t.paths.values():
+                for i, e in enumerate(zip(p[:-1], p[1:])):
+                    hop_of[e] = min(hop_of.get(e, i), i)
+            s_of: dict[tuple[int, int], int] = {}
+            for e in edges:
+                s_of[e] = len(stage_job)
+                stage_job.append(j)
+                stage_hop.append(hop_of[e])
+                stage_children.append([])
+                stage_deliver.append(-1)
+            children = t.children()
+            delivers = t.delivers()
+            for e in edges:
+                stage_children[s_of[e]] = [s_of[c] for c in children[e]]
+            for e, d in delivers.items():
+                stage_deliver[s_of[e]] = slot_of[d]
+            stage_of_edge.append(s_of)
+            firsts_j.append([s_of[e] for e in t.roots()])
+        first_stage.append(firsts_j)
+
+        # ---- connections: the envelope usage of an edge is shared by the
+        # trees riding it, so each tree gets its rate share of M_e
+        edge_rate_total: dict[tuple[int, int], float] = {}
+        for t in trees:
+            for e in t.edges():
+                edge_rate_total[e] = edge_rate_total.get(e, 0.0) + t.rate
+        for tid, t in enumerate(trees):
+            for e in t.edges():
+                a, b = e
                 m_edge = int(round(plan.M[a, b]))
-                share = flow / edge_flow_total[(a, b)]
+                share = t.rate / edge_rate_total[e]
                 n_conn = max(1, int(round(m_edge * share)))
                 vms_a = vm_of.get(a) or []
                 vms_b = vm_of.get(b) or []
@@ -249,25 +377,13 @@ def materialize_jobs(
                     raise ValueError(
                         f"job {j} has flow on edge {a}->{b} but no VMs"
                     )
-                per_pair = max(n_conn / (len(vms_a) * len(vms_b)), 1e-9)
-                eff = conn_efficiency(per_pair * len(vms_b), top.limit_conn)
-                nominal = top.tput[a, b] * eff / n_conn * len(vms_a)
-                sid = stage_of[(pid, hop)]
-                for c in range(n_conn):
-                    if rng.uniform() < straggler_prob:
-                        mult = float(rng.uniform(*straggler_speed))
-                    else:
-                        mult = float(np.exp(rng.normal(0.0, 0.05)))
-                    conn_job.append(j)
-                    conn_sid.append(sid)
-                    conn_src.append(vms_a[c % len(vms_a)])
-                    conn_dst.append(vms_b[c % len(vms_b)])
-                    conn_rate.append(nominal * mult)
-                    conn_edge_pairs.append((a, b))
+                add_conns(j, top, rng, stage_of_edge[tid][e], a, b,
+                          n_conn, vms_a, vms_b)
 
-        flows = np.array([f for _, f in paths])
+        rates = np.array([t.rate for t in trees])
         chunk_path.append(
-            rng.choice(len(paths), size=int(n_chunks[j]), p=flows / flows.sum())
+            rng.choice(len(trees), size=int(n_chunks[j]),
+                       p=rates / rates.sum())
         )
 
     edges_used = sorted(set(conn_edge_pairs))
@@ -285,8 +401,12 @@ def materialize_jobs(
         n_stages=len(stage_job),
         stage_job=np.asarray(stage_job, dtype=np.int64),
         stage_hop=np.asarray(stage_hop, dtype=np.int64),
-        stage_next=np.asarray(stage_next, dtype=np.int64),
+        stage_children=stage_children,
+        stage_deliver=np.asarray(stage_deliver, dtype=np.int64),
         first_stage=first_stage,
+        slot_job=np.asarray(slot_job, dtype=np.int64),
+        slot_dst=np.asarray(slot_dst, dtype=np.int64),
+        job_slots=job_slots,
         conn_job=np.asarray(conn_job, dtype=np.int64),
         conn_sid=np.asarray(conn_sid, dtype=np.int64),
         conn_src=np.asarray(conn_src, dtype=np.int64),

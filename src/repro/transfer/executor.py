@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import milp
 from repro.core.baselines import CloudServiceModel
-from repro.core.plan import TransferPlan
+from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.planner import Planner
 from repro.core.topology import GBIT_PER_GB, Topology
 from .events import LinkDegrade, TransferJob, VMFailure
@@ -70,7 +70,11 @@ def execute_service_model(
 # ------------------------------------------------------------------- service
 @dataclasses.dataclass
 class TransferRequest:
-    """One tenant job submitted to the TransferService."""
+    """One tenant job submitted to the TransferService.
+
+    ``dsts`` switches the job to one-to-many replication: the service plans
+    a single multicast transfer to every listed destination (``dst`` is
+    ignored) with ``tput_goal_gbps`` as the per-destination floor."""
 
     name: str
     src: str
@@ -79,6 +83,11 @@ class TransferRequest:
     tput_goal_gbps: float
     arrival_s: float = 0.0
     chunk_mb: float = 16.0
+    dsts: list[str] | None = None
+
+    @property
+    def multicast(self) -> bool:
+        return self.dsts is not None
 
 
 @dataclasses.dataclass
@@ -89,11 +98,18 @@ class ReplanRecord:
     latency_s: float
     structure_builds: int  # LPStructure assemblies during the re-plan
     plan: TransferPlan
+    goal_gbps: float = 0.0  # throughput goal the accepted re-plan ran at
+    backoffs: int = 0  # times the goal was backed off before success
 
     @property
     def reused_structure(self) -> bool:
         """True when the re-plan was a pure cache hit (no LP re-assembly)."""
         return self.structure_builds == 0
+
+    @property
+    def degraded_slo(self) -> bool:
+        """True when the re-plan only succeeded at a backed-off goal."""
+        return self.backoffs > 0
 
 
 @dataclasses.dataclass
@@ -138,9 +154,9 @@ class ServiceReport:
 @dataclasses.dataclass
 class _JobState:
     req: TransferRequest
-    plan: TransferPlan
+    plan: TransferPlan  # or MulticastPlan for one-to-many jobs
     chunk_gbit: float
-    remaining_chunks: int
+    remaining_chunks: int  # multicast: chunks the slowest branch still needs
     n_chunks: int
     planned_tput0: float = 0.0  # the admission-time plan's predictions
     planned_cost0: float = 0.0
@@ -150,6 +166,10 @@ class _JobState:
     finished_at: float | None = None
     status: str = "queued"
     replans: list = dataclasses.field(default_factory=list)
+    # multicast: cumulative chunks per destination region (capped at
+    # n_chunks) — a full destination drops out of the next re-plan's goals,
+    # so only the surviving branches are re-planned
+    delivered_by_dst: dict = dataclasses.field(default_factory=dict)
 
     @property
     def remaining_gb(self) -> float:
@@ -157,6 +177,9 @@ class _JobState:
         # integer chunk count exactly (ceil is not float-robust at the edge)
         return max(self.remaining_chunks - 0.5, 0.5) \
             * self.chunk_gbit / GBIT_PER_GB
+
+    def dst_done(self, d: int) -> bool:
+        return self.delivered_by_dst.get(d, 0) >= self.n_chunks
 
 
 class TransferService:
@@ -181,6 +204,11 @@ class TransferService:
     billed — the same semantics as the gateway re-dispatching a chunk whose
     worker died). A fault landing within one chunk-ETA of the previous one
     can therefore show zero delivered chunks for the short segment.
+
+    Multicast jobs (``TransferRequest(dsts=[...])``) are admitted as ONE
+    one-to-many plan; on a fault, only the surviving branches are
+    re-planned — destinations that already hold every chunk get a zero
+    goal on the same cached structure and drop out of the trees.
     """
 
     def __init__(
@@ -207,6 +235,37 @@ class TransferService:
         return req
 
     # ------------------------------------------------------------------ run
+    def _plan_for(self, req: TransferRequest, goal: float, volume_gb: float,
+                  *, vm_caps=None, constrained: bool) -> TransferPlan:
+        """One admission/re-plan solve for either job flavor. A multicast
+        re-plan only carries goals for the destinations still missing
+        chunks, so faulted branches are re-planned and finished ones
+        dropped — on the SAME cached structure (goals are pure RHS)."""
+        if req.multicast:
+            goals = goal if np.ndim(goal) else float(goal)
+            return self.planner.plan_multicast_cost_min(
+                req.src, req.dsts, goals, volume_gb,
+                degraded_links=self.degraded_links if constrained else None,
+                vm_caps=vm_caps if constrained else None,
+            )
+        return self.planner.plan_cost_min(
+            req.src, req.dst, float(goal), volume_gb,
+            backend="numpy" if constrained else self.backend,
+            degraded_links=self.degraded_links if constrained else None,
+            vm_caps=vm_caps if constrained else None,
+        )
+
+    def _capacity(self, req: TransferRequest, *, vm_caps=None) -> float:
+        if req.multicast:
+            return self.planner.max_multicast_throughput(
+                req.src, req.dsts,
+                degraded_links=self.degraded_links, vm_caps=vm_caps,
+            )
+        return self.planner.max_throughput(
+            req.src, req.dst,
+            degraded_links=self.degraded_links, vm_caps=vm_caps,
+        )
+
     def _admit(self, req: TransferRequest) -> _JobState:
         if self.degraded_links:
             # the service already carries degraded links from earlier runs:
@@ -214,20 +273,14 @@ class TransferService:
             # against that view, or they are flagged contended forever and
             # nothing ever re-routes them (constrained solves run on the
             # sequential backend; still a cached-structure refit)
-            cap = self.planner.max_throughput(
-                req.src, req.dst, degraded_links=self.degraded_links
-            )
-            plan = self.planner.plan_cost_min(
-                req.src, req.dst,
-                min(req.tput_goal_gbps, max(cap, 1e-9) * 0.95),
-                req.volume_gb, backend="numpy",
-                degraded_links=self.degraded_links,
+            cap = self._capacity(req)
+            plan = self._plan_for(
+                req, min(req.tput_goal_gbps, max(cap, 1e-9) * 0.95),
+                req.volume_gb, constrained=True,
             )
         else:
-            plan = self.planner.plan_cost_min(
-                req.src, req.dst, req.tput_goal_gbps, req.volume_gb,
-                backend=self.backend,
-            )
+            plan = self._plan_for(req, req.tput_goal_gbps, req.volume_gb,
+                                  constrained=False)
         cg = req.chunk_mb * 8.0 / 1024.0
         n_chunks = max(1, int(np.ceil(req.volume_gb * GBIT_PER_GB / cg)))
         st = _JobState(req=req, plan=plan, chunk_gbit=cg,
@@ -242,19 +295,35 @@ class TransferService:
         vm_caps = self.vm_caps_by_job.get(job_ix, {})
         t0 = time.perf_counter()
         builds0 = milp.N_STRUCT_BUILDS
-        cap = self.planner.max_throughput(
-            req.src, req.dst,
-            degraded_links=self.degraded_links, vm_caps=vm_caps,
-        )
+        cap = self._capacity(req, vm_caps=vm_caps)
         if cap <= 1e-9:
             st.status = "failed"
             return
         goal = min(req.tput_goal_gbps, cap * 0.95)
-        # constrained solves run sequentially on the cached structure
-        plan = self.planner.plan_cost_min(
-            req.src, req.dst, goal, st.remaining_gb, backend="numpy",
-            degraded_links=self.degraded_links, vm_caps=vm_caps,
-        )
+        # A non-optimal constrained solve does not mean the job is dead: a
+        # lower throughput goal may still be feasible on the degraded
+        # topology. Back the goal off before declaring failure; the record
+        # keeps the degraded SLO visible.
+        plan, backoffs = None, 0
+        for backoff in range(3):
+            g = goal * (0.5 ** backoff)
+            # the record reports the LAST goal actually attempted, whether
+            # or not it was accepted
+            goal, backoffs = g, backoff
+            if req.multicast:
+                goals = [
+                    0.0 if st.dst_done(self.top.index(d)) else g
+                    for d in req.dsts
+                ]
+                if not any(goals):
+                    return  # every branch already delivered in full
+                g_try = goals
+            else:
+                g_try = g
+            plan = self._plan_for(req, g_try, st.remaining_gb,
+                                  vm_caps=vm_caps, constrained=True)
+            if plan.solver_status == "optimal":
+                break
         rec = ReplanRecord(
             job=req.name,
             at_s=at_s,
@@ -262,6 +331,8 @@ class TransferService:
             latency_s=time.perf_counter() - t0,
             structure_builds=milp.N_STRUCT_BUILDS - builds0,
             plan=plan,
+            goal_gbps=goal,
+            backoffs=backoffs,
         )
         st.replans.append(rec)
         if plan.solver_status == "optimal":
@@ -333,6 +404,12 @@ class TransferService:
                     st.remaining_chunks -= jr.chunks_delivered
                     st.realized_cost += jr.total_cost
                     st.retried_chunks += jr.retried_chunks
+                    if jr.per_dst_delivered:
+                        for d, cnt in jr.per_dst_delivered.items():
+                            st.delivered_by_dst[d] = min(
+                                st.n_chunks,
+                                st.delivered_by_dst.get(d, 0) + cnt,
+                            )
                     if jr.status == "done":
                         st.status = "done"
                         st.finished_at = (
@@ -368,7 +445,14 @@ class TransferService:
                         self.degraded_links.get(key, 1.0) * f.factor
                     )
                     for i, st in enumerate(states):
-                        if st.plan.F[f.src, f.dst] > 1e-9:
+                        # a multicast job rides the link iff its envelope
+                        # does (the bytes actually on the wire)
+                        used = (
+                            st.plan.G[f.src, f.dst]
+                            if isinstance(st.plan, MulticastPlan)
+                            else st.plan.F[f.src, f.dst]
+                        )
+                        if used > 1e-9:
                             affected.add(i)
                 elif isinstance(f, VMFailure):
                     caps = self.vm_caps_by_job.setdefault(f.job, {})

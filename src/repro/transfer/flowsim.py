@@ -33,7 +33,7 @@ from collections import deque
 
 import numpy as np
 
-from repro.core.plan import TransferPlan
+from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.topology import GBIT_PER_GB
 
 _EPS = 1e-12
@@ -469,7 +469,7 @@ def simulate_multi(
     seed: int = 0,
     horizon_s: float | None = None,
 ):
-    """Vectorized multi-job simulator with scripted faults (ISSUE 2).
+    """Vectorized multi-job simulator with scripted faults (ISSUE 2/3).
 
     Runs every ``TransferJob`` concurrently on one fluid data plane:
 
@@ -479,20 +479,28 @@ def simulate_multi(
         links — each directed region pair is a fluid resource of capacity
         ``link_capacity_scale * top.tput[a, b]`` divided max-min fairly
         (``link_capacity_scale=None`` disables link contention);
+      * a job whose plan is a ``MulticastPlan`` uploads each chunk once and
+        fans out at relays: a completed hop feeds EVERY child stage of its
+        distribution tree (deduplicated — shared segments carry a chunk
+        once), deliveries are tracked per destination, and the job is done
+        when every destination holds every chunk;
       * ``events.LinkDegrade`` multiplies the affected connections' rates
         and the shared link cap mid-transfer;
       * ``events.VMFailure`` kills gateway VMs: their connections die and
         any chunk they carried re-enters its stage queue and retries on a
-        surviving connection (counted in ``retried_chunks``; a stage whose
-        every connection died stalls the job);
-      * ``horizon_s`` cuts the run (jobs report status "running").
+        surviving connection of the same branch (counted in
+        ``retried_chunks``; a stage whose every connection died stalls the
+        job);
+      * ``horizon_s`` cuts the run (jobs report status "running"). All
+        time comparisons share one tolerance (``events.T_EPS``) so a
+        boundary event cannot be classified inconsistently.
 
     Dispatch is the dynamic (paper §6) mode; speculation is off so retry
     accounting stays exact. Returns ``events.MultiSimResult``; the oracle
     is ``flowsim_ref.simulate_multi_reference`` (same per-job chunk counts
-    at fixed seed — pinned by tests/test_multijob.py).
+    at fixed seed — pinned by tests/test_multijob.py + test_multicast.py).
     """
-    from .events import JobSimResult, MultiSimResult
+    from .events import T_EPS, JobSimResult, MultiSimResult
     from .events import materialize_jobs, sorted_schedule
 
     su = materialize_jobs(
@@ -504,7 +512,8 @@ def simulate_multi(
     nc = su.conn_job.shape[0]
     ne = len(su.edges_used)
     rate_eff = su.conn_rate.copy()
-    sid_arr, next_sid = su.conn_sid, su.stage_next[su.conn_sid]
+    sid_arr = su.conn_sid
+    children = su.stage_children
     edge_cap = None
     if link_capacity_scale is not None:
         edge_cap = np.array(
@@ -520,7 +529,9 @@ def simulate_multi(
     ready: list[deque] = [deque() for _ in range(su.n_stages)]
     relay_occ = np.zeros(su.n_stages, dtype=np.int64)
     done_hops: set[tuple[int, int]] = set()
-    delivered = np.zeros(J, dtype=np.int64)
+    enqueued: set[tuple[int, int]] = set()  # fan-in dedup on propagation
+    n_slots = su.slot_job.shape[0]
+    delivered = np.zeros(n_slots, dtype=np.int64)
     retried = np.zeros(J, dtype=np.int64)
     finish: list[float | None] = [None] * J
     job_edge_gbit = np.zeros(J * ne)
@@ -535,7 +546,7 @@ def simulate_multi(
         nonlocal ptr, last_active
         from .events import LinkDegrade, VMFailure
 
-        while ptr < len(sched) and sched[ptr][0] <= now + 1e-9:
+        while ptr < len(sched) and sched[ptr][0] <= now + T_EPS:
             ev = sched[ptr][2]
             ptr += 1
             last_active = None  # any event can change rates/membership
@@ -543,7 +554,8 @@ def simulate_multi(
                 arrived[ev] = True
                 firsts = su.first_stage[ev]
                 for ch in range(int(su.n_chunks[ev])):
-                    ready[firsts[int(su.chunk_path[ev][ch])]].append(ch)
+                    for s0 in firsts[int(su.chunk_path[ev][ch])]:
+                        ready[s0].append(ch)
             elif isinstance(ev, LinkDegrade):
                 on_edge = np.array(
                     [e == (ev.src, ev.dst) for e in su.edges_used], dtype=bool
@@ -578,10 +590,12 @@ def simulate_multi(
                 raise TypeError(f"unknown event {ev!r}")
 
     def try_refill(ci: int) -> bool:
-        sid = sid_arr[ci]
-        nsid = next_sid[ci]
-        if nsid >= 0 and relay_occ[nsid] >= relay_buffer_chunks:
-            return False
+        sid = int(sid_arr[ci])
+        # flow control: ANY full downstream buffer stalls the stage — with
+        # fan-out, the slowest branch backpressures the shared segment
+        for nsid in children[sid]:
+            if relay_occ[nsid] >= relay_buffer_chunks:
+                return False
         q = ready[sid]
         if not q:
             return False
@@ -597,7 +611,7 @@ def simulate_multi(
     events = 0
     for _ in range(max_events):
         apply_due()
-        if horizon_s is not None and now >= horizon_s - 1e-12:
+        if horizon_s is not None and now >= horizon_s - T_EPS:
             break
         # cascade refills (buffer drains unlock upstream)
         while True:
@@ -617,7 +631,7 @@ def simulate_multi(
         t_next = sched[ptr][0] if ptr < len(sched) else None
         if active_ix.size == 0:
             if t_next is not None and (
-                horizon_s is None or t_next < horizon_s - 1e-12
+                horizon_s is None or t_next < horizon_s - T_EPS
             ):
                 now = t_next
                 continue
@@ -638,7 +652,7 @@ def simulate_multi(
         if t_next is not None and now + dt > t_next:
             dt = t_next - now
         horizon_hit = False
-        if horizon_s is not None and now + dt >= horizon_s - 1e-12:
+        if horizon_s is not None and now + dt >= horizon_s - T_EPS:
             dt = horizon_s - now
             horizon_hit = True
         now += dt
@@ -658,21 +672,26 @@ def simulate_multi(
             if key in done_hops:
                 continue
             done_hops.add(key)
-            nsid = int(su.stage_next[sid])
-            if nsid >= 0:
+            slot = int(su.stage_deliver[sid])
+            if slot >= 0:
+                delivered[slot] += 1
+                j = int(su.slot_job[slot])
+                if delivered[slot] >= su.n_chunks[j] and all(
+                    delivered[s] >= su.n_chunks[j] for s in su.job_slots[j]
+                ):
+                    finish[j] = now
+            for nsid in children[sid]:
+                if (nsid, ch) in enqueued:
+                    continue  # another in-edge already fed this stage
+                enqueued.add((nsid, ch))
                 ready[nsid].append(ch)
                 relay_occ[nsid] += 1
-            else:
-                j = int(su.conn_job[ci])
-                delivered[j] += 1
-                if delivered[j] >= su.n_chunks[j]:
-                    finish[j] = now
         if horizon_hit:
             break
         if all(f is not None for f in finish):
             break
 
-    horizon_cut = horizon_s is not None and now >= horizon_s - 1e-9
+    horizon_cut = horizon_s is not None and now >= horizon_s - T_EPS
     out = []
     for j, job in enumerate(jobs):
         end = finish[j] if finish[j] is not None else now
@@ -694,13 +713,19 @@ def simulate_multi(
             status = "running"
         else:
             status = "stalled"
+        slots = su.job_slots[j]
+        full_copies = int(min(delivered[s] for s in slots))
+        per_dst = (
+            {int(su.slot_dst[s]): int(delivered[s]) for s in slots}
+            if isinstance(job.plan, MulticastPlan) else None
+        )
         vm_cost = float(job.plan.N @ job.plan.top.price_vm) * dur
         out.append(JobSimResult(
             job=j,
             name=job.name,
             time_s=dur,
-            tput_gbps=float(delivered[j] * su.chunk_gbit[j]) / max(dur, 1e-9),
-            chunks_delivered=int(delivered[j]),
+            tput_gbps=float(full_copies * su.chunk_gbit[j]) / max(dur, 1e-9),
+            chunks_delivered=full_copies,
             n_chunks=int(su.n_chunks[j]),
             retried_chunks=int(retried[j]),
             egress_cost=float(eg_cost),
@@ -708,5 +733,6 @@ def simulate_multi(
             total_cost=float(eg_cost + vm_cost),
             status=status,
             per_edge_gb=per_edge_gb,
+            per_dst_delivered=per_dst,
         ))
     return MultiSimResult(jobs=out, time_s=now, events=events)

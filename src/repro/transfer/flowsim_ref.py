@@ -437,10 +437,13 @@ def simulate_multi_reference(
 
     Consumes the same materialized scenario (events.materialize_jobs, so the
     RNG streams and dispatch order match by construction) but runs the event
-    loop on per-connection objects with dict/list bookkeeping. The vectorized
-    loop must reproduce its per-job delivered-chunk counts exactly."""
-    from .events import JobSimResult, LinkDegrade, MultiSimResult, VMFailure
-    from .events import materialize_jobs, sorted_schedule
+    loop on per-connection objects with dict/list bookkeeping — including
+    multicast jobs (tree fan-out, per-destination delivery slots). The
+    vectorized loop must reproduce its per-job delivered-chunk counts
+    exactly."""
+    from .events import T_EPS, JobSimResult, LinkDegrade, MultiSimResult
+    from .events import VMFailure, materialize_jobs, sorted_schedule
+    from repro.core.plan import MulticastPlan
 
     su = materialize_jobs(
         jobs, seed=seed, straggler_prob=straggler_prob,
@@ -468,7 +471,8 @@ def simulate_multi_reference(
     ready: dict[int, list[int]] = {s: [] for s in range(su.n_stages)}
     relay_occ: dict[int, int] = {}
     done_hops: set[tuple[int, int]] = set()
-    delivered = [0] * J
+    enqueued: set[tuple[int, int]] = set()  # fan-in dedup on propagation
+    delivered = [0] * su.slot_job.shape[0]
     retried = [0] * J
     finish: list[float | None] = [None] * J
     job_edge_gbit: dict[tuple[int, int], float] = {}
@@ -479,14 +483,15 @@ def simulate_multi_reference(
 
     def apply_due():
         nonlocal ptr
-        while ptr < len(sched) and sched[ptr][0] <= now + 1e-9:
+        while ptr < len(sched) and sched[ptr][0] <= now + T_EPS:
             ev = sched[ptr][2]
             ptr += 1
             if isinstance(ev, int):  # job arrival
                 arrived[ev] = True
                 firsts = su.first_stage[ev]
                 for ch in range(int(su.n_chunks[ev])):
-                    ready[firsts[int(su.chunk_path[ev][ch])]].append(ch)
+                    for s0 in firsts[int(su.chunk_path[ev][ch])]:
+                        ready[s0].append(ch)
             elif isinstance(ev, LinkDegrade):
                 want = su.edges_used.index((ev.src, ev.dst)) \
                     if (ev.src, ev.dst) in su.edges_used else -1
@@ -525,9 +530,9 @@ def simulate_multi_reference(
         c = conns[ci]
         if c.chunk >= 0 or not c.alive or not arrived[c.job]:
             return False
-        nsid = int(su.stage_next[c.sid])
-        if nsid >= 0 and relay_occ.get(nsid, 0) >= relay_buffer_chunks:
-            return False
+        for nsid in su.stage_children[c.sid]:
+            if relay_occ.get(nsid, 0) >= relay_buffer_chunks:
+                return False
         q = ready[c.sid]
         if not q:
             return False
@@ -543,7 +548,7 @@ def simulate_multi_reference(
     events = 0
     for _ in range(max_events):
         apply_due()
-        if horizon_s is not None and now >= horizon_s - 1e-12:
+        if horizon_s is not None and now >= horizon_s - T_EPS:
             break
         progressed = True
         while progressed:  # cascade refills
@@ -555,7 +560,7 @@ def simulate_multi_reference(
         t_next = sched[ptr][0] if ptr < len(sched) else None
         if not active:
             if t_next is not None and (
-                horizon_s is None or t_next < horizon_s - 1e-12
+                horizon_s is None or t_next < horizon_s - T_EPS
             ):
                 now = t_next
                 continue
@@ -573,7 +578,7 @@ def simulate_multi_reference(
         if t_next is not None and now + dt > t_next:
             dt = t_next - now
         horizon_hit = False
-        if horizon_s is not None and now + dt >= horizon_s - 1e-12:
+        if horizon_s is not None and now + dt >= horizon_s - T_EPS:
             dt = horizon_s - now
             horizon_hit = True
         now += dt
@@ -591,20 +596,27 @@ def simulate_multi_reference(
                 if key in done_hops:
                     continue
                 done_hops.add(key)
-                nsid = int(su.stage_next[c.sid])
-                if nsid >= 0:
+                slot = int(su.stage_deliver[c.sid])
+                if slot >= 0:
+                    delivered[slot] += 1
+                    jj = int(su.slot_job[slot])
+                    if delivered[slot] >= su.n_chunks[jj] and all(
+                        delivered[s] >= su.n_chunks[jj]
+                        for s in su.job_slots[jj]
+                    ):
+                        finish[jj] = now
+                for nsid in su.stage_children[c.sid]:
+                    if (nsid, ch) in enqueued:
+                        continue  # another in-edge already fed this stage
+                    enqueued.add((nsid, ch))
                     ready[nsid].append(ch)
                     relay_occ[nsid] = relay_occ.get(nsid, 0) + 1
-                else:
-                    delivered[c.job] += 1
-                    if delivered[c.job] >= su.n_chunks[c.job]:
-                        finish[c.job] = now
         if horizon_hit:
             break
         if all(f is not None for f in finish):
             break
 
-    horizon_cut = horizon_s is not None and now >= horizon_s - 1e-9
+    horizon_cut = horizon_s is not None and now >= horizon_s - T_EPS
     out = []
     for j, job in enumerate(jobs):
         end = finish[j] if finish[j] is not None else now
@@ -624,13 +636,19 @@ def simulate_multi_reference(
             status = "running"
         else:
             status = "stalled"
+        slots = su.job_slots[j]
+        full_copies = int(min(delivered[s] for s in slots))
+        per_dst = (
+            {int(su.slot_dst[s]): int(delivered[s]) for s in slots}
+            if isinstance(job.plan, MulticastPlan) else None
+        )
         vm_cost = float(job.plan.N @ job.plan.top.price_vm) * dur
         out.append(JobSimResult(
             job=j,
             name=job.name,
             time_s=dur,
-            tput_gbps=float(delivered[j] * su.chunk_gbit[j]) / max(dur, 1e-9),
-            chunks_delivered=int(delivered[j]),
+            tput_gbps=float(full_copies * su.chunk_gbit[j]) / max(dur, 1e-9),
+            chunks_delivered=full_copies,
             n_chunks=int(su.n_chunks[j]),
             retried_chunks=int(retried[j]),
             egress_cost=float(eg_cost),
@@ -638,5 +656,6 @@ def simulate_multi_reference(
             total_cost=float(eg_cost + vm_cost),
             status=status,
             per_edge_gb=per_edge_gb,
+            per_dst_delivered=per_dst,
         ))
     return MultiSimResult(jobs=out, time_s=now, events=events)

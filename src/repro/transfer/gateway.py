@@ -16,6 +16,14 @@ never re-sent (chunk-level checksummed resume), duplicate deliveries are
 discarded, and a ``FaultInjector`` scripts the same failure scenarios the
 fluid simulator runs (events.VMFailure / LinkDegrade analogues) against
 the real-bytes path.
+
+Multicast (ISSUE 3): ``transfer_objects_multicast`` executes a
+``MulticastPlan``'s distribution trees — relay workers fan each chunk out
+to multiple downstream chains (shared segments carry it once), every
+destination verifies independently, and a chunk lost on one branch is
+re-dispatched only toward the destinations still missing it. For
+multicast stages the FaultInjector key is (tree id, global stage id)
+instead of (path id, hop).
 """
 
 from __future__ import annotations
@@ -26,7 +34,7 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core.plan import TransferPlan
+from repro.core.plan import MulticastPlan, TransferPlan
 from .chunk import Chunk, checksum, chunk_manifest, chunk_object
 
 
@@ -227,7 +235,19 @@ def transfer_objects(
     gateway kill completes with zero data loss and no verified byte is
     ever sent twice. ``resume=True`` additionally skips whole objects the
     destination already holds with a matching checksum.
+
+    A ``MulticastPlan`` delegates to ``transfer_objects_multicast`` —
+    ``dst_store`` must then be a dict mapping destination region keys to
+    stores.
     """
+    if isinstance(plan, MulticastPlan):
+        return transfer_objects_multicast(
+            plan, src_store, dst_store, object_keys,
+            chunk_bytes=chunk_bytes, workers_per_hop=workers_per_hop,
+            relay_buffer_chunks=relay_buffer_chunks, verify=verify,
+            fault_injector=fault_injector, max_attempts=max_attempts,
+            stall_timeout_s=stall_timeout_s, resume=resume,
+        )
     paths = plan.paths()
     if not paths:
         raise ValueError("plan has no flow")
@@ -444,4 +464,342 @@ def transfer_objects(
         else fault_injector.faults_injected,
         objects_skipped=skipped,
         chunks_missing=missing,
+    )
+
+
+# ------------------------------------------------------------------ multicast
+@dataclasses.dataclass
+class MulticastGatewayReport:
+    """Aggregate + per-destination outcome of a one-to-many transfer."""
+
+    per_dest: dict  # destination region key -> GatewayReport
+    chunks: int  # distinct source chunks
+    bytes_moved: int  # bytes that crossed ANY hop (envelope accounting)
+    retried_chunks: int
+    faults_injected: int
+    per_tree_chunks: dict  # tree id -> chunks initially binned to it
+
+    @property
+    def checksum_failures(self) -> int:
+        return sum(r.checksum_failures for r in self.per_dest.values())
+
+    @property
+    def chunks_missing(self) -> int:
+        return sum(r.chunks_missing for r in self.per_dest.values())
+
+    @property
+    def duplicate_chunks(self) -> int:
+        return sum(r.duplicate_chunks for r in self.per_dest.values())
+
+
+def transfer_objects_multicast(
+    plan: MulticastPlan,
+    src_store: ObjectStore,
+    dst_stores: dict,
+    object_keys: list[str],
+    *,
+    chunk_bytes: int = 4 << 20,
+    workers_per_hop: int = 4,
+    relay_buffer_chunks: int = 32,
+    verify: bool = True,
+    fault_injector: FaultInjector | None = None,
+    max_attempts: int = 5,
+    stall_timeout_s: float = 1.0,
+    resume: bool = True,
+) -> MulticastGatewayReport:
+    """Replicate objects to every destination of a multicast plan.
+
+    The plan's distribution trees become a forwarding mesh of bounded
+    queues: each tree edge is a stage with ``workers_per_hop`` threads, and
+    a worker finishing a chunk fans it out to EVERY downstream stage of the
+    tree (deduplicated, so a segment shared by several destinations carries
+    each chunk exactly once — the data-plane realization of envelope
+    billing) and, where the edge terminates at a destination, hands it to
+    that destination's verifier. Each destination verifies and commits
+    chunks independently against the source-side checksums; a chunk lost on
+    one branch (killed worker, corruption) is re-dispatched for the
+    destinations that still miss it, along a surviving tree path to each —
+    chunk-level retry per branch, without re-sending to destinations that
+    already verified it. ``dst_stores`` maps destination region keys (or
+    region indices) to stores; zero-byte objects are committed everywhere.
+    """
+    keys_of_top = plan.top.keys()
+    stores: dict[int, ObjectStore] = {}
+    for d in plan.active_dsts:
+        store = dst_stores.get(keys_of_top[d], dst_stores.get(d))
+        if store is None:
+            raise ValueError(f"no destination store for {keys_of_top[d]}")
+        stores[d] = store
+    trees = plan.trees()
+    if not trees or not stores:
+        raise ValueError("plan has no flow")
+    dests = sorted(stores)
+
+    # ---- per-destination resume pre-pass
+    skipped = {d: 0 for d in dests}
+    keys_by_dest: dict[int, set] = {}
+    for d in dests:
+        need = set()
+        for key in object_keys:
+            if (
+                resume and verify and stores[d].exists(key)
+                and _same_object(src_store, stores[d], key, chunk_bytes)
+            ):
+                skipped[d] += 1
+                continue
+            need.add(key)
+        keys_by_dest[d] = need
+    keys_to_move = sorted(set().union(*keys_by_dest.values()))
+
+    all_chunks, chunk_sums, object_sums = chunk_manifest(
+        src_store, keys_to_move, chunk_bytes, with_sums=verify
+    )
+    chunked = {ch.object_key for ch in all_chunks}
+    for d in dests:  # zero-byte objects commit directly, everywhere needed
+        for key in keys_by_dest[d]:
+            if key not in chunked:
+                stores[d].put(key, b"")
+        keys_by_dest[d] &= chunked
+    keys_to_move = [k for k in keys_to_move if k in chunked]
+    chunk_by_id = {ch.id: ch for ch in all_chunks}
+
+    # ---- stages: one per (tree, edge)
+    class _Stage:
+        __slots__ = ("sid", "tid", "edge", "hop", "q", "children",
+                     "serves", "deliver")
+
+    stages: list[_Stage] = []
+    stage_of: list[dict] = []  # per tree: edge -> stage
+    path_stages: dict[tuple[int, int], list[int]] = {}  # (tree, dest) -> sids
+    for tid, t in enumerate(trees):
+        s_of = {}
+        kids = t.children()
+        serves = t.dests_of_edge()
+        delivers = t.delivers()
+        for e in t.edges():
+            st = _Stage()
+            st.sid = len(stages)
+            st.tid = tid
+            st.edge = e
+            st.hop = 0 if e[0] == plan.src else 1
+            st.q = queue.Queue() if st.hop == 0 \
+                else queue.Queue(maxsize=relay_buffer_chunks)
+            st.serves = serves[e] & set(dests)
+            st.deliver = delivers.get(e)
+            if st.deliver is not None and st.deliver not in stores:
+                st.deliver = None
+            s_of[e] = st
+            stages.append(st)
+        for e in t.edges():
+            s_of[e].children = [s_of[c].sid for c in kids[e]]
+        stage_of.append(s_of)
+        for d, p in t.paths.items():
+            if d in stores:
+                path_stages[(tid, d)] = [
+                    s_of[e].sid for e in zip(p[:-1], p[1:])
+                ]
+
+    # ---- chunk -> tree pre-binning by rate share
+    weights = [t.rate for t in trees]
+    total_w = sum(weights)
+    bins: list[list[Chunk]] = [[] for _ in trees]
+    cum = [w / total_w for w in weights]
+    acc = [0.0] * len(trees)
+    for ch in all_chunks:
+        i = max(range(len(trees)), key=lambda j: cum[j] - acc[j])
+        bins[i].append(ch)
+        acc[i] += 1.0 / max(len(all_chunks), 1)
+    per_tree_count = {i: len(b) for i, b in enumerate(bins)}
+
+    done_event = threading.Event()
+    done_q: "queue.Queue" = queue.Queue()
+    retry_q: "queue.Queue" = queue.Queue()  # (chunk, attempt, target dest)
+    lock = threading.Lock()
+    bytes_moved = [0]
+    retried = [0]
+    live = {st.sid: workers_per_hop for st in stages}
+    forwarded: set[tuple[int, str]] = set()  # (sid, chunk id) fan-in dedup
+    verified: set[tuple[int, str]] = set()  # (dest, chunk id)
+    # every (dest, chunk) pair the transfer owes — fixed up front so retry
+    # targeting (and the exit predicate it feeds) ignores destinations that
+    # resume-skipped the object
+    needed = {
+        (d, ch.id) for d in dests for ch in all_chunks
+        if ch.object_key in keys_by_dest[d]
+    }
+
+    def _put(q: queue.Queue, item) -> None:
+        while not done_event.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def _fan_out(st: _Stage, ch: Chunk, data: bytes, attempt: int, target):
+        """Deliver + forward a chunk that finished traversing ``st``."""
+        if st.deliver is not None and (target is None or target == st.deliver):
+            done_q.put((st.deliver, ch, data, attempt))
+        for csid in st.children:
+            child = stages[csid]
+            if target is None:
+                with lock:
+                    if (csid, ch.id) in forwarded:
+                        continue
+                    forwarded.add((csid, ch.id))
+                _put(child.q, (ch, data, attempt, None))
+            elif target in child.serves:
+                _put(child.q, (ch, data, attempt, target))
+
+    def hop_worker(st: _Stage):
+        while not done_event.is_set():
+            try:
+                item = st.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            ch, data, attempt, target = item
+            if data is None:  # root stage: read from the source store once
+                data = src_store.get_range(ch.object_key, ch.offset, ch.length)
+            if fault_injector is not None:
+                action, data = fault_injector.on_pickup(
+                    st.tid, st.sid, ch, data, attempt
+                )
+                if action == "kill":
+                    with lock:
+                        live[st.sid] -= 1
+                    # the chunk retries per branch: one targeted re-dispatch
+                    # for every destination downstream of this edge that
+                    # still misses it
+                    wants = st.serves if target is None else {target}
+                    for d in sorted(wants):
+                        retry_q.put((ch, attempt + 1, d))
+                    return  # the worker dies with its chunk
+            with lock:
+                bytes_moved[0] += len(data)
+            _fan_out(st, ch, data, attempt, target)
+
+    threads: list[threading.Thread] = []
+    for st in stages:
+        for _ in range(workers_per_hop):
+            t = threading.Thread(target=hop_worker, args=(st,), daemon=True)
+            threads.append(t)
+            t.start()
+    for tid, t in enumerate(trees):
+        roots = [stage_of[tid][e] for e in t.roots()]
+        for ch in bins[tid]:
+            for st in roots:
+                st.q.put((ch, None, 0, None))
+
+    # ---- retry feeder: targeted re-dispatch down a surviving branch
+    attempts: dict[tuple[int, str], int] = {}
+    dead: set[tuple[int, str]] = set()
+
+    def alive_routes(d: int) -> list[tuple[int, int]]:
+        with lock:
+            return [
+                (tid, d) for tid in range(len(trees))
+                if (tid, d) in path_stages
+                and all(live[s] > 0 for s in path_stages[(tid, d)])
+            ]
+
+    rr = [0]
+
+    def feeder():
+        while not done_event.is_set():
+            try:
+                ch, attempt, d = retry_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if (d, ch.id) not in needed or (d, ch.id) in verified:
+                continue  # not owed / already landed: nothing to do
+            if attempt > max_attempts:
+                dead.add((d, ch.id))
+                continue
+            routes = alive_routes(d)
+            if not routes:
+                dead.add((d, ch.id))
+                continue
+            with lock:
+                retried[0] += 1
+            tid, _ = routes[rr[0] % len(routes)]
+            rr[0] += 1
+            attempts[(d, ch.id)] = max(attempts.get((d, ch.id), 0), attempt)
+            stages[path_stages[(tid, d)][0]].q.put((ch, None, attempt, d))
+
+    feeder_t = threading.Thread(target=feeder, daemon=True)
+    feeder_t.start()
+
+    # ---- destinations: verify + commit per (dest, chunk), reassemble
+    buffers = {d: {k: {} for k in keys_by_dest[d]} for d in dests}
+    expect = {
+        k: len(chunk_object(k, src_store.size(k), chunk_bytes))
+        for k in keys_to_move
+    }
+    duplicates = {d: 0 for d in dests}
+    failures = {d: 0 for d in dests}
+    stall_rounds = 0
+    max_gap = stall_timeout_s
+    last_delivery = time.monotonic()
+    while len(verified) + len(dead - verified) < len(needed):
+        try:
+            d, ch, data, attempt = done_q.get(timeout=stall_timeout_s)
+        except queue.Empty:
+            quiet = time.monotonic() - last_delivery
+            if quiet < max(stall_timeout_s, 2.0 * max_gap):
+                continue  # plausibly just slow: keep waiting
+            stall_rounds += 1
+            missing = [p for p in needed if p not in verified and p not in dead]
+            if not missing or stall_rounds > max_attempts:
+                break
+            for dm, cid in missing:
+                retry_q.put((chunk_by_id[cid], attempts.get((dm, cid), 0), dm))
+            last_delivery = time.monotonic()
+            continue
+        now_t = time.monotonic()
+        max_gap = max(max_gap, now_t - last_delivery)
+        last_delivery = now_t
+        stall_rounds = 0
+        if (d, ch.id) not in needed or (d, ch.id) in verified:
+            duplicates[d] = duplicates.get(d, 0) + 1
+            continue
+        if verify and checksum(data) != chunk_sums[ch.id]:
+            retry_q.put((ch, attempt + 1, d))
+            continue
+        verified.add((d, ch.id))
+        dead.discard((d, ch.id))
+        parts = buffers[d][ch.object_key]
+        parts[ch.index] = data
+        if len(parts) == expect[ch.object_key]:
+            blob = b"".join(parts[i] for i in range(len(parts)))
+            if verify and checksum(blob) != object_sums[ch.object_key]:
+                failures[d] += 1
+            stores[d].put(ch.object_key, blob)
+
+    done_event.set()
+    feeder_t.join(timeout=2.0)
+    for t in threads:
+        t.join(timeout=2.0)
+
+    per_dest = {}
+    for d in dests:
+        need_d = {cid for (dd, cid) in needed if dd == d}
+        got_d = {cid for (dd, cid) in verified if dd == d}
+        per_dest[keys_of_top[d]] = GatewayReport(
+            objects=len(object_keys),
+            chunks=len(need_d),
+            bytes_moved=0,  # envelope bytes are aggregate, see the report
+            checksum_failures=failures[d],
+            per_path_chunks={},
+            duplicate_chunks=duplicates[d],
+            objects_skipped=skipped[d],
+            chunks_missing=len(need_d - got_d),
+        )
+    return MulticastGatewayReport(
+        per_dest=per_dest,
+        chunks=len(all_chunks),
+        bytes_moved=bytes_moved[0],
+        retried_chunks=retried[0],
+        faults_injected=0 if fault_injector is None
+        else fault_injector.faults_injected,
+        per_tree_chunks=per_tree_count,
     )

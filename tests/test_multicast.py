@@ -1,0 +1,386 @@
+"""Multicast equivalence suite (ISSUE 3): one-to-many distribution trees.
+
+Pins the whole multicast stack together: planner (cost below the sum of
+unicasts, single-destination bitwise equivalence, per-commodity flow
+conservation, zero-re-assembly re-planning), both fluid simulators
+(chunk-for-chunk on a 3-destination fan-out with a mid-transfer VM kill on
+one branch), the real-bytes gateway (fan-out, per-destination verification,
+zero-byte objects), and the checkpoint replicator's argument validation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import default_topology, toy_topology
+from repro.core import milp
+from repro.core.plan import TransferPlan
+from repro.core.planner import Planner
+from repro.transfer import (
+    LinkDegrade,
+    TransferJob,
+    TransferRequest,
+    TransferService,
+    VMFailure,
+    simulate_multi,
+    simulate_multi_reference,
+)
+from repro.transfer.gateway import BlobStore, transfer_objects_multicast
+
+SRC = "gcp:us-central1"
+# three destinations sharing a continent: the cross-continent trunk is the
+# expensive hop, intra-EU fan-out is cheap — the scenario the envelope wins
+DSTS = ["gcp:europe-west1", "gcp:europe-west3", "gcp:europe-west4"]
+FLOOR = 2.0
+
+
+@pytest.fixture(scope="module")
+def top():
+    return default_topology()
+
+
+@pytest.fixture(scope="module")
+def planner(top):
+    return Planner(top, max_relays=6)
+
+
+@pytest.fixture(scope="module")
+def mc_plan(planner):
+    return planner.plan_multicast_cost_min(SRC, DSTS, FLOOR, 4.0)
+
+
+# ------------------------------------------------------------------- planner
+def test_multicast_cost_below_sum_of_unicasts(top, planner, mc_plan):
+    """Acceptance: at the same per-destination floor, the multicast plan
+    costs no more than N unicast plans — and strictly less for three
+    same-continent destinations (>= 25% egress savings)."""
+    assert mc_plan.solver_status == "optimal"
+    unis = [planner.plan_cost_min(SRC, d, FLOOR, 4.0) for d in DSTS]
+    uni_total = sum(u.total_cost for u in unis)
+    uni_egress = sum(u.egress_cost for u in unis)
+    assert mc_plan.total_cost <= uni_total + 1e-9
+    assert mc_plan.total_cost < uni_total * 0.999  # strictly lower
+    assert mc_plan.egress_cost <= uni_egress * 0.75  # >= 25% egress savings
+
+
+def test_multicast_plan_validates_per_commodity(mc_plan, top):
+    assert mc_plan.validate() == []
+    # every destination's floor is met by its own commodity
+    for d in mc_plan.dsts:
+        assert mc_plan.delivered_gbps(d) >= FLOOR * 0.99
+
+
+def test_multicast_trees_cover_every_destination(mc_plan):
+    trees = mc_plan.trees()
+    assert trees
+    rate = {d: 0.0 for d in mc_plan.dsts}
+    for t in trees:
+        assert t.rate > 0
+        for d, path in t.paths.items():
+            assert path[0] == mc_plan.src and path[-1] == d
+            rate[d] += t.rate
+    for d in mc_plan.dsts:
+        assert rate[d] >= mc_plan.delivered_gbps(d) * 0.99
+
+
+def test_single_destination_bitwise_matches_unicast(planner):
+    uni = planner.plan_cost_min(SRC, DSTS[0], FLOOR, 4.0)
+    one = planner.plan_multicast_cost_min(SRC, [DSTS[0]], FLOOR, 4.0)
+    assert np.array_equal(one.F[0], uni.F)
+    assert np.array_equal(one.G, uni.F)
+    assert np.array_equal(one.N, uni.N)
+    assert np.array_equal(one.M, uni.M)
+    assert one.total_cost == pytest.approx(uni.total_cost, rel=1e-12)
+
+
+def test_general_pipeline_single_dest_close_to_unicast(top, planner):
+    """The generic D-commodity pipeline (not the delegation fast path) on
+    one destination lands within ~1% of the unicast round-down."""
+    from repro.core.solver.bnb import solve_multicast
+
+    sub, s, ds, _ = planner._prune_mc(SRC, [DSTS[0]])
+    res = solve_multicast(sub, s, ds, np.array([FLOOR]))
+    uni = planner.plan_cost_min(SRC, DSTS[0], FLOOR, 4.0)
+    assert res.ok
+    # objective is $/s at the goal rate; compare per-GB at the same rate
+    assert res.objective == pytest.approx(
+        uni.total_cost / uni.transfer_time_s, rel=0.02
+    )
+
+
+def test_multicast_replan_is_pure_cache_hit(planner, top, mc_plan):
+    """Acceptance: re-planning surviving branches on a degraded topology
+    performs ZERO LP re-assembly (goals and cuts are pure RHS / extra
+    rows on the cached MulticastLPStructure)."""
+    s, d0 = top.index(SRC), top.index(DSTS[0])
+    builds0 = milp.N_STRUCT_BUILDS
+    replan = planner.plan_multicast_cost_min(
+        SRC, DSTS, [0.0, FLOOR, FLOOR], 2.0,
+        degraded_links={(s, d0): 0.3},
+    )
+    assert milp.N_STRUCT_BUILDS == builds0, "re-plan re-assembled a structure"
+    assert replan.solver_status == "optimal"
+    assert replan.validate() == []
+    # the finished destination dropped out of the trees
+    assert top.index(DSTS[0]) not in replan.active_dsts
+    # the degraded 4b row binds the envelope
+    phi_cap = 0.3 * top.tput[s, d0] * replan.M[s, d0] / top.limit_conn
+    assert replan.G[s, d0] <= phi_cap + 1e-6
+
+
+def test_multicast_tput_max_respects_ceiling(planner):
+    plan = planner.plan_multicast_tput_max(SRC, DSTS, 0.16, 8.0, n_samples=4)
+    assert plan.solver_status == "optimal"
+    assert plan.cost_per_gb <= 0.16 + 1e-9
+    assert plan.validate() == []
+    # a ceiling below every feasible plan returns best-effort, flagged
+    cheap = planner.plan_multicast_tput_max(SRC, DSTS, 0.01, 8.0,
+                                            n_samples=4)
+    assert cheap.solver_status == "cost_ceiling_infeasible"
+
+
+def test_max_multicast_throughput_bounds_the_floor(planner):
+    hi = planner.max_multicast_throughput(SRC, DSTS)
+    assert hi > FLOOR
+    with_cap = planner.plan_multicast_cost_min(SRC, DSTS, hi * 0.5, 1.0)
+    assert with_cap.solver_status == "optimal"
+
+
+# ---------------------------------------------------------------- simulators
+def _kill_fault(plan, top, count=1):
+    """A VM kill on one branch: pick the first destination region hosting
+    gateway VMs so exactly one fan-out branch is hit."""
+    for d in plan.dsts:
+        if plan.N[d] >= 1:
+            return VMFailure(t_s=1.5, job=0, region=int(d), count=count)
+    raise AssertionError("plan provisioned no destination VMs")
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_multicast_sim_matches_reference_with_branch_kill(top, mc_plan, seed):
+    """Acceptance: vectorized vs object-per-connection oracle, chunk for
+    chunk, on a 3-destination fan-out with a mid-transfer VM kill on one
+    branch — per-destination delivered counts, retries, costs."""
+    jobs = [TransferJob(mc_plan, "repl")]
+    faults = [_kill_fault(mc_plan, top)]
+    new = simulate_multi(jobs, faults, seed=seed)
+    ref = simulate_multi_reference(jobs, faults, seed=seed)
+    a, b = new.jobs[0], ref.jobs[0]
+    assert a.chunks_delivered == b.chunks_delivered
+    assert a.retried_chunks == b.retried_chunks
+    assert a.per_dst_delivered == b.per_dst_delivered
+    assert a.status == b.status
+    assert a.total_cost == pytest.approx(b.total_cost, rel=1e-9)
+    assert new.time_s == pytest.approx(ref.time_s, rel=1e-9)
+    assert a.retried_chunks > 0  # the kill really hit an in-flight chunk
+
+
+def test_multicast_clean_run_delivers_everywhere(top, mc_plan):
+    res = simulate_multi([TransferJob(mc_plan, "repl")], [], seed=0)
+    j = res.jobs[0]
+    assert j.status == "done"
+    assert j.chunks_delivered == j.n_chunks
+    assert set(j.per_dst_delivered) == set(mc_plan.dsts)
+    for cnt in j.per_dst_delivered.values():
+        assert cnt == j.n_chunks
+    # shared-trunk accounting: the job moves far fewer bytes than three
+    # independent unicasts would (< D x volume on the source-egress links)
+    src_gb = sum(
+        gb for e, gb in j.per_edge_gb.items()
+        if e.startswith(f"{mc_plan.src}->")
+    )
+    assert src_gb < len(mc_plan.dsts) * mc_plan.volume_gb
+
+
+def test_unequal_floor_multicast_completes(top, planner):
+    """Regression: with unequal per-destination floors every tree must
+    still span every active destination (commodity flows are normalized to
+    the slowest branch) — previously chunks binned to a subset-serving
+    tree could never reach the other destinations and the job stalled."""
+    plan = planner.plan_multicast_cost_min(SRC, DSTS, [0.5, 2.0, 2.0], 1.0)
+    assert plan.solver_status == "optimal" and plan.validate() == []
+    for t in plan.trees():
+        assert set(t.paths) == set(plan.active_dsts)
+    jobs = [TransferJob(plan, "mc")]
+    new = simulate_multi(jobs, [], seed=0)
+    ref = simulate_multi_reference(jobs, [], seed=0)
+    j = new.jobs[0]
+    assert j.status == "done"
+    assert all(v == j.n_chunks for v in j.per_dst_delivered.values())
+    assert j.per_dst_delivered == ref.jobs[0].per_dst_delivered
+    assert ref.jobs[0].status == "done"
+
+
+def test_multicast_and_unicast_jobs_share_the_plane(top, planner, mc_plan):
+    """A multicast tenant and a unicast tenant co-exist in one multi-job
+    scenario; both sims agree on both."""
+    from repro.core import direct_plan
+
+    jobs = [
+        TransferJob(mc_plan, "mc"),
+        TransferJob(direct_plan(top, "aws:us-west-2", "aws:eu-central-1",
+                                2.0, num_vms=2), "uni", arrival_s=0.5),
+    ]
+    new = simulate_multi(jobs, [], seed=1)
+    ref = simulate_multi_reference(jobs, [], seed=1)
+    for a, b in zip(new.jobs, ref.jobs):
+        assert a.chunks_delivered == b.chunks_delivered
+        assert a.status == b.status == "done"
+        assert a.per_dst_delivered == b.per_dst_delivered
+
+
+def test_event_exactly_at_horizon_is_classified_consistently(top, mc_plan):
+    """Regression (epsilon unification): a scripted event landing EXACTLY
+    on the horizon must be classified the same way by both simulators —
+    previously three different tolerances could disagree at the boundary."""
+    s, d0 = top.index(SRC), mc_plan.dsts[0]
+    horizon = 2.0
+    faults = [LinkDegrade(t_s=horizon, src=s, dst=int(d0), factor=0.5)]
+    jobs = [TransferJob(mc_plan, "repl")]
+    new = simulate_multi(jobs, faults, seed=0, horizon_s=horizon)
+    ref = simulate_multi_reference(jobs, faults, seed=0, horizon_s=horizon)
+    assert new.time_s == pytest.approx(horizon)
+    assert ref.time_s == pytest.approx(horizon)
+    assert new.jobs[0].status == ref.jobs[0].status == "running"
+    assert new.jobs[0].chunks_delivered == ref.jobs[0].chunks_delivered
+    assert new.jobs[0].per_dst_delivered == ref.jobs[0].per_dst_delivered
+    # an arrival exactly at the horizon is seen by both (status not
+    # "pending") but moves nothing
+    late = [TransferJob(mc_plan, "late", arrival_s=horizon)]
+    a = simulate_multi(late, [], seed=0, horizon_s=horizon).jobs[0]
+    b = simulate_multi_reference(late, [], seed=0, horizon_s=horizon).jobs[0]
+    assert a.status == b.status
+    assert a.chunks_delivered == b.chunks_delivered == 0
+
+
+# ------------------------------------------------------------------- gateway
+def test_gateway_multicast_zero_byte_objects_reach_all_destinations(
+    top, mc_plan
+):
+    src_store = BlobStore()
+    rng = np.random.default_rng(7)
+    keys = ["a", "empty", "b"]
+    src_store.put("a", rng.bytes(200_000))
+    src_store.put("empty", b"")
+    src_store.put("b", rng.bytes(70_000))
+    stores = {top.keys()[d]: BlobStore() for d in mc_plan.dsts}
+    rep = transfer_objects_multicast(
+        mc_plan, src_store, stores, keys, chunk_bytes=1 << 16
+    )
+    assert rep.chunks_missing == 0 and rep.checksum_failures == 0
+    for key_region, store in stores.items():
+        assert sorted(store.keys()) == sorted(keys)
+        for k in keys:
+            assert store.get(k) == src_store.get(k)
+        assert store.get("empty") == b""
+        assert rep.per_dest[key_region].chunks_missing == 0
+
+
+def test_gateway_multicast_per_destination_resume(top, mc_plan):
+    """A destination that already holds a verified object skips it while
+    the others still receive it."""
+    src_store = BlobStore()
+    rng = np.random.default_rng(8)
+    src_store.put("x", rng.bytes(150_000))
+    names = [top.keys()[d] for d in mc_plan.dsts]
+    stores = {n: BlobStore() for n in names}
+    stores[names[0]].put("x", src_store.get("x"))  # pre-seeded
+    rep = transfer_objects_multicast(
+        mc_plan, src_store, stores, ["x"], chunk_bytes=1 << 16
+    )
+    assert rep.per_dest[names[0]].objects_skipped == 1
+    assert rep.per_dest[names[1]].objects_skipped == 0
+    for n in names:
+        assert stores[n].get("x") == src_store.get("x")
+
+
+# ------------------------------------------------------------------- service
+def test_service_multicast_replans_surviving_branches(top):
+    svc = TransferService(top, backend="jax", max_relays=6)
+    svc.submit(TransferRequest("repl", SRC, "", 3.0, FLOOR, dsts=DSTS))
+    s, d0 = top.index(SRC), top.index(DSTS[0])
+    rep = svc.run(faults=[LinkDegrade(t_s=3.0, src=s, dst=d0, factor=0.2)])
+    (job,) = rep.jobs
+    assert job.status == "done"
+    assert job.delivered_gb == pytest.approx(3.0, rel=0.02)
+    assert job.replans, "the degraded trunk must force a re-plan"
+    for r in job.replans:
+        assert r.structure_builds == 0, "re-plan re-assembled an LPStructure"
+        assert r.plan.solver_status == "optimal"
+
+
+def test_service_replan_backs_off_goal_before_failing(top, monkeypatch):
+    """Satellite: a non-optimal constrained solve no longer fails the job
+    outright — the service retries with a backed-off goal and records the
+    degraded SLO in the ReplanRecord."""
+    import dataclasses
+
+    svc = TransferService(top, backend="jax", max_relays=6)
+    svc.submit(TransferRequest("a", "aws:us-west-2", "aws:eu-central-1",
+                               2.0, 4.0))
+    orig = svc.planner.plan_cost_min
+
+    def flaky(src, dst, goal, vol, **kw):
+        plan = orig(src, dst, goal, vol, **kw)
+        if kw.get("degraded_links") and goal > 1.5:
+            # degenerate solver stall at high goals on the degraded grid
+            return dataclasses.replace(plan, solver_status="max_iter")
+        return plan
+
+    monkeypatch.setattr(svc.planner, "plan_cost_min", flaky)
+    s, d = top.index("aws:us-west-2"), top.index("aws:eu-central-1")
+    rep = svc.run(faults=[LinkDegrade(t_s=2.0, src=s, dst=d, factor=0.3)])
+    (job,) = rep.jobs
+    assert job.replans
+    rec = job.replans[-1]
+    assert rec.backoffs > 0 and rec.degraded_slo
+    assert rec.goal_gbps < 4.0 * 0.96  # the accepted goal was backed off
+    assert rec.plan.solver_status == "optimal"
+    assert job.status == "done"
+
+
+# ----------------------------------------------------------------- satellite
+def test_replicate_rejects_both_planner_modes(tmp_path, top):
+    from repro.ckpt import replicate_checkpoint
+
+    (tmp_path / "f").write_bytes(b"x" * 128)
+    stores = {d: BlobStore() for d in DSTS}
+    with pytest.raises(ValueError, match="at most one"):
+        replicate_checkpoint(
+            tmp_path, top, SRC, DSTS, stores,
+            cost_ceiling_per_gb=0.1, tput_floor_gbps=1.0,
+        )
+
+
+def test_replicate_fails_fast_on_missing_store(tmp_path, top):
+    from repro.ckpt import replicate_checkpoint
+
+    (tmp_path / "f").write_bytes(b"x" * 128)
+    stores = {DSTS[0]: BlobStore()}  # two destinations missing
+    with pytest.raises(ValueError, match="missing from dst_stores"):
+        replicate_checkpoint(
+            tmp_path, top, SRC, DSTS, stores, tput_floor_gbps=1.0
+        )
+
+
+def test_paths_decomposes_all_flow_beyond_old_cap():
+    """Regression: a plan whose decomposition needs more than 32 paths no
+    longer silently drops the residual flow."""
+    n = 44
+    top = toy_topology(n=n, seed=1)
+    src, dst = 0, 1
+    F = np.zeros((n, n))
+    relays = list(range(2, 42))  # 40 parallel two-hop paths
+    for r in relays:
+        F[src, r] = 1.0
+        F[r, dst] = 1.0
+    plan = TransferPlan(
+        top=top, src=src, dst=dst, tput_goal=40.0, volume_gb=1.0,
+        F=F, N=np.ones(n), M=np.ones((n, n)),
+    )
+    paths = plan.paths()
+    assert len(paths) == len(relays)
+    assert sum(f for _, f in paths) == pytest.approx(40.0)
+    # an explicit cap that drops flow warns instead of staying silent
+    with pytest.warns(UserWarning, match="under-provision"):
+        short = plan.paths(max_paths=8)
+    assert len(short) == 8
