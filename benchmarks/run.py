@@ -19,6 +19,7 @@ import time
 import traceback
 
 from . import (  # noqa: F401
+    calibration_bench,
     common,
     fig3_grid,
     fig6_transfer_comparison,
@@ -46,6 +47,7 @@ MODULES = {
     "flowsim": flowsim_bench,
     "multijob": multijob_bench,
     "multicast": multicast_bench,
+    "calibration": calibration_bench,
     "roofline": roofline,
 }
 

@@ -5,11 +5,14 @@ overlays — the framework's verbatim use of the paper's technique.
     PYTHONPATH=src python examples/checkpoint_replication.py
 """
 
+import os
 import sys
 import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
 from repro.configs import get_arch, reduced  # noqa: E402
 from repro.core import default_topology  # noqa: E402
@@ -21,12 +24,13 @@ from repro.transfer.gateway import BlobStore  # noqa: E402
 
 def main():
     cfg = reduced(get_arch("smollm-135m"))
+    steps = 3 if FAST else 10
     with tempfile.TemporaryDirectory() as d:
         trainer = Trainer(
             cfg,
-            TrainerConfig(steps=10, global_batch=2, seq_len=64,
-                          ckpt_every=10, ckpt_dir=d),
-            opt_cfg=OptConfig(total_steps=10),
+            TrainerConfig(steps=steps, global_batch=2, seq_len=64,
+                          ckpt_every=steps, ckpt_dir=d),
+            opt_cfg=OptConfig(total_steps=steps),
         )
         result = trainer.run()
         print(f"trained {result['final_step']} steps, "

@@ -21,6 +21,8 @@ def main():
     top = dataclasses.replace(default_topology(), limit_vm=4)
     planner = Planner(top)
     src, dst = "azure:canadacentral", "gcp:asia-northeast1"
+    # the volume stays put even under REPRO_BENCH_FAST: the fidelity assert
+    # below needs a transfer long enough to amortize pipeline ramp-up
     volume_gb = 16.0
 
     # ----- the naive baseline: direct path, max VMs

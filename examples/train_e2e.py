@@ -7,6 +7,7 @@ Default: a 0.25-scale smollm derivative for ~50 steps on CPU. The full
         --batch 8 --seq 256
 """
 
+import os
 import sys
 from pathlib import Path
 
@@ -15,4 +16,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 from repro.launch.train import main  # noqa: E402
 
 if __name__ == "__main__":
+    if os.environ.get("REPRO_BENCH_FAST", "0") == "1" and len(sys.argv) == 1:
+        # smoke-test abbreviation: enough steps to prove the loop runs
+        sys.argv += ["--steps", "3", "--scale", "0.1", "--batch", "1",
+                     "--seq", "32", "--ckpt-every", "3"]
     raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Calibration plane (ISSUE 4): online bandwidth probing, belief topology,
+and uncertainty-aware re-planning.
+
+The subsystem separates the TRUE topology (what the data plane delivers —
+``drift.DriftModel``) from the BELIEVED topology (what the planner sees —
+``belief.BeliefGrid``), spends an explicit probe budget where planner
+value-of-information is highest (``calibrator.Calibrator``), and closes
+the measure→believe→plan→observe loop around the transfer service
+(``service.CalibratedTransferService``)."""
+
+from .belief import BeliefGrid, capacity_sample_from_rates  # noqa: F401
+from .calibrator import (  # noqa: F401
+    Calibrator,
+    ProbeBudget,
+    ProbeRecord,
+    ProbeRound,
+)
+from .drift import DriftModel, Incident  # noqa: F401
+from .service import (  # noqa: F401
+    CalibratedServiceReport,
+    CalibratedTransferService,
+    DriftEvent,
+)

@@ -1,0 +1,255 @@
+"""BeliefGrid: per-link throughput estimates with confidence.
+
+The planner should never see the raw profile grid again — it sees a
+*belief*: per ordered region pair, a weighted-mean throughput estimate
+plus an effective observation count and variance. The belief starts at
+the embedded profile grid with a weak prior (the stale measurement IS
+evidence, just old evidence) and tightens as evidence arrives:
+
+  * **active probes** (calibrate.Calibrator) — iperf-style measurements of
+    a link's current capacity; high weight;
+  * **passive telemetry** (flowsim / gateway per-link delivered rates) —
+    free but allocation-shaped; low weight, fed through
+    ``capacity_sample_from_rates`` which rescales an observed/expected
+    ratio back into grid space.
+
+Updates are weighted Welford: numerically stable streaming mean/variance
+where a weight-w observation counts as w unit observations. The belief
+exposes the two grids the planner consumes — the mean (``believed_
+topology``) and the z-lower-confidence-bound scale vector (``scale_
+grid``) that uncertainty-aware plans ride as cuts on cached LP structures.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+_EPS = 1e-12
+
+
+class BeliefGrid:
+    def __init__(
+        self,
+        base: Topology,
+        *,
+        prior_count: float = 4.0,
+        prior_rel_sigma: float = 0.25,
+        min_tput: float = 1e-3,
+    ):
+        self.base = base
+        v = base.num_regions
+        self.mean = np.array(base.tput, dtype=float, copy=True)
+        mask = self.mean > 0
+        self.count = np.where(mask, float(prior_count), 0.0)
+        # m2 = sum of weighted squared deviations: prior variance encodes
+        # "the stale grid is probably within ~prior_rel_sigma of reality"
+        self.m2 = np.where(
+            mask, (prior_rel_sigma * self.mean) ** 2 * prior_count, 0.0
+        )
+        self.min_tput = float(min_tput)
+        self.observations = 0
+        # when each link was last measured: the stale profile counts as one
+        # very old measurement, so probe targeting (staleness-aware scores)
+        # sweeps every candidate before re-visiting
+        self.last_obs_t = np.full((v, v), -np.inf)
+        assert self.mean.shape == (v, v)
+
+    # ---------------------------------------------------------------- updates
+    def observe(
+        self, src: int, dst: int, gbps: float, weight: float = 1.0,
+        t_s: float | None = None,
+    ):
+        """Fold one throughput observation of link (src, dst) into the
+        belief (weighted Welford; ``weight`` = equivalent unit samples)."""
+        if src == dst:
+            raise ValueError("no self-links")
+        g = max(float(gbps), self.min_tput)
+        w = float(weight)
+        c1 = self.count[src, dst] + w
+        delta = g - self.mean[src, dst]
+        self.mean[src, dst] += w * delta / c1
+        self.m2[src, dst] += w * delta * (g - self.mean[src, dst])
+        self.count[src, dst] = c1
+        if t_s is not None:
+            self.last_obs_t[src, dst] = float(t_s)
+        self.observations += 1
+
+    def reset_link(
+        self,
+        src: int,
+        dst: int,
+        gbps: float,
+        count: float = 4.0,
+        rel_sigma: float = 0.25,
+        t_s: float | None = None,
+    ):
+        """Regime change on one link: discard its history and re-seed the
+        belief at ``gbps``. A step-change incident draws from a NEW
+        distribution — Welford-averaging it against the old regime would
+        let the stale prior drag the mean for many rounds while the plan
+        keeps trusting a collapsed link."""
+        if src == dst:
+            raise ValueError("no self-links")
+        g = max(float(gbps), self.min_tput)
+        self.mean[src, dst] = g
+        self.count[src, dst] = float(count)
+        self.m2[src, dst] = (rel_sigma * g) ** 2 * float(count)
+        if t_s is not None:
+            self.last_obs_t[src, dst] = float(t_s)
+        self.observations += 1
+
+    def observe_adaptive(
+        self,
+        src: int,
+        dst: int,
+        gbps: float,
+        weight: float = 1.0,
+        z_reset: float = 3.0,
+        t_s: float | None = None,
+    ) -> bool:
+        """Observe with change-point handling: a sample outside the
+        z-confidence band (either direction) resets the link's belief to
+        the new regime; an in-band sample folds in normally. Returns
+        whether a reset happened."""
+        g = max(float(gbps), self.min_tput)
+        band = float(z_reset) * max(
+            self.stderr()[src, dst], 0.02 * self.mean[src, dst]
+        )
+        if abs(g - self.mean[src, dst]) > band:
+            self.reset_link(src, dst, g, count=max(float(weight), 1.0),
+                            t_s=t_s)
+            return True
+        self.observe(src, dst, g, weight, t_s=t_s)
+        return False
+
+    def observe_link_rates(
+        self,
+        rates: dict,
+        weight: float = 1.0,
+        t_s: float | None = None,
+        one_sided: bool = True,
+    ) -> int:
+        """Fold a {(src, dst): Gbps} mapping into the belief — the
+        gateway-side passive feed (``GatewayReport.link_gbps()``), with
+        the same change-point handling as simulator telemetry.
+
+        Gateway windows span first-pickup to last-completion on each hop,
+        so a hop throttled by an UPSTREAM bottleneck reads far below its
+        own capacity. The default ``one_sided=True`` therefore treats a
+        rate as a lower-bound observation: samples below the current mean
+        are dropped (capacity >= observed is the only safe inference from
+        a possibly-idle window); callers with saturation evidence (e.g. a
+        single-hop path, or the sim feed's expectation-checked samples)
+        pass ``one_sided=False``. Returns how many samples were folded."""
+        n = 0
+        for (a, b), g in rates.items():
+            if a == b:
+                continue
+            if one_sided and float(g) < self.mean[a, b]:
+                continue
+            self.observe_adaptive(int(a), int(b), float(g),
+                                  weight=weight, t_s=t_s)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------ uncertainty
+    def sigma(self) -> np.ndarray:
+        """Per-link sample standard deviation."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            var = np.where(self.count > 0, self.m2 / np.maximum(
+                self.count, _EPS), 0.0)
+        return np.sqrt(np.maximum(var, 0.0))
+
+    def stderr(self) -> np.ndarray:
+        """Standard error of the mean — shrinks with evidence."""
+        return self.sigma() / np.sqrt(np.maximum(self.count, 1.0))
+
+    def rel_uncertainty(self) -> np.ndarray:
+        """stderr / mean — the probe-targeting signal (0 on dead links)."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            r = np.where(self.mean > 0, self.stderr() /
+                         np.maximum(self.mean, _EPS), 0.0)
+        return r
+
+    def lower_bound(self, z: float = 1.5) -> np.ndarray:
+        """mean - z * stderr, floored at ``min_tput`` on live links."""
+        lb = self.mean - float(z) * self.stderr()
+        return np.where(self.mean > 0, np.maximum(lb, self.min_tput), 0.0)
+
+    def out_of_bounds(
+        self, src: int, dst: int, observed_gbps: float, z: float = 3.0
+    ) -> bool:
+        """Drift detector primitive: is this capacity sample below the
+        belief's z-confidence band on the link?"""
+        band = float(z) * max(self.stderr()[src, dst],
+                              0.02 * self.mean[src, dst])
+        return float(observed_gbps) < self.mean[src, dst] - band
+
+    # ------------------------------------------------------- planner-facing
+    def believed_topology(self) -> Topology:
+        """A fresh Topology carrying the belief mean — the planner's epoch
+        grid (copy-on-write; caches start clean on the new instance)."""
+        return self.base.with_tput(self.mean)
+
+    def scale_grid(
+        self, epoch_top: Topology, z: float = 1.5, floor: float = 0.02
+    ) -> np.ndarray:
+        """[V,V] per-link scale phi = lower_bound(z) / epoch grid, clipped
+        to [floor, 1]. The planner turns phi < 1 entries into tightened 4b
+        rows on its CACHED structures (milp.*.scale_cuts) — uncertainty-
+        aware planning with zero re-assembly. phi is clipped at 1 because
+        a loosening row never binds; a belief that *improved* past the
+        epoch grid is exploited at the next epoch roll, not mid-epoch."""
+        ref = np.asarray(epoch_top.tput, dtype=float)
+        lb = self.lower_bound(z)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            phi = np.where(ref > 0, lb / np.maximum(ref, _EPS), 1.0)
+        return np.clip(phi, float(floor), 1.0)
+
+    # ------------------------------------------------------------- diagnostics
+    def error_vs(
+        self, true_tput: np.ndarray, mask: np.ndarray | None = None
+    ) -> float:
+        """Mean relative belief error vs a true grid, over ``mask`` (default:
+        every live link). The calibration loop's convergence metric."""
+        true_tput = np.asarray(true_tput, dtype=float)
+        m = (self.mean > 0) & (true_tput > 0)
+        if mask is not None:
+            m &= np.asarray(mask, dtype=bool)
+        if not m.any():
+            return 0.0
+        rel = np.abs(self.mean[m] - true_tput[m]) / true_tput[m]
+        return float(rel.mean())
+
+
+def capacity_sample_from_rates(
+    observed_gbps: float,
+    expected_gbps: float,
+    *,
+    n_vms: float = 1.0,
+    link_capacity_scale: float | None = 2.0,
+    saturation_ratio: float = 0.9,
+) -> float | None:
+    """Convert a passive (observed, expected) link-rate pair into a grid-
+    space capacity sample — or None when the telemetry carries no
+    capacity information.
+
+    Passive evidence is ONE-SIDED: a link that delivered what the plan
+    asked (``observed >= saturation_ratio * expected``) only proves
+    capacity >= observed — inferring "the grid entry is fine" from it
+    would reset a freshly-learned degradation back to the stale prior.
+    Only an UNDER-delivering link was capacity-bound, and then the grid
+    entry (single-VM-pair rate) is the observed aggregate divided by the
+    effective parallelism: ``min(n_vms, link_capacity_scale)`` — the VM
+    fan-out the data plane multiplies the grid rate by, ceilinged by the
+    shared-interconnect capacity factor."""
+    if expected_gbps <= 1e-9:
+        return None
+    if observed_gbps >= saturation_ratio * expected_gbps:
+        return None  # link kept up with the plan: no capacity info
+    par = max(float(n_vms), 1.0)
+    if link_capacity_scale is not None:
+        par = min(par, float(link_capacity_scale))
+    return float(max(observed_gbps, 1e-6) / par)

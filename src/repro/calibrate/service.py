@@ -1,0 +1,421 @@
+"""CalibratedTransferService: the closed measure→believe→plan→observe loop.
+
+Extends :class:`repro.transfer.TransferService` with the calibration
+plane's split view of the world:
+
+  * plans are made on the BELIEVED topology (``BeliefGrid`` mean at
+    service start — the epoch grid) with the ``robustness`` knob applied:
+    every admission and re-plan rides the belief's lower-confidence-bound
+    scale as tightened 4b rows on the CACHED LP structures
+    (``TransferService._plan_scale`` override; zero re-assembly);
+  * the data plane executes on the TRUE topology (``DriftModel`` snapshot
+    frozen at each segment start, via ``simulate_multi(exec_top=...)``);
+  * the run is segmented every ``check_interval_s``: at each boundary a
+    ``Calibrator`` probe round spends its budget on the highest
+    value-of-information links, and passive telemetry (per-link delivered
+    GB over active seconds) folds into the belief;
+  * a drift detector compares what a plan assumed of each link it uses
+    against what probes and telemetry observed: a sample below
+    ``drift_ratio`` of the assumption AND outside the belief's
+    z-confidence band (``BeliefGrid.out_of_bounds``) flags the link, the
+    belief is updated at ``drift_weight``, and the job's REMAINING volume
+    is re-planned (``TransferService._replan`` — cached structures, goal
+    backoff ladder, ``ReplanRecord`` provenance all inherited).
+
+A long transfer that crosses a step-change incident therefore finishes
+near its SLO — the loop routes the remainder around the collapsed link —
+where the same service with ``calibrate=False`` (the stale-grid baseline:
+same segmentation, same true topology, no probes / no belief updates / no
+re-planning) limps through at the incident's rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.plan import MulticastPlan
+from repro.core.topology import GBIT_PER_GB
+from repro.transfer.events import TransferJob
+from repro.transfer.executor import ServiceReport, TransferService
+
+from .belief import BeliefGrid, capacity_sample_from_rates
+from .calibrator import Calibrator, ProbeRound
+from .drift import DriftModel
+
+_FLOW_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One detected believed-vs-observed divergence on a plan link."""
+
+    t_s: float
+    job: str
+    src: int  # region indices of the drifted link
+    dst: int
+    assumed_gbps: float  # what the job's plan assumed of the link
+    observed_gbps: float  # the capacity sample that broke the bounds
+    source: str  # "probe" | "telemetry"
+
+
+@dataclasses.dataclass
+class CalibratedServiceReport(ServiceReport):
+    probe_rounds: list[ProbeRound] = dataclasses.field(default_factory=list)
+    drift_events: list[DriftEvent] = dataclasses.field(default_factory=list)
+    # (t_s, mean relative believed-vs-true grid error) per probe round
+    belief_error_trajectory: list[tuple[float, float]] = dataclasses.field(
+        default_factory=list
+    )
+
+    @property
+    def probe_cost_usd(self) -> float:
+        return sum(r.cost_usd for r in self.probe_rounds)
+
+    @property
+    def probe_seconds(self) -> float:
+        return sum(r.duration_s for r in self.probe_rounds)
+
+
+class CalibratedTransferService(TransferService):
+    """TransferService planning on a belief, executing on a drift model.
+
+    Usage::
+
+        drift = DriftModel(default_topology(), seed=3, incidents=[...])
+        svc = CalibratedTransferService(drift)
+        svc.submit(TransferRequest("big", src, dst, 64.0, 4.0))
+        report = svc.run()
+
+    ``calibrate=False`` turns every feedback path off (no probes, no
+    telemetry, no drift detection, no re-planning) while keeping the
+    identical segmented execution on the true topology — the stale-grid
+    baseline the calibration benchmark compares against.
+    """
+
+    def __init__(
+        self,
+        drift: DriftModel,
+        *,
+        belief: BeliefGrid | None = None,
+        calibrator: Calibrator | None = None,
+        calibrate: bool = True,
+        robustness: float = 1.5,
+        check_interval_s: float = 4.0,
+        drift_ratio: float = 0.6,
+        drift_z: float = 2.0,
+        passive_weight: float = 1.0,
+        drift_weight: float = 8.0,
+        max_segments: int = 400,
+        link_capacity_scale: float | None = 2.0,
+        **kw,
+    ):
+        self.drift = drift
+        self.belief = belief or BeliefGrid(drift.base)
+        self.calibrate = bool(calibrate)
+        self.robustness = float(robustness)
+        self.check_interval_s = float(check_interval_s)
+        self.drift_ratio = float(drift_ratio)
+        self.drift_z = float(drift_z)
+        self.passive_weight = float(passive_weight)
+        self.drift_weight = float(drift_weight)
+        self.max_segments = int(max_segments)
+        self.link_capacity_scale = link_capacity_scale
+        # the epoch grid: plans are priced and constrained against the
+        # belief mean frozen at service construction; within the epoch the
+        # belief moves only through scale cuts (zero re-assembly)
+        super().__init__(self.belief.believed_topology(), **kw)
+        self.planner.belief = self.belief
+        # robust cuts also cap aggregate flow on drifted links at the data
+        # plane's shared-link capacity — an incident cannot be bought back
+        # with more VMs/connections (matches simulate_multi's water-filling)
+        self.planner.link_capacity_scale = link_capacity_scale
+        self.calibrator = calibrator if calibrator is not None else (
+            Calibrator(self.belief) if self.calibrate else None
+        )
+
+    # --------------------------------------------------------------- planning
+    def _plan_scale(self) -> np.ndarray | None:
+        """The belief's lower-confidence-bound scale vs the epoch grid —
+        what every admission/re-plan solve rides as cached-structure cuts.
+        None while the belief still matches the epoch (no cuts needed) or
+        when calibration is off (the stale baseline trusts its grid)."""
+        if not self.calibrate:
+            return None
+        phi = self.belief.scale_grid(self.top, z=self.robustness)
+        if (phi >= 1.0 - 1e-9).all():
+            return None
+        return phi
+
+    @staticmethod
+    def _drop_trickle_paths(plan, frac: float = 0.05):
+        """Drop decomposed paths below ``frac`` of plan throughput and
+        rebuild F. A trickle path over a collapsed link is rational to the
+        LP (the re-plan goal sits at 95% of robust capacity, so the solver
+        scrapes every capped drop) but poisonous to the segmented data
+        plane: its in-flight chunks crawl, and every boundary drain waits
+        for them — a latency tax far above the capacity the path adds."""
+        if isinstance(plan, MulticastPlan):
+            return plan
+        paths = plan.paths()
+        total = sum(f for _, f in paths)
+        keep = [(p, f) for p, f in paths if f >= frac * total]
+        if not keep or len(keep) == len(paths):
+            return plan
+        F = np.zeros_like(plan.F)
+        for p, f in keep:
+            for a, b in zip(p[:-1], p[1:]):
+                F[a, b] += f
+        plan.F = F
+        plan.tput_goal = min(plan.tput_goal, float(F[plan.src, :].sum()))
+        return plan
+
+    def _plan_for(self, req, goal, volume_gb, *, vm_caps=None, constrained):
+        plan = super()._plan_for(req, goal, volume_gb,
+                                 vm_caps=vm_caps, constrained=constrained)
+        if self.calibrate and plan.solver_status == "optimal":
+            plan = self._drop_trickle_paths(plan)
+        return plan
+
+    def _assumed_grid(self, plan) -> np.ndarray:
+        """Per-link throughput the plan effectively assumed: the epoch grid
+        under the scale active when the plan was made, masked to the links
+        the plan uses. The drift detector's reference point."""
+        grid = plan.G if isinstance(plan, MulticastPlan) else plan.F
+        scale = self._plan_scale()
+        eff = np.asarray(self.top.tput, dtype=float)
+        if scale is not None:
+            eff = eff * scale
+        return np.where(np.asarray(grid) > _FLOW_EPS, eff, 0.0)
+
+    # ----------------------------------------------------------------- checks
+    def _probe_drifted_links(
+        self, st, samples: dict[tuple[int, int], float]
+    ) -> list[tuple[int, int, float, float]]:
+        """(a, b, assumed, measured) for every plan link an active probe
+        measured far below what the plan assumed of it (grid space). A
+        probe saturates the link, so its measurement needs no confidence
+        band to be trusted — the ratio alone convicts."""
+        out = []
+        for (a, b), obs in samples.items():
+            assumed = float(st._assumed[a, b])
+            if assumed <= _FLOW_EPS:
+                continue
+            if obs < self.drift_ratio * assumed:
+                out.append((a, b, assumed, obs))
+        return out
+
+    def _harvest(
+        self, st, jr, t_s: float = 0.0,
+        agg_grid: np.ndarray | None = None,
+    ) -> tuple[dict[tuple[int, int], float],
+               list[tuple[int, int, float, float]]]:
+        """Passive telemetry: per-link capacity samples for the links this
+        job's segment actually exercised, folded into the belief with
+        change-point handling (``observe_adaptive`` — a step change is a
+        new regime, not one more noisy draw of the old one).
+
+        Returns (samples, drifted links). A link drifts when it delivered
+        below ``drift_ratio`` of the flow the plan allocated on it AND its
+        capacity sample falls outside the belief's confidence band — the
+        band is evaluated BEFORE the sample is folded in, because a
+        change-point reset moves the band onto the sample.
+
+        ``agg_grid`` is the AGGREGATE allocation across every job in the
+        segment: when co-tenants over-subscribe a shared link beyond the
+        believed interconnect capacity, this job's fair share — not its
+        solo allocation — is what the data plane owes it, and reading the
+        shortfall as capacity drift would reset healthy links low."""
+        plan = st.plan
+        grid = plan.G if isinstance(plan, MulticastPlan) else plan.F
+        samples: dict[tuple[int, int], float] = {}
+        hits: list[tuple[int, int, float, float]] = []
+        busy_map = jr.per_edge_active_s or {}
+        obs_map = jr.per_edge_obs_gb
+        default_busy = 0.0
+        if obs_map is None:
+            # simulator without the obs window (e.g. the flowsim_ref
+            # oracle via sim=): fall back to whole-run bytes over the
+            # job's whole duration — a cruder, dilution-prone window,
+            # but it keeps passive telemetry live on every backend
+            obs_map = jr.per_edge_gb or {}
+            default_busy = float(jr.time_s)
+        for key, gb in obs_map.items():
+            a_s, b_s = key.split("->")
+            a, b = int(a_s), int(b_s)
+            busy = float(busy_map.get(key, default_busy))
+            if busy <= 1e-6:
+                continue
+            observed = gb * GBIT_PER_GB / busy
+            expected = float(grid[a, b])
+            if agg_grid is not None and self.link_capacity_scale is not None:
+                cap_now = self.link_capacity_scale * float(
+                    self.belief.mean[a, b]
+                )
+                agg = float(agg_grid[a, b])
+                if agg > cap_now > 0.0:
+                    expected *= cap_now / agg  # known contention, not drift
+            sample = capacity_sample_from_rates(
+                observed, expected,
+                n_vms=max(float(np.round(plan.N[a])), 1.0),
+                link_capacity_scale=self.link_capacity_scale,
+            )
+            if sample is None:
+                continue  # link kept up with the plan: no capacity info
+            samples[(a, b)] = sample
+            if observed < self.drift_ratio * expected \
+                    and st._assumed[a, b] > _FLOW_EPS \
+                    and self.belief.out_of_bounds(a, b, sample,
+                                                  z=self.drift_z):
+                hits.append((a, b, expected, observed))
+        for (a, b), sample in samples.items():
+            self.belief.observe_adaptive(
+                a, b, sample,
+                weight=self.passive_weight, z_reset=self.drift_z,
+                t_s=t_s,
+            )
+        return samples, hits
+
+    # -------------------------------------------------------------------- run
+    def run(
+        self,
+        faults=(),
+        *,
+        seed: int = 0,
+        link_capacity_scale: float | None = None,
+        sim=None,
+        **sim_kwargs,
+    ) -> CalibratedServiceReport:
+        """Segmented execution on the drifting true topology.
+
+        Scripted ``faults`` are not supported here — incidents belong to
+        the DriftModel (the service must *discover* them through probes
+        and telemetry, which is the whole point)."""
+        from repro.transfer.flowsim import simulate_multi
+
+        if faults:
+            raise ValueError(
+                "CalibratedTransferService takes no scripted faults; "
+                "script incidents on the DriftModel instead"
+            )
+        sim = sim or simulate_multi
+        if link_capacity_scale is None:
+            link_capacity_scale = self.link_capacity_scale
+        states = [self._admit(r) for r in self._queue]
+        self._queue = []
+        for st in states:
+            st._assumed = self._assumed_grid(st.plan)
+
+        probe_rounds: list[ProbeRound] = []
+        drift_events: list[DriftEvent] = []
+        trajectory: list[tuple[float, float]] = []
+        now = 0.0
+        segments = 0
+        sim_events = 0
+
+        def active_indices() -> list[int]:
+            return [
+                i for i, st in enumerate(states)
+                if st.status in ("planned", "running") and st.remaining_chunks
+            ]
+
+        def note_drift(st, hits, t, source):
+            for a, b, assumed, obs in hits:
+                drift_events.append(DriftEvent(
+                    t_s=t, job=st.req.name, src=a, dst=b,
+                    assumed_gbps=assumed, observed_gbps=obs, source=source,
+                ))
+
+        while segments < self.max_segments:
+            act = active_indices()
+            if not act:
+                break
+            true_now = self.drift.tput_at(now)
+
+            # ---- probe round: spend the budget where VoI is highest
+            if self.calibrate and self.calibrator is not None:
+                rnd = self.calibrator.run_round(
+                    now, true_now,
+                    planner=self.planner,
+                    contexts=[
+                        (states[i].req.src, states[i].req.dsts)
+                        if states[i].req.multicast
+                        else (states[i].req.src, states[i].req.dst)
+                        for i in act
+                    ],
+                    plans=[states[i].plan for i in act],
+                )
+                probe_rounds.append(rnd)
+                trajectory.append((now, rnd.belief_error))
+                # probe-driven drift: a probed plan link measured far below
+                # what the plan assumed re-plans BEFORE the segment runs
+                samples = {
+                    (r.src, r.dst): r.measured_gbps for r in rnd.records
+                }
+                for i in act:
+                    st = states[i]
+                    hits = self._probe_drifted_links(st, samples)
+                    if hits:
+                        note_drift(st, hits, now, "probe")
+                        self._replan(st, i, at_s=now)
+                        if st.status != "failed":
+                            st._assumed = self._assumed_grid(st.plan)
+
+            # ---- one segment on the true topology frozen at `now`
+            act = active_indices()
+            if not act:
+                break
+            exec_top = self.top.with_tput(true_now)
+            active = [states[i] for i in act]
+            sim_jobs = [
+                TransferJob(
+                    plan=st.plan.with_volume(st.remaining_gb),
+                    name=st.req.name,
+                    arrival_s=max(st.req.arrival_s - now, 0.0),
+                    chunk_mb=st.req.chunk_mb,
+                )
+                for st in active
+            ]
+            res = sim(
+                sim_jobs, (),
+                horizon_s=self.check_interval_s,
+                seed=seed + 101 * segments,
+                link_capacity_scale=link_capacity_scale,
+                exec_top=exec_top,
+                drain=True,
+                **sim_kwargs,
+            )
+            segments += 1
+            sim_events += res.events
+            self._fold_segment(active, res, now)
+            seg_end = now + res.time_s
+
+            # ---- feedback: telemetry -> belief -> drift -> re-plan
+            if self.calibrate:
+                agg = np.zeros_like(np.asarray(self.top.tput))
+                for st in active:
+                    g = (st.plan.G if isinstance(st.plan, MulticastPlan)
+                         else st.plan.F)
+                    agg = agg + np.asarray(g)
+                for i, jr in zip(act, res.jobs):
+                    st = states[i]
+                    _, hits = self._harvest(st, jr, t_s=seg_end,
+                                            agg_grid=agg)
+                    if hits and st.status in ("planned", "running") \
+                            and st.remaining_chunks:
+                        note_drift(st, hits, seg_end, "telemetry")
+                        self._replan(st, i, at_s=seg_end)
+                        if st.status != "failed":
+                            st._assumed = self._assumed_grid(st.plan)
+            now = seg_end
+
+        return CalibratedServiceReport(
+            jobs=self._job_reports(states, now),
+            time_s=now,
+            segments=segments,
+            sim_events=sim_events,
+            probe_rounds=probe_rounds,
+            drift_events=drift_events,
+            belief_error_trajectory=trajectory,
+        )

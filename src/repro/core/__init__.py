@@ -1,7 +1,7 @@
 """Skyplane's contribution: cost/throughput-optimal overlay planning (paper §4-§5)."""
 
 from .topology import Region, Topology, GBIT_PER_GB  # noqa: F401
-from .profiles import default_topology, toy_topology  # noqa: F401
+from .profiles import default_topology, grid_fingerprint, toy_topology  # noqa: F401
 from .plan import McTree, MulticastPlan, TransferPlan  # noqa: F401
 from .planner import Planner, ParetoPoint  # noqa: F401
 from .ron import ron_plan  # noqa: F401

@@ -117,6 +117,33 @@ def _edge_arrays(edges: list[tuple[int, int]]) -> tuple[np.ndarray, np.ndarray]:
     return arr[:, 0], arr[:, 1]
 
 
+def _scale_cut_rows(
+    nx: int,
+    m_col: int,
+    tput_e: np.ndarray,
+    limit_conn: float,
+    edge_scale: np.ndarray,
+    agg_cap: float | None,
+    tol: float,
+) -> list[tuple[np.ndarray, float]]:
+    """Shared body of the unicast/multicast ``scale_cuts``: per edge with
+    phi < 1, a tightened 4b row (flow column k vs M column m_col + k) and,
+    with ``agg_cap``, an aggregate interconnect row."""
+    cuts: list[tuple[np.ndarray, float]] = []
+    coef = tput_e / limit_conn
+    for k in np.flatnonzero(edge_scale < 1.0 - tol):
+        phi = float(edge_scale[k])
+        row = np.zeros(nx)
+        row[k] = 1.0
+        row[m_col + k] = -phi * coef[k]
+        cuts.append((row, 0.0))
+        if agg_cap is not None:
+            agg = np.zeros(nx)
+            agg[k] = 1.0
+            cuts.append((agg, phi * float(tput_e[k]) * float(agg_cap)))
+    return cuts
+
+
 @dataclasses.dataclass
 class PinPattern:
     """Column partition + reduced matrices for one (pin_n, pin_m) choice.
@@ -281,6 +308,44 @@ class LPStructure:
         c[np.flatnonzero(self.eu == self.src)] = -1.0
         return c
 
+    # ------------------------------------------------------------- scale cuts
+    def scale_cuts(
+        self,
+        edge_scale: np.ndarray,
+        agg_cap: float | None = None,
+        tol: float = 1e-9,
+    ) -> list[tuple[np.ndarray, float]]:
+        """Tightened rows for a per-edge throughput scale vector.
+
+        ``edge_scale[k]`` (aligned with ``self.edges``) rescales edge k's
+        grid throughput. For every edge with phi < 1 (phi >= 1 never
+        binds next to the base 4b row and is skipped) this emits:
+
+          * a tightened 4b row  ``F_k <= phi * tput_k / limit_conn * M_k``
+            — the per-connection rate on a drifted link is down by phi;
+          * with ``agg_cap`` (the data plane's shared-link capacity factor,
+            ``link_capacity_scale``): an AGGREGATE row
+            ``F_k <= phi * tput_k * agg_cap`` — an interconnect incident
+            caps the wide-area link itself, so the solver cannot buy the
+            loss back with more VMs and connections.
+
+        This is how the calibration plane plans against a lower-confidence-
+        bound grid: the scale vector rides the CACHED structure as
+        ``extra_ub`` rows — exactly the degraded-link discipline — so a
+        robust (re-)plan assembles nothing (``N_STRUCT_BUILDS`` does not
+        move)."""
+        edge_scale = np.asarray(edge_scale, dtype=float)
+        if edge_scale.shape != (self.n_edges,):
+            raise ValueError(
+                f"edge_scale must have shape ({self.n_edges},), "
+                f"got {edge_scale.shape}"
+            )
+        return _scale_cut_rows(
+            self.nx, self.n_edges + self.num_regions,
+            self.top.tput[self.eu, self.ew], self.top.limit_conn,
+            edge_scale, agg_cap, tol,
+        )
+
     # ----------------------------------------------------------- exact presolve
     def reduced(
         self,
@@ -312,7 +377,9 @@ class LPStructure:
         keep = np.flatnonzero(region_support)
         rtop = self.top.subgraph([int(i) for i in keep])
         if edge_mask is not None:
-            rtop.tput = rtop.tput * np.asarray(edge_mask, bool)[np.ix_(keep, keep)]
+            rtop = rtop.with_tput(
+                scale=np.asarray(edge_mask, bool)[np.ix_(keep, keep)]
+            )
         rs = int(np.searchsorted(keep, self.src))
         rt = int(np.searchsorted(keep, self.dst))
         rstruct = LPStructure(rtop, rs, rt)
@@ -709,6 +776,30 @@ class MulticastLPStructure:
             fm = np.asarray(fixed_m, dtype=float)
             fv[self.iM :] = fm[self.eu, self.ew]
         return fv
+
+    # ------------------------------------------------------------- scale cuts
+    def scale_cuts(
+        self,
+        edge_scale: np.ndarray,
+        agg_cap: float | None = None,
+        tol: float = 1e-9,
+    ) -> list[tuple[np.ndarray, float]]:
+        """Tightened rows on the ENVELOPE for a per-edge scale vector —
+        the multicast analogue of ``LPStructure.scale_cuts`` (what crosses
+        the wire is G, so the lower-confidence-bound grid binds G; the
+        ``agg_cap`` aggregate row likewise). Rows ride the cached
+        structure as ``extra_ub``; nothing re-assembles."""
+        edge_scale = np.asarray(edge_scale, dtype=float)
+        if edge_scale.shape != (self.n_edges,):
+            raise ValueError(
+                f"edge_scale must have shape ({self.n_edges},), "
+                f"got {edge_scale.shape}"
+            )
+        return _scale_cut_rows(
+            self.nx, self.iM,
+            self.top.tput[self.eu, self.ew], self.top.limit_conn,
+            edge_scale, agg_cap, tol,
+        )
 
     # ---------------------------------------------------------------- LP build
     def _b_and_trivial(

@@ -59,11 +59,53 @@ class Planner:
         *,
         max_relays: int = 10,
         mode: str = "relaxed",  # "relaxed" (round-down, §5.1.3) or "exact"
+        belief=None,  # calibrate.BeliefGrid powering the robustness knob
+        link_capacity_scale: float | None = None,  # data-plane shared-link
+        # capacity factor: robust scale cuts then also cap each drifted
+        # link's AGGREGATE flow (incidents hit the interconnect, which more
+        # VMs/connections cannot buy back)
     ):
         self.top = top
         self.max_relays = max_relays
         self.mode = mode
+        self.belief = belief
+        self.link_capacity_scale = link_capacity_scale
         self._prune_cache: dict[tuple[str, str], tuple] = {}
+
+    # ------------------------------------------------------------- robustness
+    def _resolve_scale(
+        self, robustness: float, tput_scale: np.ndarray | None
+    ) -> np.ndarray | None:
+        """The full-grid [V,V] throughput scale a solve should plan under.
+
+        ``robustness`` > 0 asks the attached belief for its z-lower-
+        confidence-bound grid relative to this planner's (epoch) grid;
+        an explicit ``tput_scale`` composes with it elementwise (min —
+        both pessimisms must hold). Returns None when nothing applies."""
+        scale = None
+        if robustness and robustness > 0.0:
+            if self.belief is None:
+                raise ValueError(
+                    "robustness > 0 needs a belief attached to the Planner"
+                )
+            scale = self.belief.scale_grid(self.top, z=float(robustness))
+        if tput_scale is not None:
+            ts = np.asarray(tput_scale, dtype=float)
+            scale = ts if scale is None else np.minimum(scale, ts)
+        return scale
+
+    def _scale_cuts(self, struct, keep, tput_scale) -> list:
+        """Map a full-grid scale vector into ``struct``'s edge space and
+        emit the tightened rows (``milp.*.scale_cuts``) — shared by the
+        unicast and multicast paths, zero re-assembly either way."""
+        if tput_scale is None:
+            return []
+        ix = np.asarray(keep, dtype=np.int64)
+        sub_scale = np.asarray(tput_scale, dtype=float)[np.ix_(ix, ix)]
+        return struct.scale_cuts(
+            sub_scale[struct.eu, struct.ew],
+            agg_cap=self.link_capacity_scale,
+        )
 
     # ----------------------------------------------------------------- bounds
     def max_throughput(
@@ -73,14 +115,20 @@ class Planner:
         *,
         degraded_links: dict[tuple[int, int], float] | None = None,
         vm_caps: dict[int, float] | None = None,
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> float:
         """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit.
 
         degraded_links / vm_caps (full-topology region indices) constrain
-        the same cached LPStructure — see ``plan_cost_min``."""
+        the same cached LPStructure — see ``plan_cost_min``. robustness /
+        tput_scale bound the flow by the scaled (lower-confidence) grid."""
         sub, s, t, keep = self._prune(src, dst)
         struct = milp.structure(sub, s, t)
         cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
+        cuts = cuts + self._scale_cuts(
+            struct, keep, self._resolve_scale(robustness, tput_scale)
+        )
         fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
         if vm_caps:
             inv = {full: i for i, full in enumerate(keep)}
@@ -121,6 +169,8 @@ class Planner:
         backend: str = "numpy",
         degraded_links: dict[tuple[int, int], float] | None = None,
         vm_caps: dict[int, float] | None = None,
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> TransferPlan:
         """Paper mode 1: minimize cost subject to a throughput floor.
 
@@ -132,14 +182,21 @@ class Planner:
         it). This is the degraded-topology re-planning hook of the
         fault-tolerant TransferService: nothing is re-assembled, the cuts
         ride on the memoized structure as extra rows.
+
+        robustness > 0 plans against the attached belief's z-lower-
+        confidence-bound grid (uncertainty-aware planning); tput_scale
+        applies an explicit full-grid scale. Both ride the cached
+        structure as scale cuts — the same zero-reassembly discipline.
         """
         sub, s, t, keep = self._prune(src, dst)
+        scale = self._resolve_scale(robustness, tput_scale)
         cuts = None
-        if degraded_links or vm_caps:
+        if degraded_links or vm_caps or scale is not None:
             struct = milp.structure(sub, s, t)
             cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
+            cuts = cuts + self._scale_cuts(struct, keep, scale)
         res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode,
-                         backend=backend, extra_ub=cuts)
+                         backend=backend, extra_ub=cuts or None)
         return self._lift(sub, keep, src, dst, tput_goal_gbps, volume_gb, res)
 
     def plan_tput_max(
@@ -152,10 +209,13 @@ class Planner:
         n_samples: int = 40,
         mode: str | None = None,
         backend: str = "numpy",
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> TransferPlan:
         """Paper mode 2 (§5.2): Pareto sweep, pick fastest plan under ceiling."""
         frontier = self.pareto_frontier(
-            src, dst, volume_gb, n_samples=n_samples, mode=mode, backend=backend
+            src, dst, volume_gb, n_samples=n_samples, mode=mode,
+            backend=backend, robustness=robustness, tput_scale=tput_scale,
         )
         feasible = [p for p in frontier if p.cost_per_gb <= cost_ceiling_per_gb + 1e-9]
         if not feasible:
@@ -177,6 +237,8 @@ class Planner:
         *,
         degraded_links: dict[tuple[int, int], float] | None = None,
         vm_caps: dict[int, float] | None = None,
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> MulticastPlan:
         """One-to-many cost-min: minimize $ with every destination receiving
         at least its throughput floor, billing each overlay link's egress
@@ -201,6 +263,7 @@ class Planner:
             uni = self.plan_cost_min(
                 src, dsts[0], float(goals[0]), volume_gb,
                 degraded_links=degraded_links, vm_caps=vm_caps,
+                robustness=robustness, tput_scale=tput_scale,
             )
             return MulticastPlan(
                 top=self.top, src=uni.src, dsts=[uni.dst],
@@ -209,10 +272,12 @@ class Planner:
                 N=uni.N, M=uni.M, solver_status=uni.solver_status,
             )
         sub, s, ds, keep = self._prune_mc(src, dsts)
+        scale = self._resolve_scale(robustness, tput_scale)
         cuts = None
-        if degraded_links or vm_caps:
+        if degraded_links or vm_caps or scale is not None:
             struct = milp.multicast_structure(sub, s, ds)
             cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
+            cuts = cuts + self._scale_cuts(struct, keep, scale)
         res = solve_multicast(sub, s, ds, goals, extra_ub=cuts or None)
         return self._lift_mc(sub, keep, src, dsts, goals, volume_gb, res)
 
@@ -224,16 +289,22 @@ class Planner:
         volume_gb: float,
         *,
         n_samples: int = 12,
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> MulticastPlan:
         """One-to-many throughput-max under a cost ceiling (§5.2 applied to
         the multicast MILP): sweep uniform per-destination floors, estimate
         the cost frontier from ONE batched relaxation solve (the sweep LPs
         share every matrix of the cached structure and differ only in the
         goal rows of b), then integerize candidates fastest-first until one
-        fits the ceiling."""
+        fits the ceiling. robustness / tput_scale constrain the candidate
+        range and every integerized solve by the scaled grid (the batched
+        relaxation filter itself stays cut-free; over-optimistic candidates
+        are rejected by the exact robust re-check)."""
         if len(dsts) == 1:
             uni = self.plan_tput_max(src, dsts[0], cost_ceiling_per_gb,
-                                     volume_gb)
+                                     volume_gb, robustness=robustness,
+                                     tput_scale=tput_scale)
             return MulticastPlan(
                 top=self.top, src=uni.src, dsts=[uni.dst],
                 tput_goals=np.array([uni.tput_goal]), volume_gb=volume_gb,
@@ -243,7 +314,9 @@ class Planner:
         from .solver.ipm_batch import solve_lp_batched_auto
 
         sub, s, ds, keep = self._prune_mc(src, dsts)
-        hi = self.max_multicast_throughput(src, dsts)
+        hi = self.max_multicast_throughput(
+            src, dsts, robustness=robustness, tput_scale=tput_scale
+        )
         if hi <= 0:
             raise ValueError(f"no multicast path from {src} to {dsts}")
         rates = np.linspace(hi / n_samples, hi * 0.999, n_samples)
@@ -264,7 +337,10 @@ class Planner:
         )
         best: MulticastPlan | None = None
         for g in cand:
-            plan = self.plan_multicast_cost_min(src, dsts, g, volume_gb)
+            plan = self.plan_multicast_cost_min(
+                src, dsts, g, volume_gb,
+                robustness=robustness, tput_scale=tput_scale,
+            )
             if plan.solver_status != "optimal":
                 continue
             if best is None or plan.cost_per_gb < best.cost_per_gb:
@@ -283,12 +359,17 @@ class Planner:
         *,
         degraded_links: dict[tuple[int, int], float] | None = None,
         vm_caps: dict[int, float] | None = None,
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> float:
         """Max uniform per-destination rate (Gbit/s) with N at the VM limit
         — the multicast scale probe with unit goals and no cap."""
         sub, s, ds, keep = self._prune_mc(src, dsts)
         struct = milp.multicast_structure(sub, s, ds)
         cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
+        cuts = cuts + self._scale_cuts(
+            struct, keep, self._resolve_scale(robustness, tput_scale)
+        )
         fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
         if vm_caps:
             inv = {full: i for i, full in enumerate(keep)}
@@ -353,23 +434,32 @@ class Planner:
         n_samples: int = 40,
         mode: str | None = None,
         backend: str = "numpy",
+        robustness: float = 0.0,
+        tput_scale: np.ndarray | None = None,
     ) -> list[ParetoPoint]:
         """Cost-min solves across a range of throughput goals (paper §5.2).
 
         backend="jax" runs the whole integerized sweep stage-by-stage through
         the batched JAX IPM (solve_milp_batched) instead of n_samples
         sequential round-downs; results match the numpy path (per-sample
-        fallback covers KKT failures). The exact B&B mode is sequential-only.
+        fallback covers KKT failures). The exact B&B mode is sequential-only,
+        as are robust sweeps (scale cuts are per-instance extra rows the
+        shared-matrix batched pipeline does not take).
         """
         if backend not in ("numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r} (use 'numpy' or 'jax')")
         sub, s, t, keep = self._prune(src, dst)
-        hi = self.max_throughput(src, dst)
+        scale = self._resolve_scale(robustness, tput_scale)
+        cuts = None
+        if scale is not None:
+            struct = milp.structure(sub, s, t)
+            cuts = self._scale_cuts(struct, keep, scale) or None
+        hi = self.max_throughput(src, dst, tput_scale=scale)
         if hi <= 0:
             raise ValueError(f"no path from {src} to {dst}")
         goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
         out = []
-        if backend == "jax" and (mode or self.mode) == "relaxed":
+        if backend == "jax" and (mode or self.mode) == "relaxed" and not cuts:
             batch = solve_milp_batched(sub, s, t, goals)
             for g, res in zip(goals, batch):
                 if not res.ok:
@@ -378,7 +468,8 @@ class Planner:
                 out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
         else:
             for g in goals:
-                res = solve_milp(sub, s, t, float(g), mode=mode or self.mode)
+                res = solve_milp(sub, s, t, float(g), mode=mode or self.mode,
+                                 extra_ub=cuts)
                 if not res.ok:
                     continue
                 plan = self._lift(sub, keep, src, dst, float(g), volume_gb, res)

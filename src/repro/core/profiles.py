@@ -25,6 +25,7 @@ Everything is deterministic (fixed seed) so tests and benchmarks are stable.
 from __future__ import annotations
 
 import functools
+import hashlib
 
 import numpy as np
 
@@ -196,6 +197,24 @@ def default_topology() -> Topology:
         limit_conn=64,
         limit_vm=8,
     )
+
+
+def grid_fingerprint(top: Topology) -> str:
+    """SHA-256 over the topology's embedded grids, bit-for-bit.
+
+    The whole stack treats the profile grids as a deterministic fixture:
+    the same seed must produce bitwise-identical grids in every process
+    (tests compare this fingerprint across subprocesses), and the
+    calibration plane's drift model keys its true-topology snapshots off
+    the same determinism."""
+    h = hashlib.sha256()
+    for arr in (top.tput, top.price_egress, top.price_vm,
+                top.limit_ingress, top.limit_egress):
+        h.update(np.ascontiguousarray(arr, dtype=np.float64).tobytes())
+    if top.rtt_ms is not None:
+        h.update(np.ascontiguousarray(top.rtt_ms, dtype=np.float64).tobytes())
+    h.update(",".join(r.key for r in top.regions).encode())
+    return h.hexdigest()
 
 
 def toy_topology(

@@ -62,9 +62,46 @@ class Topology:
         self._index = {r.key: i for i, r in enumerate(self.regions)}
         # derived-data caches (edge lists, LP structures). Keyed per instance:
         # mutate the grids only by building a new Topology (dataclasses.replace
-        # re-runs __post_init__ and starts these fresh).
+        # re-runs __post_init__ and starts these fresh). The grids themselves
+        # are frozen COPIES — an in-place write to ``tput`` after an
+        # LPStructure was cached would silently desynchronize every cached
+        # constraint matrix, so mutation raises and ``with_tput`` is the
+        # sanctioned path. Copying first keeps the freeze from leaking into
+        # arrays the caller still owns (already-frozen inputs, e.g. from
+        # dataclasses.replace, are shared as-is).
+        for name in ("tput", "price_egress", "price_vm",
+                     "limit_ingress", "limit_egress", "rtt_ms"):
+            arr = getattr(self, name)
+            if arr is not None and arr.flags.writeable:
+                arr = arr.copy()
+                arr.setflags(write=False)
+                setattr(self, name, arr)
         self._edge_cache: dict = {}
         self._lp_struct_cache: dict = {}
+
+    def with_tput(
+        self,
+        tput: np.ndarray | None = None,
+        *,
+        scale: np.ndarray | float | None = None,
+    ) -> "Topology":
+        """Copy-on-write grid swap: a NEW Topology with ``tput`` (or the
+        current grid times ``scale``) and fresh derived-data caches.
+
+        This is the only sanctioned way to change a topology's throughput
+        grid — the arrays are frozen in ``__post_init__`` because planner
+        caches (edge lists, LP structures) key off topology *identity* and
+        an in-place write would poison them. The calibration plane uses
+        this for both sides of its split view: the drift model's
+        time-indexed true grids and the belief's estimated grid."""
+        if (tput is None) == (scale is None):
+            raise ValueError("pass exactly one of tput= or scale=")
+        if tput is None:
+            new = self.tput * scale
+        else:
+            new = np.array(tput, dtype=float, copy=True)
+        new.setflags(write=False)  # already a private copy: freeze directly
+        return dataclasses.replace(self, tput=new)
 
     # ------------------------------------------------------------------ utils
     @property

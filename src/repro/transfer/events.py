@@ -99,6 +99,15 @@ class JobSimResult:
     per_edge_gb: dict
     # multicast only: destination region -> chunks delivered there
     per_dst_delivered: dict | None = None
+    # passive-telemetry support (vectorized sim only): "a->b" -> seconds the
+    # job had at least one active connection on that edge, and the GB moved
+    # within that window. Both stop where a drain begins (the observation
+    # window is the horizon interval; the straggler tail would dilute the
+    # rate). Observed-GB over active-seconds is the link rate the
+    # calibration plane feeds back into its belief — bytes/duration would
+    # under-read links that idled while the job waited on other hops.
+    per_edge_active_s: dict | None = None
+    per_edge_obs_gb: dict | None = None
 
     @property
     def done(self) -> bool:
@@ -174,13 +183,23 @@ def materialize_jobs(
     seed: int = 0,
     straggler_prob: float = 0.05,
     straggler_speed: tuple[float, float] = (0.15, 0.5),
+    exec_top=None,
 ) -> MultiSetup:
     """Materialize VMs, connections and chunk streams for every job.
 
     Per-job state is drawn from an independent RNG stream seeded by
     (seed, job index) in the same draw order as the single-job simulator:
     one multiplier per connection in connection order, then the chunk->path
-    assignment."""
+    assignment.
+
+    ``exec_top`` executes the jobs against a different throughput grid
+    than the one they were planned on (same regions; built with
+    ``Topology.with_tput``): connection rates and shared link capacities
+    come from ``exec_top``, while each plan's F/N/M allocations stand.
+    This is the calibration plane's split view — plans are made on the
+    BELIEVED grid, the data plane delivers the TRUE one, and the gap is
+    what passive telemetry observes. RNG draws are identical either way,
+    so a believed-vs-true pair of runs differs only in rates."""
     if not jobs:
         raise ValueError("no jobs")
     top0 = jobs[0].plan.top
@@ -195,6 +214,13 @@ def materialize_jobs(
                 "all jobs must share one topology (shared link caps and "
                 "egress prices come from the first job's grid)"
             )
+    if exec_top is not None:
+        if exec_top.num_regions != top0.num_regions:
+            raise ValueError(
+                "exec_top must cover the same regions as the job plans"
+            )
+        if exec_top.limit_conn != top0.limit_conn:
+            raise ValueError("exec_top must keep the planned limit_conn")
 
     arrivals = np.array([float(j.arrival_s) for j in jobs])
     n_chunks = np.zeros(len(jobs), dtype=np.int64)
@@ -242,6 +268,9 @@ def materialize_jobs(
     for j, job in enumerate(jobs):
         plan = job.plan
         top = plan.top
+        # connection rates come from the EXECUTION grid (true topology when
+        # the calibration plane splits the view); allocations from the plan
+        gtop = exec_top if exec_top is not None else top
         rng = np.random.default_rng([seed, j])
         multicast = isinstance(plan, MulticastPlan)
 
@@ -308,7 +337,7 @@ def materialize_jobs(
                         raise ValueError(
                             f"job {j} has flow on edge {a}->{b} but no VMs"
                         )
-                    add_conns(j, top, rng, stage_of[(pid, hop)], a, b,
+                    add_conns(j, gtop, rng, stage_of[(pid, hop)], a, b,
                               n_conn, vms_a, vms_b)
 
             flows = np.array([f for _, f in paths])
@@ -377,7 +406,7 @@ def materialize_jobs(
                     raise ValueError(
                         f"job {j} has flow on edge {a}->{b} but no VMs"
                     )
-                add_conns(j, top, rng, stage_of_edge[tid][e], a, b,
+                add_conns(j, gtop, rng, stage_of_edge[tid][e], a, b,
                           n_conn, vms_a, vms_b)
 
         rates = np.array([t.rate for t in trees])
@@ -389,7 +418,7 @@ def materialize_jobs(
     edges_used = sorted(set(conn_edge_pairs))
     edge_index = {e: i for i, e in enumerate(edges_used)}
     return MultiSetup(
-        top=top0,
+        top=exec_top if exec_top is not None else top0,
         arrivals=arrivals,
         n_chunks=n_chunks,
         chunk_gbit=chunk_gbit,

@@ -235,39 +235,53 @@ class TransferService:
         return req
 
     # ------------------------------------------------------------------ run
+    def _plan_scale(self) -> np.ndarray | None:
+        """Full-grid [V,V] throughput scale every solve should plan under,
+        or None. The base service trusts its grid; the calibration plane
+        overrides this with the belief's lower-confidence-bound scale so
+        every admission and re-plan is uncertainty-aware — the scale rides
+        the cached LP structures as extra rows (zero re-assembly)."""
+        return None
+
     def _plan_for(self, req: TransferRequest, goal: float, volume_gb: float,
                   *, vm_caps=None, constrained: bool) -> TransferPlan:
         """One admission/re-plan solve for either job flavor. A multicast
         re-plan only carries goals for the destinations still missing
         chunks, so faulted branches are re-planned and finished ones
         dropped — on the SAME cached structure (goals are pure RHS)."""
+        scale = self._plan_scale()
         if req.multicast:
             goals = goal if np.ndim(goal) else float(goal)
             return self.planner.plan_multicast_cost_min(
                 req.src, req.dsts, goals, volume_gb,
                 degraded_links=self.degraded_links if constrained else None,
                 vm_caps=vm_caps if constrained else None,
+                tput_scale=scale,
             )
         return self.planner.plan_cost_min(
             req.src, req.dst, float(goal), volume_gb,
             backend="numpy" if constrained else self.backend,
             degraded_links=self.degraded_links if constrained else None,
             vm_caps=vm_caps if constrained else None,
+            tput_scale=scale,
         )
 
     def _capacity(self, req: TransferRequest, *, vm_caps=None) -> float:
+        scale = self._plan_scale()
         if req.multicast:
             return self.planner.max_multicast_throughput(
                 req.src, req.dsts,
                 degraded_links=self.degraded_links, vm_caps=vm_caps,
+                tput_scale=scale,
             )
         return self.planner.max_throughput(
             req.src, req.dst,
             degraded_links=self.degraded_links, vm_caps=vm_caps,
+            tput_scale=scale,
         )
 
     def _admit(self, req: TransferRequest) -> _JobState:
-        if self.degraded_links:
+        if self.degraded_links or self._plan_scale() is not None:
             # the service already carries degraded links from earlier runs:
             # new tenants must be planned (and their predictions priced)
             # against that view, or they are flagged contended forever and
@@ -347,6 +361,60 @@ class TransferService:
             for (a, b), phi in self.degraded_links.items()
         ]
 
+    def _fold_segment(self, active: list[_JobState], res, now: float) -> None:
+        """Fold one simulated segment's per-job results into job state
+        (delivered/remaining chunks, realized cost, retries, status)."""
+        for st, jr in zip(active, res.jobs):
+            st.delivered_chunks += jr.chunks_delivered
+            st.remaining_chunks -= jr.chunks_delivered
+            st.realized_cost += jr.total_cost
+            st.retried_chunks += jr.retried_chunks
+            if jr.per_dst_delivered:
+                for d, cnt in jr.per_dst_delivered.items():
+                    st.delivered_by_dst[d] = min(
+                        st.n_chunks,
+                        st.delivered_by_dst.get(d, 0) + cnt,
+                    )
+            if jr.status == "done":
+                st.status = "done"
+                st.finished_at = (
+                    now + max(st.req.arrival_s - now, 0.0) + jr.time_s
+                )
+            elif jr.status == "stalled":
+                st.status = "stalled"
+            elif jr.status == "running":
+                st.status = "running"
+
+    def _job_reports(self, states: list[_JobState], now: float) -> list[JobReport]:
+        """Final per-job reports from terminal (or horizon-cut) job state."""
+        reports = []
+        for st in states:
+            delivered_gb = st.delivered_chunks * st.chunk_gbit / GBIT_PER_GB
+            end = st.finished_at if st.finished_at is not None else now
+            dur = max(end - st.req.arrival_s, 1e-9)
+            realized_tput = st.delivered_chunks * st.chunk_gbit / dur
+            status = st.status
+            if status == "planned":  # never simulated (no active segment)
+                status = "queued"
+            reports.append(JobReport(
+                request=st.req,
+                plan=st.plan,
+                status=status,
+                planned_tput_gbps=st.planned_tput0,
+                planned_cost=st.planned_cost0,
+                realized_tput_gbps=realized_tput,
+                realized_cost=st.realized_cost,
+                delivered_gb=delivered_gb,
+                retried_chunks=st.retried_chunks,
+                contended=(
+                    status == "done"
+                    and realized_tput
+                    < self.contention_ratio * st.planned_tput0
+                ),
+                replans=st.replans,
+            ))
+        return reports
+
     def run(
         self,
         faults=(),
@@ -399,26 +467,7 @@ class TransferService:
                     **sim_kwargs,
                 )
                 sim_events += res.events
-                for st, jr in zip(active, res.jobs):
-                    st.delivered_chunks += jr.chunks_delivered
-                    st.remaining_chunks -= jr.chunks_delivered
-                    st.realized_cost += jr.total_cost
-                    st.retried_chunks += jr.retried_chunks
-                    if jr.per_dst_delivered:
-                        for d, cnt in jr.per_dst_delivered.items():
-                            st.delivered_by_dst[d] = min(
-                                st.n_chunks,
-                                st.delivered_by_dst.get(d, 0) + cnt,
-                            )
-                    if jr.status == "done":
-                        st.status = "done"
-                        st.finished_at = (
-                            now + max(st.req.arrival_s - now, 0.0) + jr.time_s
-                        )
-                    elif jr.status == "stalled":
-                        st.status = "stalled"
-                    elif jr.status == "running":
-                        st.status = "running"
+                self._fold_segment(active, res, now)
                 seg_end = now + res.time_s
             else:
                 seg_end = now
@@ -468,33 +517,8 @@ class TransferService:
                 if st.status in ("planned", "running") and st.remaining_chunks:
                     self._replan(st, i, at_s=boundary)
 
-        reports = []
-        for st in states:
-            delivered_gb = st.delivered_chunks * st.chunk_gbit / GBIT_PER_GB
-            end = st.finished_at if st.finished_at is not None else now
-            dur = max(end - st.req.arrival_s, 1e-9)
-            realized_tput = st.delivered_chunks * st.chunk_gbit / dur
-            status = st.status
-            if status == "planned":  # never simulated (no active segment)
-                status = "queued"
-            reports.append(JobReport(
-                request=st.req,
-                plan=st.plan,
-                status=status,
-                planned_tput_gbps=st.planned_tput0,
-                planned_cost=st.planned_cost0,
-                realized_tput_gbps=realized_tput,
-                realized_cost=st.realized_cost,
-                delivered_gb=delivered_gb,
-                retried_chunks=st.retried_chunks,
-                contended=(
-                    status == "done"
-                    and realized_tput
-                    < self.contention_ratio * st.planned_tput0
-                ),
-                replans=st.replans,
-            ))
         self._queue = []
         return ServiceReport(
-            jobs=reports, time_s=now, segments=segments, sim_events=sim_events
+            jobs=self._job_reports(states, now), time_s=now,
+            segments=segments, sim_events=sim_events,
         )

@@ -468,6 +468,8 @@ def simulate_multi(
     relay_buffer_chunks: int = 64,
     seed: int = 0,
     horizon_s: float | None = None,
+    exec_top=None,
+    drain: bool = False,
 ):
     """Vectorized multi-job simulator with scripted faults (ISSUE 2/3).
 
@@ -494,6 +496,18 @@ def simulate_multi(
       * ``horizon_s`` cuts the run (jobs report status "running"). All
         time comparisons share one tolerance (``events.T_EPS``) so a
         boundary event cannot be classified inconsistently.
+        ``drain=True`` makes the cut graceful: past the horizon no new
+        chunk is picked up and no further scripted event applies, but
+        chunks already on the wire run to completion (``time_s`` may
+        exceed the horizon). Periodic re-segmentation (the calibration
+        plane's probe cadence) NEEDS this — a hard cut discards every
+        in-flight chunk, so a link whose per-chunk ETA exceeds the
+        segment length would never complete anything across restarts;
+      * ``exec_top`` executes against a different throughput grid than the
+        jobs were planned on (the calibration plane's believed/true split
+        — see ``events.materialize_jobs``); per-job results then carry
+        ``per_edge_active_s`` so observed link rates (GB over busy
+        seconds) can feed the belief as passive telemetry.
 
     Dispatch is the dynamic (paper §6) mode; speculation is off so retry
     accounting stays exact. Returns ``events.MultiSimResult``; the oracle
@@ -505,7 +519,7 @@ def simulate_multi(
 
     su = materialize_jobs(
         jobs, seed=seed, straggler_prob=straggler_prob,
-        straggler_speed=straggler_speed,
+        straggler_speed=straggler_speed, exec_top=exec_top,
     )
     top = su.top
     J = len(jobs)
@@ -535,6 +549,13 @@ def simulate_multi(
     retried = np.zeros(J, dtype=np.int64)
     finish: list[float | None] = [None] * J
     job_edge_gbit = np.zeros(J * ne)
+    # telemetry observation window: bytes and busy-seconds accumulated only
+    # BEFORE the drain starts. The drain tail (a handful of straggler
+    # connections finishing their last chunk) would otherwise dilute
+    # bytes-over-busy-time far below the rate the link actually sustained,
+    # and the calibration plane would read healthy links as drifted.
+    job_edge_obs_gbit = np.zeros(J * ne)
+    job_edge_busy = np.zeros(J * ne)  # obs-window seconds with active conns
 
     sched = sorted_schedule(jobs, faults)
     ptr = 0
@@ -609,12 +630,17 @@ def simulate_multi(
         int((su.n_chunks * 6).sum()) * su.max_hops + 10000 + 8 * len(sched)
     )
     events = 0
+    draining = False
     for _ in range(max_events):
-        apply_due()
+        if not draining:
+            apply_due()
         if horizon_s is not None and now >= horizon_s - T_EPS:
-            break
-        # cascade refills (buffer drains unlock upstream)
-        while True:
+            if not drain:
+                break
+            draining = True
+        # cascade refills (buffer drains unlock upstream); a draining run
+        # picks up nothing new
+        while not draining:
             progressed = False
             idle = (chunk_arr < 0) & conn_alive & arrived[su.conn_job]
             if not idle.any():
@@ -628,7 +654,9 @@ def simulate_multi(
             if not progressed:
                 break
         active_ix = np.flatnonzero(chunk_arr >= 0)
-        t_next = sched[ptr][0] if ptr < len(sched) else None
+        t_next = (
+            sched[ptr][0] if ptr < len(sched) and not draining else None
+        )
         if active_ix.size == 0:
             if t_next is not None and (
                 horizon_s is None or t_next < horizon_s - T_EPS
@@ -652,16 +680,23 @@ def simulate_multi(
         if t_next is not None and now + dt > t_next:
             dt = t_next - now
         horizon_hit = False
+        obs_live = not draining  # telemetry window ends where the drain starts
         if horizon_s is not None and now + dt >= horizon_s - T_EPS:
-            dt = horizon_s - now
-            horizon_hit = True
+            if drain:
+                draining = True  # past the boundary: in-flight only
+            else:
+                dt = horizon_s - now
+                horizon_hit = True
         now += dt
         moved = rates * dt
         remaining[active_ix] -= moved
-        job_edge_gbit += np.bincount(
-            su.conn_job[active_ix] * ne + su.conn_edge[active_ix],
-            weights=moved, minlength=J * ne,
-        )
+        je = su.conn_job[active_ix] * ne + su.conn_edge[active_ix]
+        job_edge_gbit += np.bincount(je, weights=moved, minlength=J * ne)
+        if obs_live:
+            job_edge_obs_gbit += np.bincount(
+                je, weights=moved, minlength=J * ne
+            )
+            job_edge_busy[np.unique(je)] += dt
         completed = active_ix[remaining[active_ix] <= 1e-9]
         for ci in completed:
             ch = int(chunk_arr[ci])
@@ -697,9 +732,19 @@ def simulate_multi(
         end = finish[j] if finish[j] is not None else now
         dur = max(end - float(su.arrivals[j]), 1e-9)
         eg = job_edge_gbit[j * ne : (j + 1) * ne]
+        ego = job_edge_obs_gbit[j * ne : (j + 1) * ne]
+        busy = job_edge_busy[j * ne : (j + 1) * ne]
         per_edge_gb = {
             f"{a}->{b}": eg[i] / GBIT_PER_GB
             for i, (a, b) in enumerate(su.edges_used) if eg[i] > 0
+        }
+        per_edge_obs_gb = {
+            f"{a}->{b}": ego[i] / GBIT_PER_GB
+            for i, (a, b) in enumerate(su.edges_used) if busy[i] > 0
+        }
+        per_edge_active_s = {
+            f"{a}->{b}": float(busy[i])
+            for i, (a, b) in enumerate(su.edges_used) if busy[i] > 0
         }
         eg_cost = sum(
             eg[i] / GBIT_PER_GB * top.price_egress[a, b]
@@ -734,5 +779,7 @@ def simulate_multi(
             status=status,
             per_edge_gb=per_edge_gb,
             per_dst_delivered=per_dst,
+            per_edge_active_s=per_edge_active_s,
+            per_edge_obs_gb=per_edge_obs_gb,
         ))
     return MultiSimResult(jobs=out, time_s=now, events=events)

@@ -432,6 +432,8 @@ def simulate_multi_reference(
     relay_buffer_chunks: int = 64,
     seed: int = 0,
     horizon_s: float | None = None,
+    exec_top=None,
+    drain: bool = False,
 ):
     """Object-per-connection oracle for ``flowsim.simulate_multi``.
 
@@ -440,14 +442,15 @@ def simulate_multi_reference(
     loop on per-connection objects with dict/list bookkeeping — including
     multicast jobs (tree fan-out, per-destination delivery slots). The
     vectorized loop must reproduce its per-job delivered-chunk counts
-    exactly."""
+    exactly (``exec_top`` included: the believed/true grid split changes
+    rates, not materialization order)."""
     from .events import T_EPS, JobSimResult, LinkDegrade, MultiSimResult
     from .events import VMFailure, materialize_jobs, sorted_schedule
     from repro.core.plan import MulticastPlan
 
     su = materialize_jobs(
         jobs, seed=seed, straggler_prob=straggler_prob,
-        straggler_speed=straggler_speed,
+        straggler_speed=straggler_speed, exec_top=exec_top,
     )
     top = su.top
     J = len(jobs)
@@ -546,18 +549,24 @@ def simulate_multi_reference(
         int((su.n_chunks * 6).sum()) * su.max_hops + 10000 + 8 * len(sched)
     )
     events = 0
+    draining = False
     for _ in range(max_events):
-        apply_due()
+        if not draining:
+            apply_due()
         if horizon_s is not None and now >= horizon_s - T_EPS:
-            break
-        progressed = True
-        while progressed:  # cascade refills
+            if not drain:
+                break
+            draining = True
+        progressed = not draining
+        while progressed:  # cascade refills (none while draining)
             progressed = False
             for ci in range(nc):
                 if conns[ci].chunk < 0 and refill(ci):
                     progressed = True
         active = [ci for ci in range(nc) if conns[ci].chunk >= 0]
-        t_next = sched[ptr][0] if ptr < len(sched) else None
+        t_next = (
+            sched[ptr][0] if ptr < len(sched) and not draining else None
+        )
         if not active:
             if t_next is not None and (
                 horizon_s is None or t_next < horizon_s - T_EPS
@@ -579,8 +588,11 @@ def simulate_multi_reference(
             dt = t_next - now
         horizon_hit = False
         if horizon_s is not None and now + dt >= horizon_s - T_EPS:
-            dt = horizon_s - now
-            horizon_hit = True
+            if drain:
+                draining = True  # past the boundary: in-flight only
+            else:
+                dt = horizon_s - now
+                horizon_hit = True
         now += dt
         for ci in active:
             c = conns[ci]

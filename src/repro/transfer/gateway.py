@@ -190,6 +190,20 @@ class GatewayReport:
     faults_injected: int = 0
     objects_skipped: int = 0  # already present + verified at the destination
     chunks_missing: int = 0  # gave up after max_attempts (0 == zero loss)
+    # passive telemetry for the calibration plane: per region-pair edge,
+    # bytes that crossed the hop and the wall-clock window they crossed in
+    per_edge_bytes: dict | None = None  # (a, b) -> bytes
+    per_edge_seconds: dict | None = None  # (a, b) -> active seconds
+
+    def link_gbps(self) -> dict:
+        """Observed per-edge delivered rate (Gbit/s) — the gateway-side
+        feed for ``calibrate.BeliefGrid`` passive updates."""
+        out = {}
+        for e, nbytes in (self.per_edge_bytes or {}).items():
+            secs = (self.per_edge_seconds or {}).get(e, 0.0)
+            if secs > 1e-9:
+                out[e] = nbytes * 8.0 / 1e9 / secs
+        return out
 
 
 def _same_object(src_store: ObjectStore, dst_store: ObjectStore, key: str,
@@ -295,6 +309,13 @@ def transfer_objects(
     live = {(pid, h): workers_per_hop
             for pid, (path, _) in enumerate(paths)
             for h in range(len(path) - 1)}
+    # per region-pair telemetry: bytes across the hop + first/last activity
+    edge_of_hop = {(pid, h): (path[h], path[h + 1])
+                   for pid, (path, _) in enumerate(paths)
+                   for h in range(len(path) - 1)}
+    edge_bytes: dict[tuple[int, int], int] = {}
+    edge_t0: dict[tuple[int, int], float] = {}
+    edge_t1: dict[tuple[int, int], float] = {}
 
     def _put(q: queue.Queue, item) -> None:
         while not done_event.is_set():
@@ -323,6 +344,12 @@ def transfer_objects(
                     item = q_in.get(timeout=0.05)
                 except queue.Empty:
                     continue
+                # the telemetry window opens when the FIRST transfer on the
+                # edge begins — stamping at first completion would shave one
+                # chunk's time off the window and overstate the link rate
+                with lock:
+                    edge_t0.setdefault(edge_of_hop[(pid, h)],
+                                       time.monotonic())
                 if first:
                     ch, attempt = item
                     data = src_store.get_range(ch.object_key, ch.offset,
@@ -340,6 +367,9 @@ def transfer_objects(
                         return  # the worker thread dies with its chunk
                 with lock:
                     bytes_moved[0] += len(data)
+                    e = edge_of_hop[(pid, h)]
+                    edge_bytes[e] = edge_bytes.get(e, 0) + len(data)
+                    edge_t1[e] = time.monotonic()
                 _put(q_out, (ch, data, attempt))
 
         for h in range(hops):
@@ -464,6 +494,10 @@ def transfer_objects(
         else fault_injector.faults_injected,
         objects_skipped=skipped,
         chunks_missing=missing,
+        per_edge_bytes=dict(edge_bytes),
+        per_edge_seconds={
+            e: max(edge_t1[e] - edge_t0[e], 1e-9) for e in edge_bytes
+        },
     )
 
 

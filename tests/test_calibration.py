@@ -1,0 +1,375 @@
+"""Calibration plane (ISSUE 4): drift model, belief grid, probe budget,
+uncertainty-aware planning on cached structures, closed-loop service."""
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (
+    BeliefGrid,
+    CalibratedTransferService,
+    Calibrator,
+    DriftModel,
+    Incident,
+    ProbeBudget,
+)
+from repro.core import Planner, default_topology, milp, toy_topology
+from repro.transfer import TransferRequest
+
+SRC, DST = "aws:us-west-2", "aws:eu-central-1"
+
+
+@pytest.fixture(scope="module")
+def top():
+    return default_topology()
+
+
+# ------------------------------------------------------------------ drift
+def test_drift_model_deterministic_and_pure_in_time(top):
+    a = DriftModel(top, seed=7, n_incidents=3)
+    b = DriftModel(top, seed=7, n_incidents=3)
+    for t in (0.0, 13.25, 1e4, 123456.789):
+        assert np.array_equal(a.tput_at(t), b.tput_at(t))
+    # pure function of t: query order must not matter
+    t1 = a.tput_at(50.0)
+    a.tput_at(999.0)
+    assert np.array_equal(a.tput_at(50.0), t1)
+    # different seeds differ
+    c = DriftModel(top, seed=8, n_incidents=3)
+    assert not np.array_equal(a.tput_at(50.0), c.tput_at(50.0))
+
+
+def test_drift_respects_link_mask_and_clip(top):
+    d = DriftModel(top, seed=1, drift_sigma=0.4)
+    g = d.tput_at(777.0)
+    base = np.asarray(top.tput)
+    assert (g[base == 0] == 0).all()
+    live = base > 0
+    ratio = g[live] / base[live]
+    assert (ratio >= 0.02 - 1e-12).all() and (ratio <= 2.0 + 1e-12).all()
+
+
+def test_incident_window_applies_exactly(top):
+    s, d = top.index(SRC), top.index(DST)
+    inc = Incident(src=s, dst=d, t_start_s=10.0, duration_s=5.0, severity=0.1)
+    dm = DriftModel(top, seed=0, drift_sigma=0.0, diurnal_amp=0.0,
+                    incidents=[inc])
+    before, during = dm.tput_at(9.99), dm.tput_at(12.0)
+    after = dm.tput_at(15.0)  # end is exclusive
+    assert during[s, d] == pytest.approx(0.1 * before[s, d])
+    assert after[s, d] == pytest.approx(before[s, d])
+    # only the one link is touched
+    mask = np.ones_like(before, dtype=bool)
+    mask[s, d] = False
+    assert np.array_equal(before[mask], during[mask])
+
+
+def test_drift_topology_at_is_copy_on_write(top):
+    dm = DriftModel(top, seed=0)
+    t5 = dm.topology_at(5.0)
+    assert t5 is not top
+    assert np.array_equal(t5.price_egress, top.price_egress)
+    assert t5._lp_struct_cache == {}  # fresh caches on the new instance
+
+
+# ----------------------------------------------------------------- belief
+def test_belief_updates_tighten_and_move_mean(top):
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    g0 = bel.mean[s, d]
+    se0 = bel.stderr()[s, d]
+    for _ in range(6):
+        bel.observe(s, d, 0.9 * g0, weight=1.0)
+    assert bel.mean[s, d] < g0
+    assert bel.stderr()[s, d] < se0
+    assert bel.lower_bound(1.5)[s, d] <= bel.mean[s, d]
+
+
+def test_belief_change_point_reset(top):
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    g0 = bel.mean[s, d]
+    # a collapsed measurement far outside the band resets, not averages
+    was_reset = bel.observe_adaptive(s, d, 0.05 * g0, weight=1.0)
+    assert was_reset
+    assert bel.mean[s, d] == pytest.approx(0.05 * g0)
+    # an in-band follow-up folds in normally
+    was_reset = bel.observe_adaptive(s, d, 0.052 * g0, weight=1.0)
+    assert not was_reset
+
+
+def test_belief_scale_grid_clips_and_rides_lcb(top):
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    phi0 = bel.scale_grid(top, z=1.5)
+    assert (phi0 <= 1.0).all() and (phi0 >= 0.02).all()
+    bel.reset_link(s, d, 0.1 * top.tput[s, d])
+    phi = bel.scale_grid(top, z=1.5)
+    assert phi[s, d] < phi0[s, d]
+    assert phi[s, d] == pytest.approx(
+        max(bel.lower_bound(1.5)[s, d] / top.tput[s, d], 0.02)
+    )
+
+
+# ------------------------------------------------- robust planning (cached)
+def test_robust_plan_zero_struct_builds_and_respects_cuts(top):
+    """Acceptance: robustness rides the cached LPStructure — zero
+    re-assemblies — and the robust plan obeys both the tightened 4b row
+    and the aggregate interconnect cap of the scaled link."""
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6, belief=bel, link_capacity_scale=2.0)
+    base = pl.plan_cost_min(SRC, DST, 3.0, 4.0)  # builds + caches structures
+    assert base.solver_status == "optimal"
+    bel.reset_link(s, d, 0.1 * top.tput[s, d])
+    builds0 = milp.N_STRUCT_BUILDS
+    robust = pl.plan_cost_min(SRC, DST, 3.0, 4.0, robustness=1.5)
+    assert milp.N_STRUCT_BUILDS == builds0, "robust plan re-assembled an LP"
+    assert robust.solver_status == "optimal"
+    phi = bel.scale_grid(top, z=1.5)[s, d]
+    # tightened 4b on the scaled link
+    cap_4b = phi * top.tput[s, d] * robust.M[s, d] / top.limit_conn
+    assert robust.F[s, d] <= cap_4b + 1e-6
+    # aggregate interconnect cap: more VMs cannot buy the incident back
+    assert robust.F[s, d] <= phi * top.tput[s, d] * 2.0 + 1e-6
+    # base constraints still hold
+    assert robust.validate() == []
+
+
+def test_robustness_requires_belief(top):
+    pl = Planner(top, max_relays=6)
+    with pytest.raises(ValueError, match="belief"):
+        pl.plan_cost_min(SRC, DST, 2.0, 4.0, robustness=1.0)
+
+
+def test_robust_tput_max_under_scaled_grid(top):
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6, belief=bel, link_capacity_scale=2.0)
+    bel.reset_link(s, d, 0.2 * top.tput[s, d])
+    plan = pl.plan_tput_max(SRC, DST, 0.25, 4.0, n_samples=8, robustness=1.5)
+    assert plan.solver_status in ("optimal", "cost_ceiling_infeasible")
+    phi = bel.scale_grid(top, z=1.5)[s, d]
+    assert plan.F[s, d] <= phi * top.tput[s, d] * 2.0 + 1e-6
+
+
+def test_robust_multicast_zero_builds(top):
+    src = "gcp:us-central1"
+    dsts = ["gcp:europe-west1", "gcp:europe-west3"]
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6, belief=bel, link_capacity_scale=2.0)
+    base = pl.plan_multicast_cost_min(src, dsts, 1.0, 4.0)
+    assert base.solver_status == "optimal"
+    s = top.index(src)
+    d0 = top.index(dsts[0])
+    bel.reset_link(s, d0, 0.1 * top.tput[s, d0])
+    builds0 = milp.N_STRUCT_BUILDS
+    robust = pl.plan_multicast_cost_min(src, dsts, 1.0, 4.0, robustness=1.5)
+    assert milp.N_STRUCT_BUILDS == builds0
+    assert robust.solver_status == "optimal"
+    phi = bel.scale_grid(top, z=1.5)[s, d0]
+    assert robust.G[s, d0] <= phi * top.tput[s, d0] * 2.0 + 1e-6
+
+
+# -------------------------------------------------------------- calibrator
+def test_probe_budget_is_respected(top):
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6)
+    cal = Calibrator(bel, budget=ProbeBudget(
+        usd_per_round=0.05, seconds_per_round=30.0, max_probes_per_round=4,
+    ))
+    dm = DriftModel(top, seed=3)
+    rnd = cal.run_round(0.0, dm.tput_at(0.0), planner=pl,
+                        contexts=[(SRC, DST)])
+    assert rnd.cost_usd <= 0.05 + 1e-12
+    assert rnd.n_probes <= 4
+    assert rnd.n_probes > 0
+    for r in rnd.records:
+        assert r.cost_usd > 0 and r.duration_s <= 30.0
+
+
+def test_probe_targeting_prefers_plan_links(top):
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6)
+    plan = pl.plan_cost_min(SRC, DST, 3.0, 4.0)
+    cal = Calibrator(bel)
+    links = cal.candidate_links(pl, [(SRC, DST)])
+    scores = cal.score_links(links, plans=[plan], t_s=0.0)
+    on_plan = [i for i, (a, b) in enumerate(links) if plan.F[a, b] > 1e-9]
+    off_plan = [i for i, (a, b) in enumerate(links) if plan.F[a, b] <= 1e-9]
+    assert on_plan and off_plan
+    # uncertainty/staleness are uniform at t=0, so plan links must lead
+    assert max(scores[on_plan]) > max(scores[off_plan])
+
+
+def test_belief_error_shrinks_monotonically_over_probe_rounds(top):
+    """Acceptance: believed-vs-true grid error over the candidate links
+    shrinks monotonically across probe rounds in a pinned scenario (static
+    truth, noiseless probes)."""
+    dm = DriftModel(top, seed=11, drift_sigma=0.3, diurnal_amp=0.0)
+    true_grid = dm.tput_at(500.0)  # frozen snapshot, well off the prior
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6)
+    cal = Calibrator(bel, noise_sigma=0.0,
+                     budget=ProbeBudget(usd_per_round=2.0,
+                                        seconds_per_round=60.0,
+                                        max_probes_per_round=6))
+    errs = []
+    for k in range(8):
+        rnd = cal.run_round(float(k), true_grid, planner=pl,
+                            contexts=[(SRC, DST)])
+        errs.append(rnd.belief_error)
+    assert all(e1 <= e0 + 1e-12 for e0, e1 in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.5 * errs[0]
+
+
+# ---------------------------------------------------------- closed loop
+def test_calibrated_service_survives_step_change_incident(top):
+    """Acceptance core: a long transfer across a step-change incident.
+    The calibrated service detects the drift, re-plans the REMAINING
+    volume around the collapsed link with zero LP re-assembly, and
+    delivers >= 1.5x the stale-grid service's throughput."""
+    s, d = top.index(SRC), top.index(DST)
+    drift = DriftModel(top, seed=0, drift_sigma=0.10, diurnal_amp=0.0,
+                       incidents=[Incident(src=s, dst=d, t_start_s=6.0,
+                                           duration_s=1e9, severity=0.08)])
+    achieved = {}
+    reports = {}
+    for calibrate in (True, False):
+        svc = CalibratedTransferService(
+            drift, backend="jax", max_relays=6, calibrate=calibrate,
+            check_interval_s=4.0, max_segments=120,
+        )
+        svc.submit(TransferRequest("big", SRC, DST, 8.0, 4.0))
+        rep = svc.run()
+        j = rep.jobs[0]
+        assert j.status == "done", (calibrate, j.status)
+        achieved[calibrate] = j.delivered_gb * 8.0 / rep.time_s
+        reports[calibrate] = rep
+    cal, stale = reports[True], reports[False]
+    assert cal.drift_events, "the incident must be detected"
+    assert cal.replans, "detection must trigger re-planning"
+    for r in cal.replans:
+        assert r.structure_builds == 0, "robust re-plan re-assembled an LP"
+        assert r.plan.solver_status == "optimal"
+    assert not stale.replans and not stale.drift_events
+    assert achieved[True] >= 1.5 * achieved[False], achieved
+    # the re-planned allocation routes around the collapsed link
+    final = cal.replans[-1].plan
+    assert final.F[s, d] <= 0.25 * cal.jobs[0].request.tput_goal_gbps
+
+
+def test_calibrated_service_no_drift_no_replans(top):
+    """On a quiet topology (no incidents, tiny drift) the loop should not
+    thrash: no drift events, no re-plans, job completes near plan."""
+    drift = DriftModel(top, seed=5, drift_sigma=0.01, diurnal_amp=0.0)
+    svc = CalibratedTransferService(drift, backend="jax", max_relays=6,
+                                    check_interval_s=4.0)
+    svc.submit(TransferRequest("calm", SRC, DST, 4.0, 3.0))
+    rep = svc.run()
+    j = rep.jobs[0]
+    assert j.status == "done"
+    assert not rep.drift_events and not rep.replans
+    assert j.delivered_gb == pytest.approx(4.0, rel=0.02)
+
+
+def test_calibrated_service_runs_multicast_jobs(top):
+    """The loop is job-flavor agnostic: a one-to-many replication rides
+    the same probe/harvest/detect machinery (envelope G as the expected
+    per-link rate) and completes on the drifting true topology."""
+    drift = DriftModel(top, seed=4, drift_sigma=0.02, diurnal_amp=0.0)
+    svc = CalibratedTransferService(drift, backend="jax", max_relays=6,
+                                    check_interval_s=4.0)
+    svc.submit(TransferRequest(
+        "repl", "gcp:us-central1", "", 3.0, 1.5,
+        dsts=["gcp:europe-west1", "gcp:europe-west3"],
+    ))
+    rep = svc.run()
+    j = rep.jobs[0]
+    assert j.status == "done"
+    assert j.delivered_gb == pytest.approx(3.0, rel=0.02)
+    assert rep.probe_rounds  # the calibrator ran against the mc subgraph
+
+
+def test_calibrated_service_rejects_scripted_faults(top):
+    drift = DriftModel(top, seed=0)
+    svc = CalibratedTransferService(drift)
+    svc.submit(TransferRequest("x", SRC, DST, 1.0, 2.0))
+    from repro.transfer import LinkDegrade
+    with pytest.raises(ValueError, match="DriftModel"):
+        svc.run(faults=[LinkDegrade(t_s=1.0, src=0, dst=1, factor=0.5)])
+
+
+def test_probe_spend_accounted(top):
+    s, d = top.index(SRC), top.index(DST)
+    drift = DriftModel(top, seed=2, drift_sigma=0.05, diurnal_amp=0.0)
+    svc = CalibratedTransferService(drift, backend="jax", max_relays=6,
+                                    check_interval_s=4.0)
+    svc.submit(TransferRequest("probe-bill", SRC, DST, 4.0, 3.0))
+    rep = svc.run()
+    assert rep.probe_rounds
+    assert rep.probe_cost_usd > 0
+    assert rep.probe_cost_usd == pytest.approx(
+        sum(r.cost_usd for r in rep.probe_rounds)
+    )
+    for rnd in rep.probe_rounds:
+        assert rnd.cost_usd <= svc.calibrator.budget.usd_per_round + 1e-12
+
+
+# ------------------------------------------------------ gateway telemetry
+def test_gateway_reports_link_rates_and_belief_consumes_them():
+    """The real-bytes gateway exposes per-edge bytes/seconds; the belief
+    folds the observed rates in through the same change-point path as
+    simulator telemetry."""
+    from repro.transfer import BlobStore, transfer_objects
+
+    top = toy_topology(n=5, seed=2)
+    pl = Planner(top, max_relays=3)
+    plan = pl.plan_cost_min("toy:r0", "toy:r1", 2.0, 0.02)
+    rng = np.random.default_rng(0)
+    src_store, dst_store = BlobStore(), BlobStore()
+    src_store.put("obj", rng.bytes(1_500_000))
+    rep = transfer_objects(plan, src_store, dst_store, ["obj"],
+                           chunk_bytes=1 << 17, workers_per_hop=2)
+    assert rep.per_edge_bytes and rep.per_edge_seconds
+    assert sum(rep.per_edge_bytes.values()) == rep.bytes_moved
+    plan_edges = {(a, b) for a in range(top.num_regions)
+                  for b in range(top.num_regions) if plan.F[a, b] > 1e-9}
+    assert set(rep.per_edge_bytes) <= plan_edges
+    rates = rep.link_gbps()
+    assert rates and all(g > 0 for g in rates.values())
+    bel = BeliefGrid(top)
+    n = bel.observe_link_rates(rates, weight=1.0, t_s=1.0, one_sided=False)
+    assert n == len(rates)
+    for (a, b) in rates:
+        assert bel.last_obs_t[a, b] == 1.0
+    # the default one-sided feed drops below-mean samples: a hop throttled
+    # by an upstream bottleneck must not reset a healthy link's belief low
+    bel2 = BeliefGrid(top)
+    (a, b) = next(iter(rates))
+    low = {(a, b): 0.01 * bel2.mean[a, b]}
+    assert bel2.observe_link_rates(low, t_s=2.0) == 0
+    assert bel2.mean[a, b] == BeliefGrid(top).mean[a, b]
+
+
+# --------------------------------------------------------- drain semantics
+def test_drain_mode_completes_in_flight_chunks():
+    """A hard horizon cut discards in-flight chunks; drain finishes them.
+    On a slow link whose per-chunk ETA exceeds the horizon, only the
+    drained run makes progress — the mechanism that lets the calibrated
+    service segment its timeline without Zeno-stalling slow links."""
+    from repro.transfer import TransferJob
+    from repro.transfer.flowsim import simulate_multi
+
+    top = toy_topology(n=5, seed=2)
+    pl = Planner(top, max_relays=3)
+    plan = pl.plan_cost_min("toy:r0", "toy:r1", 1.0, 0.05)
+    job = TransferJob(plan=plan, name="slow", chunk_mb=16.0)
+    # execute on a 50x-degraded true grid: per-chunk ETA >> horizon
+    exec_top = top.with_tput(scale=0.02)
+    hard = simulate_multi([job], (), seed=0, horizon_s=0.5,
+                          exec_top=exec_top)
+    soft = simulate_multi([job], (), seed=0, horizon_s=0.5,
+                          exec_top=exec_top, drain=True)
+    assert hard.jobs[0].chunks_delivered == 0
+    assert soft.jobs[0].chunks_delivered > 0
+    assert soft.time_s > 0.5  # the drain runs past the horizon

@@ -1,0 +1,44 @@
+"""Fast-mode smoke over every example (ISSUE 4 satellite).
+
+Examples are executable documentation; nothing else imports them, so
+without this sweep they rot silently when an API they demonstrate moves.
+Each one must run to completion (exit 0, its own internal asserts intact)
+under ``REPRO_BENCH_FAST=1`` — the same abbreviation switch the benchmark
+suite uses — which the longer examples honor by shrinking volumes/steps.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((ROOT / "examples").glob("*.py"))
+
+
+def test_every_example_is_covered():
+    # paranoia: the glob must actually see the examples directory
+    names = {p.stem for p in EXAMPLES}
+    assert {"quickstart", "adaptive_transfer",
+            "fault_tolerant_transfer"} <= names
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.stem)
+def test_example_runs_in_fast_mode(path, tmp_path):
+    env = dict(
+        os.environ,
+        REPRO_BENCH_FAST="1",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=str(ROOT / "src"),
+    )
+    res = subprocess.run(
+        [sys.executable, str(path)],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=tmp_path,  # artifacts land in a scratch dir, not the repo
+    )
+    assert res.returncode == 0, (
+        f"{path.name} failed\n--- stdout ---\n{res.stdout[-3000:]}\n"
+        f"--- stderr ---\n{res.stderr[-3000:]}"
+    )

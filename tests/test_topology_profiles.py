@@ -1,0 +1,148 @@
+"""Topology copy-on-write (grid freeze) and profile-grid determinism.
+
+The planner caches derived data (edge lists, LP structures) keyed off
+Topology *identity*: an in-place write to a grid after a structure was
+cached would silently desynchronize every cached constraint matrix. The
+grids are therefore frozen and ``with_tput`` is the sanctioned swap path.
+The embedded profile grids are deterministic fixtures: the same seed must
+produce bitwise-identical grids in every process.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Planner,
+    default_topology,
+    grid_fingerprint,
+    milp,
+    toy_topology,
+)
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+# ------------------------------------------------------------- mutability
+def test_inplace_grid_mutation_raises():
+    top = toy_topology(n=5, seed=0)
+    for arr in (top.tput, top.price_egress, top.price_vm,
+                top.limit_ingress, top.limit_egress):
+        with pytest.raises(ValueError):
+            arr[0] = 99.0
+
+
+def test_mutation_cannot_poison_cached_lp_structures():
+    """Regression (ISSUE 4 satellite): before the freeze, ``top.tput[i,j]
+    = x`` after a solve silently left every cached LPStructure built from
+    the OLD grid. Now the write raises and the cache stays consistent."""
+    top = toy_topology(n=5, seed=1)
+    struct = milp.structure(top, 0, 1)
+    coef_before = struct.A_ub[0].copy()
+    with pytest.raises(ValueError):
+        top.tput[0, 1] *= 0.01
+    # the cached structure is untouched and still keyed on this instance
+    assert milp.structure(top, 0, 1) is struct
+    assert np.array_equal(struct.A_ub[0], coef_before)
+
+
+def test_with_tput_returns_fresh_instance_and_caches():
+    top = toy_topology(n=5, seed=2)
+    s0 = milp.structure(top, 0, 1)
+    half = top.with_tput(scale=0.5)
+    assert half is not top
+    assert np.allclose(half.tput, top.tput * 0.5)
+    assert half._lp_struct_cache == {}  # caches start clean
+    s1 = milp.structure(half, 0, 1)
+    assert s1 is not s0
+    # the new structure's 4b rows reflect the new grid
+    e = s1.n_edges
+    k = 0
+    u, w = s1.edges[k]
+    assert s1.A_ub[k, e + half.num_regions + k] == pytest.approx(
+        -half.tput[u, w] / half.limit_conn
+    )
+    # prices and caps are shared values (unchanged by the tput swap)
+    assert np.array_equal(half.price_egress, top.price_egress)
+
+
+def test_with_tput_argument_validation():
+    top = toy_topology(n=4, seed=3)
+    with pytest.raises(ValueError):
+        top.with_tput()
+    with pytest.raises(ValueError):
+        top.with_tput(top.tput, scale=0.5)
+
+
+def test_planner_on_with_tput_topology_sees_new_grid():
+    top = toy_topology(n=6, seed=4)
+    pl0 = Planner(top, max_relays=3)
+    cap0 = pl0.max_throughput("toy:r0", "toy:r1")
+    pl1 = Planner(top.with_tput(scale=0.5), max_relays=3)
+    cap1 = pl1.max_throughput("toy:r0", "toy:r1")
+    assert 0 < cap1 < cap0
+
+
+# ----------------------------------------------------------- determinism
+_FINGERPRINT_SNIPPET = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.core import default_topology, grid_fingerprint
+from repro.core.profiles import toy_topology
+print(grid_fingerprint(default_topology()))
+print(grid_fingerprint(toy_topology(n=7, seed=123)))
+"""
+
+
+def _subprocess_fingerprints() -> list[str]:
+    out = subprocess.run(
+        [sys.executable, "-c", _FINGERPRINT_SNIPPET.format(src=str(SRC))],
+        capture_output=True, text=True, timeout=300, check=True,
+    )
+    return out.stdout.split()
+
+
+def test_profile_grids_bitwise_identical_across_processes():
+    """Satellite: same seed => bitwise-identical grids in every process
+    (the embedded measurement is a fixture, not a sample)."""
+    here = [
+        grid_fingerprint(default_topology()),
+        grid_fingerprint(toy_topology(n=7, seed=123)),
+    ]
+    assert _subprocess_fingerprints() == here
+
+
+def test_toy_topology_seed_sensitivity():
+    a = grid_fingerprint(toy_topology(n=7, seed=1))
+    b = grid_fingerprint(toy_topology(n=7, seed=2))
+    assert a != b
+    assert grid_fingerprint(toy_topology(n=7, seed=1)) == a
+
+
+def test_drift_model_reproducible_across_processes():
+    """Satellite: the drift model's grid at an arbitrary query time is
+    bitwise-identical across processes (pure function of seed and t)."""
+    from repro.calibrate import DriftModel
+
+    top = default_topology()
+    local = DriftModel(top, seed=42, n_incidents=2).tput_at(321.5)
+    snippet = """
+import sys
+sys.path.insert(0, {src!r})
+import hashlib, numpy as np
+from repro.core import default_topology
+from repro.calibrate import DriftModel
+g = DriftModel(default_topology(), seed=42, n_incidents=2).tput_at(321.5)
+print(hashlib.sha256(np.ascontiguousarray(g).tobytes()).hexdigest())
+""".format(src=str(SRC))
+    out = subprocess.run(
+        [sys.executable, "-c", snippet],
+        capture_output=True, text=True, timeout=300, check=True,
+    )
+    import hashlib
+    assert out.stdout.strip() == hashlib.sha256(
+        np.ascontiguousarray(local).tobytes()
+    ).hexdigest()
