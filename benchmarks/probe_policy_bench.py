@@ -1,0 +1,261 @@
+"""Probe-policy engine (ISSUE 5): race the four probe schedulers across an
+incident-rich drift scenario, and exercise belief epoch rolls.
+
+Three parts:
+
+1. **Tracking race** — greedy VoI, round-robin, ε-greedy and Bayesian
+   EVOI each spend an identical, deliberately tight probe budget
+   (3 probes/round against ~130 candidate links from THREE concurrent
+   transfer contexts) while staggered step-change incidents collapse the
+   links the plans actually ride. Beliefs start pre-warmed (the paper's
+   offline profiling pass measured every link once), so the race
+   measures steady-state RE-probing — where policies genuinely differ.
+   The scored metric is the plan-scoped believed-vs-true error (mean
+   over rounds, over the links carrying plan flow): the error that costs
+   plan quality. EVOI re-prices every link by the plan regret its
+   uncertainty causes, so it watches the handful of links the three
+   plans depend on and catches each collapse within a round; greedy's
+   score spreads across the whole candidate pool and detects late;
+   round-robin's sweep is slowest of all.
+2. **Service race** — the same scenario end-to-end through
+   ``CalibratedTransferService``: aggregate delivered throughput per
+   policy (the loop's passive telemetry backstops every policy at
+   segment boundaries, so this leg is closer than the tracking race —
+   which is itself a result worth pinning).
+3. **Epoch rolls** — a recovery scenario (the epoch grid pins the
+   source's egress at 5% of reality — a past incident, now over). The
+   round-robin sweep discovers the recovery, the service rolls the epoch
+   onto the improved belief, and the transfer finishes faster. Rolls are
+   counted and bounded (<= 2 per transfer), only fire at segment
+   boundaries, and their deliberate LP re-assemblies are the ONLY ones
+   in the run.
+
+Acceptance (asserted here, hard-gated in CI via benchmarks.compare):
+EVOI delivers >= 1.1x greedy's believed-vs-true error reduction OR
+>= 1.05x greedy's delivered throughput (``probe_policies/evoi_gate`` >= 1).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import FAST, emit
+
+# three concurrent transfer contexts: one per provider, so the per-provider
+# drift priors and the pruned candidate subgraphs all differ
+CONTEXTS = [
+    ("aws:us-west-2", "aws:eu-central-1"),
+    ("gcp:us-central1", "gcp:europe-west1"),
+    ("azure:eastus", "azure:westeurope"),
+]
+GOAL = 4.0
+POLICIES = ("greedy", "round_robin", "epsilon_greedy", "evoi")
+
+
+def _scenario(top):
+    """Plans for the three contexts plus staggered incidents on the link
+    carrying each plan's largest flow — the scenario a static belief
+    cannot track. Returns (planner, plans, drift, plan_mask)."""
+    from repro.calibrate import DriftModel, Incident
+    from repro.core import Planner
+
+    planner = Planner(top, max_relays=6)
+    plans = [planner.plan_cost_min(s, d, GOAL, 8.0) for s, d in CONTEXTS]
+    mask = np.zeros_like(np.asarray(top.tput), dtype=bool)
+    hit = []
+    for p in plans:
+        m = p.F > 1e-9
+        mask |= m
+        links = np.argwhere(m)
+        order = np.argsort(-p.F[m])
+        hit.append(tuple(map(int, links[order[0]])))
+    incidents = [
+        Incident(src=a, dst=b, t_start_s=5.0 + 6.0 * i, duration_s=1e9,
+                 severity=0.10 + 0.05 * i)
+        for i, (a, b) in enumerate(hit)
+    ]
+    drift = DriftModel(top, seed=3, drift_sigma=0.20, diurnal_amp=0.0,
+                       incidents=incidents)
+    return planner, plans, drift, mask
+
+
+def _prewarm(top, drift, candidates):
+    """A belief after the offline profiling pass: every candidate link
+    measured once at t=0 (high weight, no noise)."""
+    from repro.calibrate import BeliefGrid
+
+    bel = BeliefGrid(top)
+    truth0 = drift.tput_at(0.0)
+    for a, b in candidates:
+        bel.observe_adaptive(a, b, float(truth0[a, b]), weight=4.0, t_s=0.0)
+    return bel
+
+
+def _budget():
+    from repro.calibrate import ProbeBudget
+
+    return ProbeBudget(usd_per_round=0.9, seconds_per_round=20.0,
+                       max_probes_per_round=3)
+
+
+def _tracking_race(top) -> float:
+    """Part 1: mean plan-scoped belief error per policy; returns the
+    greedy/EVOI error ratio (EVOI's error-reduction factor)."""
+    from repro.calibrate import Calibrator, make_policy
+
+    planner, plans, drift, mask = _scenario(top)
+    candidates = Calibrator(_prewarm(top, drift, [])).candidate_links(
+        planner, CONTEXTS
+    )
+    rounds = 10 if FAST else 16
+    tracking = {}
+    for pol in POLICIES:
+        bel = _prewarm(top, drift, candidates)
+        cal = Calibrator(bel, policy=make_policy(pol, seed=7),
+                         budget=_budget())
+        t0 = time.time()
+        errs = []
+        for k in range(rounds):
+            t = 2.0 + 2.0 * k
+            cal.run_round(t, drift.tput_at(t), planner=planner,
+                          contexts=CONTEXTS, plans=plans)
+            errs.append(bel.error_vs(drift.tput_at(t), mask=mask))
+        wall = time.time() - t0
+        tracking[pol] = float(np.mean(errs))
+        emit(f"probe_policies/{pol}_tracking_err", wall * 1e6,
+             round(tracking[pol], 4))
+        emit(f"probe_policies/{pol}_probes", wall * 1e6, cal.total_probes)
+    err_ratio = tracking["greedy"] / max(tracking["evoi"], 1e-9)
+    emit("probe_policies/evoi_vs_greedy_error_reduction", 0.0,
+         round(err_ratio, 3))
+    return err_ratio
+
+
+def _service_race(top) -> float:
+    """Part 2: aggregate delivered throughput through the closed loop per
+    policy; returns the EVOI/greedy throughput ratio."""
+    from repro.calibrate import (
+        CalibratedTransferService,
+        Calibrator,
+        make_policy,
+    )
+    from repro.core import Planner
+    from repro.transfer import TransferRequest
+
+    planner, _plans, drift, _mask = _scenario(top)
+    candidates = Calibrator(_prewarm(top, drift, [])).candidate_links(
+        Planner(top, max_relays=6), CONTEXTS
+    )
+    volume = 2.0 if FAST else 4.0
+    achieved = {}
+    arms = ("greedy", "evoi") if FAST else POLICIES
+    for pol in arms:
+        bel = _prewarm(top, drift, candidates)
+        svc = CalibratedTransferService(
+            drift, belief=bel,
+            calibrator=Calibrator(bel, policy=make_policy(pol, seed=7),
+                                  budget=_budget()),
+            backend="jax", max_relays=6, check_interval_s=4.0,
+            max_segments=150,
+        )
+        for i, (s, d) in enumerate(CONTEXTS):
+            svc.submit(TransferRequest(f"job{i}", s, d, volume, GOAL))
+        t0 = time.time()
+        rep = svc.run()
+        wall = time.time() - t0
+        assert all(j.status == "done" for j in rep.jobs), (
+            pol,
+            [j.status for j in rep.jobs],
+        )
+        for r in rep.replans:
+            assert r.structure_builds == 0, (
+                f"{pol}: drift re-plan re-assembled an LP"
+            )
+        total_gb = sum(j.delivered_gb for j in rep.jobs)
+        achieved[pol] = total_gb * 8.0 / max(rep.time_s, 1e-9)
+        emit(f"probe_policies/{pol}_achieved_gbps", wall * 1e6,
+             round(achieved[pol], 3))
+    tput_ratio = achieved["evoi"] / max(achieved["greedy"], 1e-9)
+    emit("probe_policies/evoi_vs_greedy_tput", 0.0, round(tput_ratio, 3))
+    return tput_ratio
+
+
+def _epoch_roll_scenario(top):
+    """Part 3: the epoch grid undersells the source's egress 20x; the
+    round-robin sweep discovers it and the service rolls the epoch."""
+    from repro.calibrate import (
+        BeliefGrid,
+        CalibratedTransferService,
+        DriftModel,
+    )
+    from repro.transfer import TransferRequest
+
+    src, dst = CONTEXTS[0]
+    s = top.index(src)
+
+    def degraded_belief():
+        bel = BeliefGrid(top)
+        for b in range(top.num_regions):
+            if b != s and top.tput[s, b] > 0:
+                bel.reset_link(s, b, 0.05 * top.tput[s, b])
+        return bel
+
+    drift = DriftModel(top, seed=0, drift_sigma=0.02, diurnal_amp=0.0)
+    volume = 4.0 if FAST else 8.0
+    achieved = {}
+    rolls = builds = 0
+    for max_rolls in (2, 0):
+        svc = CalibratedTransferService(
+            drift, belief=degraded_belief(), backend="jax", max_relays=6,
+            check_interval_s=4.0, policy="round_robin",
+            max_epoch_rolls=max_rolls, max_segments=150,
+        )
+        svc.submit(TransferRequest("roll", src, dst, volume, GOAL))
+        t0 = time.time()
+        rep = svc.run()
+        wall = time.time() - t0
+        job = rep.jobs[0]
+        assert job.status == "done", job.status
+        achieved[max_rolls] = job.delivered_gb * 8.0 / max(rep.time_s, 1e-9)
+        if max_rolls:
+            rolls = len(rep.epoch_rolls)
+            builds = rep.epoch_roll_builds
+            # rolls only ever fire at segment boundaries, bounded per run
+            assert 1 <= rolls <= 2, f"expected 1-2 epoch rolls, got {rolls}"
+            assert all(
+                any(abs(r.t_s - b) < 1e-9 for b in rep.boundaries)
+                for r in rep.epoch_rolls
+            ), "epoch roll fired mid-segment"
+            emit("probe_policies/epoch_roll_achieved_gbps", wall * 1e6,
+                 round(achieved[max_rolls], 3))
+        else:
+            assert not rep.epoch_rolls
+            emit("probe_policies/noroll_achieved_gbps", wall * 1e6,
+                 round(achieved[max_rolls], 3))
+    emit("probe_policies/epoch_rolls", 0.0, rolls)
+    emit("probe_policies/epoch_roll_struct_builds", 0.0, builds)
+    gain = achieved[2] / max(achieved[0], 1e-9)
+    assert gain >= 1.02, f"epoch roll did not pay: {gain:.3f}x"
+    emit("probe_policies/epoch_roll_gain_x", 0.0, round(gain, 3))
+
+
+def run():
+    from repro.core import default_topology
+
+    top = default_topology()
+    err_ratio = _tracking_race(top)
+    tput_ratio = _service_race(top)
+    # the acceptance gate: EVOI must clear either leg — >= 1.1x greedy's
+    # error reduction or >= 1.05x greedy's delivered throughput. The gate
+    # metric is capped at 5: when EVOI's tracking error approaches zero
+    # the raw ratio explodes, and a CI baseline comparison on an
+    # unbounded ratio would gate on the denominator's noise.
+    gate = min(max(err_ratio / 1.1, tput_ratio / 1.05), 5.0)
+    assert gate >= 1.0, (
+        f"EVOI under-performed greedy: err x{err_ratio:.2f} (need 1.1) "
+        f"and tput x{tput_ratio:.2f} (need 1.05)"
+    )
+    emit("probe_policies/evoi_gate", 0.0, round(gate, 3))
+    _epoch_roll_scenario(top)

@@ -30,6 +30,7 @@ from . import (  # noqa: F401
     flowsim_bench,
     multicast_bench,
     multijob_bench,
+    probe_policy_bench,
     roofline,
     solver_bench,
     table2_academic,
@@ -48,6 +49,7 @@ MODULES = {
     "multijob": multijob_bench,
     "multicast": multicast_bench,
     "calibration": calibration_bench,
+    "probe_policies": probe_policy_bench,
     "roofline": roofline,
 }
 

@@ -57,13 +57,28 @@ def run():
         emit(f"table2/{name}/cost_usd", t.us, round(res.total_cost, 2))
 
     # the paper's qualitative claims
-    assert results["skyplane_direct_1vm"].tput_gbps > results["gridftp_1vm"].tput_gbps
-    assert results["skyplane_ron_4vm"].tput_gbps > results["skyplane_direct_1vm"].tput_gbps
-    assert results["skyplane_costopt_4vm"].total_cost < results["skyplane_ron_4vm"].total_cost
+    assert (
+        results["skyplane_direct_1vm"].tput_gbps
+        > results["gridftp_1vm"].tput_gbps
+    )
+    assert (
+        results["skyplane_ron_4vm"].tput_gbps
+        > results["skyplane_direct_1vm"].tput_gbps
+    )
+    assert (
+        results["skyplane_costopt_4vm"].total_cost
+        < results["skyplane_ron_4vm"].total_cost
+    )
     # RON-comparable throughput at decisively lower cost (paper: faster AND
     # 30% cheaper; the tput margin is grid-dependent)
-    assert results["skyplane_tputopt_4vm"].tput_gbps >= results["skyplane_ron_4vm"].tput_gbps * 0.85
-    assert results["skyplane_tputopt_4vm"].total_cost < results["skyplane_ron_4vm"].total_cost * 0.95
+    assert (
+        results["skyplane_tputopt_4vm"].tput_gbps
+        >= results["skyplane_ron_4vm"].tput_gbps * 0.85
+    )
+    assert (
+        results["skyplane_tputopt_4vm"].total_cost
+        < results["skyplane_ron_4vm"].total_cost * 0.95
+    )
     emit("table2/tputopt_speedup_vs_direct1vm", 0.0,
          round(results["skyplane_tputopt_4vm"].tput_gbps
                / results["skyplane_direct_1vm"].tput_gbps, 2))

@@ -12,10 +12,14 @@ other trusts the stale offline grid and limps through the incident at a
 fraction of its SLO.
 
     PYTHONPATH=src python examples/adaptive_transfer.py
+    PYTHONPATH=src python examples/adaptive_transfer.py --policy evoi
 
-Set REPRO_BENCH_FAST=1 for the abbreviated smoke-test volume.
+``--policy`` picks the probe scheduler (greedy | round_robin |
+epsilon_greedy | evoi — see repro.calibrate.policies for what each
+optimizes). Set REPRO_BENCH_FAST=1 for the abbreviated smoke-test volume.
 """
 
+import argparse
 import os
 import sys
 from pathlib import Path
@@ -25,7 +29,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np  # noqa: E402
 
 from repro.calibrate import (  # noqa: E402
+    POLICY_NAMES,
+    BeliefGrid,
     CalibratedTransferService,
+    Calibrator,
     DriftModel,
     Incident,
 )
@@ -40,6 +47,10 @@ VOLUME_GB = 4.0 if FAST else 12.0
 
 
 def main():
+    ap = argparse.ArgumentParser(description="adaptive transfer demo")
+    ap.add_argument("--policy", default="greedy", choices=list(POLICY_NAMES),
+                    help="probe scheduling policy for the calibrated run")
+    args = ap.parse_args()
     top = default_topology()
 
     # Scenario: the TRUE topology drifts slowly everywhere, and the stale
@@ -61,16 +72,19 @@ def main():
     slo_s = VOLUME_GB * 8.0 / GOAL_GBPS
     achieved = {}
     for calibrate in (True, False):
+        belief = BeliefGrid(top)
         svc = CalibratedTransferService(
-            drift, backend="jax", max_relays=6, calibrate=calibrate,
-            check_interval_s=4.0, max_segments=150,
+            drift, belief=belief, backend="jax", max_relays=6,
+            calibrate=calibrate, check_interval_s=4.0, max_segments=150,
+            calibrator=Calibrator(belief, policy=args.policy)
+            if calibrate else None,
         )
         svc.submit(TransferRequest("weights", SRC, DST, VOLUME_GB, GOAL_GBPS))
         rep = svc.run()
         job = rep.jobs[0]
         ach = job.delivered_gb * 8.0 / max(rep.time_s, 1e-9)
         achieved[calibrate] = ach
-        tag = "calibrated" if calibrate else "stale grid"
+        tag = (f"calibrated ({args.policy})" if calibrate else "stale grid")
         print(f"=== {tag} ===")
         print(f"  {job.delivered_gb:.1f} GB in {rep.time_s:.1f}s "
               f"({ach:.2f} Gbps achieved; SLO time {slo_s:.0f}s)")

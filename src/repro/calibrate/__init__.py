@@ -3,10 +3,12 @@ and uncertainty-aware re-planning.
 
 The subsystem separates the TRUE topology (what the data plane delivers —
 ``drift.DriftModel``) from the BELIEVED topology (what the planner sees —
-``belief.BeliefGrid``), spends an explicit probe budget where planner
-value-of-information is highest (``calibrator.Calibrator``), and closes
-the measure→believe→plan→observe loop around the transfer service
-(``service.CalibratedTransferService``)."""
+``belief.BeliefGrid``), spends an explicit probe budget according to a
+pluggable scheduling policy (``policies``: greedy VoI, round-robin,
+ε-greedy, Bayesian EVOI; executed by ``calibrator.Calibrator``), and
+closes the measure→believe→plan→observe loop around the transfer service
+(``service.CalibratedTransferService`` — including epoch rolls that
+re-pin the planner's grid when the belief rises past it)."""
 
 from .belief import BeliefGrid, capacity_sample_from_rates  # noqa: F401
 from .calibrator import (  # noqa: F401
@@ -16,8 +18,19 @@ from .calibrator import (  # noqa: F401
     ProbeRound,
 )
 from .drift import DriftModel, Incident  # noqa: F401
+from .policies import (  # noqa: F401
+    POLICY_NAMES,
+    BayesianEVOIPolicy,
+    EpsilonGreedyPolicy,
+    GreedyVoIPolicy,
+    PolicyContext,
+    ProbePolicy,
+    RoundRobinPolicy,
+    make_policy,
+)
 from .service import (  # noqa: F401
     CalibratedServiceReport,
     CalibratedTransferService,
     DriftEvent,
+    EpochRoll,
 )

@@ -18,12 +18,20 @@ where a weight-w observation counts as w unit observations. The belief
 exposes the two grids the planner consumes — the mean (``believed_
 topology``) and the z-lower-confidence-bound scale vector (``scale_
 grid``) that uncertainty-aware plans ride as cuts on cached LP structures.
+
+The prior spread is per-link: by default it comes from the per-provider
+drift table (``core.profiles.prior_rel_sigma_grid`` — AWS routes hold
+steady, GCP routes jitter, inter-cloud peering drifts hardest), so an
+intra-AWS link starts with a tighter confidence band than a GCP→Azure
+link at the same grid value. Pass a scalar to restore one global knob,
+or a [V, V] array for full control.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.profiles import prior_rel_sigma_grid
 from repro.core.topology import Topology
 
 _EPS = 1e-12
@@ -35,7 +43,7 @@ class BeliefGrid:
         base: Topology,
         *,
         prior_count: float = 4.0,
-        prior_rel_sigma: float = 0.25,
+        prior_rel_sigma: float | np.ndarray | None = None,
         min_tput: float = 1e-3,
     ):
         self.base = base
@@ -43,10 +51,24 @@ class BeliefGrid:
         self.mean = np.array(base.tput, dtype=float, copy=True)
         mask = self.mean > 0
         self.count = np.where(mask, float(prior_count), 0.0)
+        # per-link prior spread: provider-pair table by default, scalar or
+        # explicit [V, V] override accepted
+        if prior_rel_sigma is None:
+            sig = prior_rel_sigma_grid(base)
+        else:
+            sig = np.asarray(prior_rel_sigma, dtype=float)
+            if sig.ndim == 0:
+                sig = np.full((v, v), float(sig))
+            elif sig.shape != (v, v):
+                raise ValueError(
+                    f"prior_rel_sigma must be scalar or ({v}, {v}), "
+                    f"got shape {sig.shape}"
+                )
+        self.prior_rel_sigma = sig
         # m2 = sum of weighted squared deviations: prior variance encodes
         # "the stale grid is probably within ~prior_rel_sigma of reality"
         self.m2 = np.where(
-            mask, (prior_rel_sigma * self.mean) ** 2 * prior_count, 0.0
+            mask, (sig * self.mean) ** 2 * prior_count, 0.0
         )
         self.min_tput = float(min_tput)
         self.observations = 0
@@ -82,20 +104,26 @@ class BeliefGrid:
         dst: int,
         gbps: float,
         count: float = 4.0,
-        rel_sigma: float = 0.25,
+        rel_sigma: float | None = None,
         t_s: float | None = None,
     ):
         """Regime change on one link: discard its history and re-seed the
         belief at ``gbps``. A step-change incident draws from a NEW
         distribution — Welford-averaging it against the old regime would
         let the stale prior drag the mean for many rounds while the plan
-        keeps trusting a collapsed link."""
+        keeps trusting a collapsed link. The re-seeded spread defaults to
+        the link's per-provider drift prior."""
         if src == dst:
             raise ValueError("no self-links")
         g = max(float(gbps), self.min_tput)
+        rs = (
+            float(self.prior_rel_sigma[src, dst])
+            if rel_sigma is None
+            else float(rel_sigma)
+        )
         self.mean[src, dst] = g
         self.count[src, dst] = float(count)
-        self.m2[src, dst] = (rel_sigma * g) ** 2 * float(count)
+        self.m2[src, dst] = (rs * g) ** 2 * float(count)
         if t_s is not None:
             self.last_obs_t[src, dst] = float(t_s)
         self.observations += 1

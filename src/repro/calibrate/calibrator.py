@@ -24,6 +24,11 @@ time) with optional seeded measurement noise, and fold into the belief at
 ``probe_weight`` — several equivalent unit observations, since an active
 probe saturates the link rather than inferring from allocation-shaped
 telemetry.
+
+WHICH candidates bid for the budget first is a pluggable
+:mod:`~repro.calibrate.policies` decision (greedy VoI, round-robin,
+ε-greedy, Bayesian EVOI); the Calibrator owns budget enforcement and
+measurement execution, identical across policies.
 """
 
 from __future__ import annotations
@@ -35,15 +40,15 @@ import numpy as np
 from repro.core.topology import GBIT_PER_GB
 
 from .belief import BeliefGrid
+from .policies import (
+    GreedyVoIPolicy,
+    PolicyContext,
+    ProbeBudget,
+    ProbePolicy,
+    make_policy,
+)
 
-
-@dataclasses.dataclass(frozen=True)
-class ProbeBudget:
-    """Per-round spending caps: dollars, wall-clock, and probe count."""
-
-    usd_per_round: float = 2.0
-    seconds_per_round: float = 30.0
-    max_probes_per_round: int = 8
+__all__ = ["Calibrator", "ProbeBudget", "ProbeRecord", "ProbeRound"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +68,7 @@ class ProbeRound:
     cost_usd: float
     duration_s: float  # probes run concurrently: the slowest one
     belief_error: float | None = None  # vs-true error AFTER the round
+    policy: str = ""  # scheduling policy that ranked this round
 
     @property
     def n_probes(self) -> int:
@@ -81,6 +87,7 @@ class Calibrator:
         on_plan_bonus: float = 2.0,
         staleness_halflife_s: float = 30.0,
         seed: int = 0,
+        policy: ProbePolicy | str | None = None,
     ):
         self.belief = belief
         self.budget = budget or ProbeBudget()
@@ -90,6 +97,25 @@ class Calibrator:
         self.on_plan_bonus = float(on_plan_bonus)
         self.staleness_halflife_s = float(staleness_halflife_s)
         self._rng = np.random.default_rng(seed)
+        # the greedy scorer stays available (score_links) even when another
+        # policy schedules the rounds — diagnostics and ε-greedy reuse it
+        self._greedy = GreedyVoIPolicy(
+            on_plan_bonus=self.on_plan_bonus,
+            staleness_halflife_s=self.staleness_halflife_s,
+        )
+        if policy is None:
+            self.policy: ProbePolicy = self._greedy
+        elif isinstance(policy, str):
+            # string specs inherit this Calibrator's scoring knobs, so
+            # policy="greedy" is the default policy, not a differently
+            # tuned one
+            self.policy = make_policy(
+                policy, seed=seed,
+                on_plan_bonus=self.on_plan_bonus,
+                staleness_halflife_s=self.staleness_halflife_s,
+            )
+        else:
+            self.policy = policy
         self.rounds: list[ProbeRound] = []
 
     # ------------------------------------------------------------- selection
@@ -115,40 +141,15 @@ class Calibrator:
         return out
 
     def score_links(self, links, plans=(), t_s: float = 0.0) -> np.ndarray:
-        """Value-of-information score per candidate link.
-
-        score = (rel_uncertainty + staleness) * (1 + bonus * flow_share)
-                * sqrt(mean):
-        uncertain links first, a measurement's value decaying with its age
-        (a link probed once is NOT trusted forever — links drift within
-        hours, so confidence must be re-earned), plan-carrying links
-        boosted by their share of the plan's flow, and everything weighted
-        toward links with real capacity (a 0.1 Gbps alternate is worth
-        less than a 5 Gbps trunk at equal uncertainty)."""
-        unc = self.belief.rel_uncertainty()
-        mean = self.belief.mean
-        flow = np.zeros_like(mean)
-        for plan in plans:
-            grid = getattr(plan, "G", None)
-            if grid is None:
-                grid = plan.F
-            peak = float(np.max(grid, initial=0.0))
-            if peak > 0:
-                flow = np.maximum(flow, np.asarray(grid) / peak)
-        age = np.clip(
-            float(t_s) - self.belief.last_obs_t, 0.0, None
-        )  # inf for never-measured links (the stale prior is ancient)
-        stale = np.where(
-            np.isfinite(age), age / self.staleness_halflife_s, 1e9
+        """Greedy value-of-information score per candidate link — the
+        default policy's scorer (see ``policies.greedy_voi_scores``),
+        kept as a method for diagnostics regardless of which policy is
+        scheduling the rounds."""
+        ctx = PolicyContext(
+            belief=self.belief, t_s=float(t_s), budget=self.budget,
+            plans=tuple(plans),
         )
-        out = np.empty(len(links))
-        for i, (a, b) in enumerate(links):
-            out[i] = (
-                (unc[a, b] + 0.05 * min(stale[a, b], 1e6))
-                * (1.0 + self.on_plan_bonus * flow[a, b])
-                * np.sqrt(max(mean[a, b], 0.0))
-            )
-        return out
+        return self._greedy.score(list(links), ctx)
 
     # -------------------------------------------------------------- execution
     def run_round(
@@ -164,16 +165,20 @@ class Calibrator:
         """One batched probe round at time ``t_s`` against the true grid.
 
         Candidates come from ``links`` if given, else from the planner's
-        pruned subgraphs for ``contexts``. Greedily takes links in score
-        order while the round's dollar / second / count budget holds, then
-        folds every measurement into the belief."""
+        pruned subgraphs for ``contexts``. The round's policy ranks the
+        candidates; the Calibrator takes them in rank order while the
+        round's dollar / second / count budget holds, then folds every
+        measurement into the belief."""
         if links is None:
             if planner is None:
                 raise ValueError("need either links= or planner+contexts")
             links = self.candidate_links(planner, contexts)
         true_tput = np.asarray(true_tput, dtype=float)
-        scores = self.score_links(links, plans, t_s=float(t_s))
-        order = np.argsort(-scores)
+        ctx = PolicyContext(
+            belief=self.belief, t_s=float(t_s), budget=self.budget,
+            planner=planner, contexts=tuple(contexts), plans=tuple(plans),
+        )
+        order = np.asarray(self.policy.rank(list(links), ctx), dtype=np.int64)
 
         base = self.belief.base
         records: list[ProbeRecord] = []
@@ -230,6 +235,7 @@ class Calibrator:
             t_s=float(t_s), records=records,
             cost_usd=spent_usd, duration_s=longest,
             belief_error=self.belief.error_vs(true_tput, mask=mask),
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
         )
         self.rounds.append(rnd)
         return rnd

@@ -27,6 +27,17 @@ near its SLO — the loop routes the remainder around the collapsed link —
 where the same service with ``calibrate=False`` (the stale-grid baseline:
 same segmentation, same true topology, no probes / no belief updates / no
 re-planning) limps through at the incident's rate.
+
+Beliefs can also IMPROVE past the epoch grid (a link recovers, or the
+stale profile undersold it). Mid-epoch the planner cannot exploit that:
+scale cuts only tighten (phi clips at 1.0 — a loosening row never binds).
+The service therefore watches the flow-weighted believed/epoch ratio over
+the links its plans ride and, past a hysteresis threshold, performs an
+**epoch roll**: re-pin the epoch grid at the belief mean, rebuild the LP
+structures on it (the one sanctioned, counted re-assembly), and re-plan
+every active job's remaining volume at its full requested goal. Rolls are
+rare by construction — the threshold gates them, each roll resets the
+ratio to ~1, and ``max_epoch_rolls`` bounds them per run.
 """
 
 from __future__ import annotations
@@ -35,14 +46,17 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import milp
 from repro.core.plan import MulticastPlan
+from repro.core.planner import Planner
 from repro.core.topology import GBIT_PER_GB
 from repro.transfer.events import TransferJob
-from repro.transfer.executor import ServiceReport, TransferService
+from repro.transfer.executor import ReplanRecord, ServiceReport, TransferService
 
 from .belief import BeliefGrid, capacity_sample_from_rates
 from .calibrator import Calibrator, ProbeRound
 from .drift import DriftModel
+from .policies import ProbePolicy
 
 _FLOW_EPS = 1e-9
 
@@ -60,6 +74,22 @@ class DriftEvent:
     source: str  # "probe" | "telemetry"
 
 
+@dataclasses.dataclass(frozen=True)
+class EpochRoll:
+    """One epoch roll: the belief mean re-pinned as the planner's grid.
+
+    The roll is the sanctioned exception to the zero-re-assembly rule —
+    it deliberately rebuilds LP structures on the improved grid, and
+    ``structure_builds`` counts exactly how many assemblies it bought
+    (bounded by the roll cap; drift re-plans still assemble nothing)."""
+
+    t_s: float  # segment boundary the roll fired at
+    ratio: float  # flow-weighted believed/epoch ratio that triggered it
+    structure_builds: int
+    replans: list[ReplanRecord]  # the roll's re-plans (kept out of
+    # JobReport.replans so the zero-build invariant there stays meaningful)
+
+
 @dataclasses.dataclass
 class CalibratedServiceReport(ServiceReport):
     probe_rounds: list[ProbeRound] = dataclasses.field(default_factory=list)
@@ -68,6 +98,9 @@ class CalibratedServiceReport(ServiceReport):
     belief_error_trajectory: list[tuple[float, float]] = dataclasses.field(
         default_factory=list
     )
+    epoch_rolls: list[EpochRoll] = dataclasses.field(default_factory=list)
+    boundaries: list[float] = dataclasses.field(default_factory=list)
+    # segment end times — epoch rolls may only fire on these
 
     @property
     def probe_cost_usd(self) -> float:
@@ -76,6 +109,10 @@ class CalibratedServiceReport(ServiceReport):
     @property
     def probe_seconds(self) -> float:
         return sum(r.duration_s for r in self.probe_rounds)
+
+    @property
+    def epoch_roll_builds(self) -> int:
+        return sum(r.structure_builds for r in self.epoch_rolls)
 
 
 class CalibratedTransferService(TransferService):
@@ -109,6 +146,9 @@ class CalibratedTransferService(TransferService):
         drift_weight: float = 8.0,
         max_segments: int = 400,
         link_capacity_scale: float | None = 2.0,
+        policy: ProbePolicy | str | None = None,
+        epoch_roll_threshold: float = 1.15,
+        max_epoch_rolls: int = 2,
         **kw,
     ):
         self.drift = drift
@@ -122,6 +162,8 @@ class CalibratedTransferService(TransferService):
         self.drift_weight = float(drift_weight)
         self.max_segments = int(max_segments)
         self.link_capacity_scale = link_capacity_scale
+        self.epoch_roll_threshold = float(epoch_roll_threshold)
+        self.max_epoch_rolls = int(max_epoch_rolls)
         # the epoch grid: plans are priced and constrained against the
         # belief mean frozen at service construction; within the epoch the
         # belief moves only through scale cuts (zero re-assembly)
@@ -132,7 +174,7 @@ class CalibratedTransferService(TransferService):
         # with more VMs/connections (matches simulate_multi's water-filling)
         self.planner.link_capacity_scale = link_capacity_scale
         self.calibrator = calibrator if calibrator is not None else (
-            Calibrator(self.belief) if self.calibrate else None
+            Calibrator(self.belief, policy=policy) if self.calibrate else None
         )
 
     # --------------------------------------------------------------- planning
@@ -188,6 +230,56 @@ class CalibratedTransferService(TransferService):
         if scale is not None:
             eff = eff * scale
         return np.where(np.asarray(grid) > _FLOW_EPS, eff, 0.0)
+
+    # ------------------------------------------------------------ epoch rolls
+    def _epoch_headroom(self, states_active) -> float:
+        """Flow-weighted believed/epoch throughput ratio over the links the
+        active plans actually ride. > 1 means the belief has risen past
+        the epoch-pinned grid there — capacity the planner cannot exploit
+        mid-epoch because scale cuts clip at 1.0."""
+        epoch = np.asarray(self.top.tput, dtype=float)
+        num = den = 0.0
+        for st in states_active:
+            g = np.asarray(
+                st.plan.G if isinstance(st.plan, MulticastPlan) else st.plan.F
+            )
+            m = (g > _FLOW_EPS) & (epoch > 0)
+            if not m.any():
+                continue
+            w = g[m]
+            num += float((w * (self.belief.mean[m] / epoch[m])).sum())
+            den += float(w.sum())
+        return num / den if den > 0 else 1.0
+
+    def _roll_epoch(self, states, act, t_s: float, ratio: float) -> EpochRoll:
+        """Re-pin the epoch grid at the improved belief mean.
+
+        This is the one place the calibration plane is ALLOWED to rebuild
+        LP structures: the new epoch topology gets fresh caches, every
+        active job's remaining volume is re-planned on them at its full
+        requested goal, and the assemblies that bought are counted on the
+        roll record (drift re-plans before and after stay zero-build).
+        The roll's re-plans live on the roll, not in ``JobReport.replans``."""
+        builds0 = milp.N_STRUCT_BUILDS
+        self.top = self.belief.believed_topology()
+        planner = Planner(self.top, max_relays=self.planner.max_relays)
+        planner.belief = self.belief
+        planner.link_capacity_scale = self.link_capacity_scale
+        self.planner = planner
+        recs: list[ReplanRecord] = []
+        for i in act:
+            st = states[i]
+            n0 = len(st.replans)
+            self._replan(st, i, at_s=t_s)
+            if len(st.replans) > n0:
+                recs.append(st.replans.pop())
+            if st.status != "failed":
+                st._assumed = self._assumed_grid(st.plan)
+        return EpochRoll(
+            t_s=float(t_s), ratio=float(ratio),
+            structure_builds=milp.N_STRUCT_BUILDS - builds0,
+            replans=recs,
+        )
 
     # ----------------------------------------------------------------- checks
     def _probe_drifted_links(
@@ -264,10 +356,11 @@ class CalibratedTransferService(TransferService):
             if sample is None:
                 continue  # link kept up with the plan: no capacity info
             samples[(a, b)] = sample
-            if observed < self.drift_ratio * expected \
-                    and st._assumed[a, b] > _FLOW_EPS \
-                    and self.belief.out_of_bounds(a, b, sample,
-                                                  z=self.drift_z):
+            if (
+                observed < self.drift_ratio * expected
+                and st._assumed[a, b] > _FLOW_EPS
+                and self.belief.out_of_bounds(a, b, sample, z=self.drift_z)
+            ):
                 hits.append((a, b, expected, observed))
         for (a, b), sample in samples.items():
             self.belief.observe_adaptive(
@@ -310,6 +403,8 @@ class CalibratedTransferService(TransferService):
         probe_rounds: list[ProbeRound] = []
         drift_events: list[DriftEvent] = []
         trajectory: list[tuple[float, float]] = []
+        epoch_rolls: list[EpochRoll] = []
+        boundaries: list[float] = []
         now = 0.0
         segments = 0
         sim_events = 0
@@ -390,6 +485,7 @@ class CalibratedTransferService(TransferService):
             sim_events += res.events
             self._fold_segment(active, res, now)
             seg_end = now + res.time_s
+            boundaries.append(seg_end)
 
             # ---- feedback: telemetry -> belief -> drift -> re-plan
             if self.calibrate:
@@ -402,12 +498,27 @@ class CalibratedTransferService(TransferService):
                     st = states[i]
                     _, hits = self._harvest(st, jr, t_s=seg_end,
                                             agg_grid=agg)
-                    if hits and st.status in ("planned", "running") \
-                            and st.remaining_chunks:
+                    if (
+                        hits
+                        and st.status in ("planned", "running")
+                        and st.remaining_chunks
+                    ):
                         note_drift(st, hits, seg_end, "telemetry")
                         self._replan(st, i, at_s=seg_end)
                         if st.status != "failed":
                             st._assumed = self._assumed_grid(st.plan)
+
+            # ---- epoch roll: exploit a belief that rose past the epoch
+            # grid. Only ever AT a segment boundary (never mid-segment),
+            # only past the hysteresis threshold, and only up to the cap.
+            if self.calibrate and len(epoch_rolls) < self.max_epoch_rolls:
+                act = active_indices()
+                if act:
+                    ratio = self._epoch_headroom([states[i] for i in act])
+                    if ratio >= self.epoch_roll_threshold:
+                        epoch_rolls.append(
+                            self._roll_epoch(states, act, seg_end, ratio)
+                        )
             now = seg_end
 
         return CalibratedServiceReport(
@@ -418,4 +529,6 @@ class CalibratedTransferService(TransferService):
             probe_rounds=probe_rounds,
             drift_events=drift_events,
             belief_error_trajectory=trajectory,
+            epoch_rolls=epoch_rolls,
+            boundaries=boundaries,
         )

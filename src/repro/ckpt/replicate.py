@@ -86,8 +86,10 @@ def replicate_checkpoint(
             src_region, dst_regions, cost_ceiling_per_gb, volume_gb
         )
     else:
-        goal = tput_floor_gbps or \
-            planner.max_multicast_throughput(src_region, dst_regions) * 0.5
+        goal = (
+            tput_floor_gbps
+            or planner.max_multicast_throughput(src_region, dst_regions) * 0.5
+        )
         plan = planner.plan_multicast_cost_min(
             src_region, dst_regions, goal, volume_gb
         )

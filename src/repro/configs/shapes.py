@@ -35,7 +35,10 @@ SHAPES = {s.name: s for s in [TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K]}
 def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """(runs?, reason-if-skipped) for an (arch x shape) cell."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
-        return False, "pure full-attention arch: 500k decode requires sub-quadratic context (DESIGN.md §4)"
+        return False, (
+            "pure full-attention arch: 500k decode requires sub-quadratic "
+            "context (DESIGN.md §4)"
+        )
     return True, ""
 
 

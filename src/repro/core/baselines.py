@@ -63,7 +63,9 @@ class CloudServiceModel:
     rate_fraction: float
     service_fee_per_gb: float
 
-    def transfer_time_s(self, top: Topology, src: str, dst: str, volume_gb: float) -> float:
+    def transfer_time_s(
+        self, top: Topology, src: str, dst: str, volume_gb: float
+    ) -> float:
         s, t = top.index(src), top.index(dst)
         # managed services run a fixed small worker pool on the direct path
         gbps = max(top.tput[s, t] * self.rate_fraction, 0.05)

@@ -645,11 +645,9 @@ class MulticastLPStructure:
         A[r_4f + v + np.arange(v), self.iN + np.arange(v)] = -top.limit_egress
         # 4h / 4i
         A[r_4f + 2 * v + self.eu, self.iM + ar] = 1.0
-        A[r_4f + 2 * v + np.arange(v), self.iN + np.arange(v)] = \
-            -float(top.limit_conn)
+        A[r_4f + 2 * v + np.arange(v), self.iN + np.arange(v)] = -float(top.limit_conn)
         A[r_4f + 3 * v + self.ew, self.iM + ar] = 1.0
-        A[r_4f + 3 * v + np.arange(v), self.iN + np.arange(v)] = \
-            -float(top.limit_conn)
+        A[r_4f + 3 * v + np.arange(v), self.iN + np.arange(v)] = -float(top.limit_conn)
         # 4j
         A[r_4f + 4 * v + np.arange(v), self.iN + np.arange(v)] = 1.0
         b0[r_4f + 4 * v :] = float(top.limit_vm)

@@ -74,8 +74,7 @@ def _peel_paths(
     ``max_paths`` only caps that (None = all of them). ``stop_below`` ends
     the peel once the residual source outflow is negligible (solver noise
     would otherwise decompose into useless micro-paths)."""
-    cap = max_paths if max_paths is not None \
-        else int((F > _FLOW_EPS).sum()) + 4
+    cap = max_paths if max_paths is not None else int((F > _FLOW_EPS).sum()) + 4
     out: list[tuple[list[int], float]] = []
     for _ in range(cap):
         hit = _widest_path(F, src, dst)
@@ -308,8 +307,7 @@ class MulticastPlan:
         """Destinations with a positive goal or positive planned delivery."""
         out = []
         for k, d in enumerate(self.dsts):
-            if self.tput_goals[k] > _FLOW_EPS \
-                    or self.F[k][:, d].sum() > _FLOW_EPS:
+            if self.tput_goals[k] > _FLOW_EPS or self.F[k][:, d].sum() > _FLOW_EPS:
                 out.append(d)
         return out
 

@@ -145,7 +145,9 @@ class Planner:
             return 0.0
         return float(-res.fun)
 
-    def direct_throughput(self, src: str, dst: str, num_vms: int | None = None) -> float:
+    def direct_throughput(
+        self, src: str, dst: str, num_vms: int | None = None
+    ) -> float:
         """Throughput of the direct path with ``num_vms`` VMs at each end."""
         n = float(num_vms if num_vms is not None else self.top.limit_vm)
         s, t = self.top.index(src), self.top.index(dst)
@@ -502,8 +504,9 @@ class Planner:
             k = edge_ix[(sa, sb)]
             row = np.zeros(struct.nx)
             row[k] = 1.0  # F_e <= phi * tput_e / limit_conn * M_e
-            row[e + v + k] = -float(phi) * struct.top.tput[sa, sb] \
-                / struct.top.limit_conn
+            row[e + v + k] = (
+                -float(phi) * struct.top.tput[sa, sb] / struct.top.limit_conn
+            )
             cuts.append((row, 0.0))
         for r, cap in (vm_caps or {}).items():
             sr = inv.get(r)
@@ -535,8 +538,9 @@ class Planner:
             k = edge_ix[(sa, sb)]
             row = np.zeros(struct.nx)
             row[k] = 1.0  # G_e <= phi * tput_e / limit_conn * M_e
-            row[struct.iM + k] = -float(phi) * struct.top.tput[sa, sb] \
-                / struct.top.limit_conn
+            row[struct.iM + k] = (
+                -float(phi) * struct.top.tput[sa, sb] / struct.top.limit_conn
+            )
             cuts.append((row, 0.0))
         for r, cap in (vm_caps or {}).items():
             sr = inv.get(r)

@@ -105,6 +105,41 @@ _INTRA_CLOUD_EGRESS = {
 
 _SEED = 20220415  # deterministic grid
 
+# ------------------------------------------------------- belief drift priors
+# Per-(source provider, dest provider) relative drift sigma for the
+# calibration plane's BeliefGrid prior: how far the stale embedded grid is
+# presumed to sit from current reality, before any probe lands. Cross-cloud
+# measurement studies (and the paper's own Fig. 4) show this is NOT one
+# number: intra-AWS routes hold steady, intra-GCP routes jitter, and
+# inter-cloud peering drifts hardest of all. The table replaces the single
+# global ``prior_rel_sigma`` knob; pairs not listed (e.g. the toy test
+# provider) fall back to ``DEFAULT_DRIFT_PRIOR`` — the old global value.
+PROVIDER_DRIFT_PRIOR: dict[tuple[str, str], float] = {
+    ("aws", "aws"): 0.18,
+    ("azure", "azure"): 0.20,
+    ("gcp", "gcp"): 0.30,  # Fig. 4: GCP route jitter
+    ("aws", "azure"): 0.32,
+    ("azure", "aws"): 0.32,
+    ("aws", "gcp"): 0.35,
+    ("gcp", "aws"): 0.35,
+    ("azure", "gcp"): 0.35,
+    ("gcp", "azure"): 0.35,
+}
+DEFAULT_DRIFT_PRIOR = 0.25
+
+
+def prior_rel_sigma_grid(top: Topology) -> np.ndarray:
+    """[V, V] per-link prior relative drift sigma from the provider-pair
+    table — the BeliefGrid's default prior spread (ordered pairs: egress
+    provider rows, ingress provider columns)."""
+    providers = [r.provider for r in top.regions]
+    v = len(providers)
+    out = np.full((v, v), DEFAULT_DRIFT_PRIOR)
+    for i, p in enumerate(providers):
+        for j, q in enumerate(providers):
+            out[i, j] = PROVIDER_DRIFT_PRIOR.get((p, q), DEFAULT_DRIFT_PRIOR)
+    return out
+
 
 def region_list() -> list[Region]:
     out = []

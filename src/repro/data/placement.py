@@ -40,7 +40,10 @@ def plan_shard_sources(
                 best = (0.0, src, 1e9, [])
                 break
             if src not in plan_cache:
-                goal = min(tput_floor_gbps, planner.max_throughput(src, consumer_region) * 0.9)
+                goal = min(
+                    tput_floor_gbps,
+                    planner.max_throughput(src, consumer_region) * 0.9,
+                )
                 if goal <= 0:
                     continue
                 plan = planner.plan_cost_min(src, consumer_region, goal, shard_gb)

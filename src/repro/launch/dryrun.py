@@ -145,7 +145,9 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, rules: ShardingRules,
         psds = param_sds(cfg)  # f32 master weights
         osds = jax.eval_shape(init_opt_state, psds)
         oshard = {"m": pshard, "v": pshard,
-                  "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+                  "step": jax.sharding.NamedSharding(
+                      mesh, jax.sharding.PartitionSpec()
+                  )}
         bsds = train_batch_sds(cfg, shape)
         bshard = shardings_for(mesh, rules, train_batch_logical(cfg), bsds)
         if podring and "pod" in mesh.axis_names:
@@ -263,7 +265,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         model_flops = 6.0 * art["params_active"] * shape.global_batch * shape.seq_len
         if shape.kind != "train":
             # forward-only; decode touches 1 token
-            tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+            tokens = shape.global_batch * (
+                1 if shape.kind == "decode" else shape.seq_len
+            )
             model_flops = 2.0 * art["params_active"] * tokens
         art["roofline"] = {
             "flops_per_device": flops,

@@ -18,7 +18,9 @@ NEG_INF = -1e30
 
 
 # ----------------------------------------------------------------- param defs
-def attn_defs(cfg: ModelConfig, lead: tuple[int, ...] = (), cross: bool = False) -> dict:
+def attn_defs(
+    cfg: ModelConfig, lead: tuple[int, ...] = (), cross: bool = False
+) -> dict:
     d = cfg.d_model
     h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     ll = tuple(["layers"] * len(lead))

@@ -50,7 +50,11 @@ def materialize(tree, key: jax.Array):
             return jnp.ones(pd.shape, pd.dtype)
         if pd.init == "embed":
             return jax.random.normal(k, pd.shape, pd.dtype) * 0.02
-        fan = pd.fan_in if pd.fan_in else (pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1])
+        fan = (
+            pd.fan_in
+            if pd.fan_in
+            else (pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1])
+        )
         std = 1.0 / np.sqrt(max(fan, 1))
         return jax.random.normal(k, pd.shape, pd.dtype) * std
 

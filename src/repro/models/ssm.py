@@ -173,7 +173,9 @@ def ssm_mixer(cfg: ModelConfig, rules: ShardingRules, p: dict, x, *, cache=None)
 
     if cache is None:
         conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
-        conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+        conv_out = _causal_conv(
+            conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)
+        )
         xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
         xh = xs.reshape(*xs.shape[:2], heads, s.head_dim)
         dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))

@@ -202,7 +202,9 @@ def _dense_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
 
     body = _maybe_remat(cfg, body, mode == "train")
     if mode == "decode":
-        x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]), unroll=cfg.scan_unroll)
+        x, caches = jax.lax.scan(
+            body, x, (params["blocks"], state["kv"]), unroll=cfg.scan_unroll
+        )
         return x, {"kv": caches}
     x, ys = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
     return x, ({"kv": ys} if mode == "prefill" else None)
@@ -221,7 +223,9 @@ def _ssm_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
 
     body = _maybe_remat(cfg, body, mode == "train")
     if mode == "decode":
-        x, caches = jax.lax.scan(body, x, (params["ssm_blocks"], state["ssm"]), unroll=cfg.scan_unroll)
+        x, caches = jax.lax.scan(
+            body, x, (params["ssm_blocks"], state["ssm"]), unroll=cfg.scan_unroll
+        )
         return x, {"ssm": caches}
     x, ys = jax.lax.scan(body, x, params["ssm_blocks"], unroll=cfg.scan_unroll)
     return x, ({"ssm": ys} if mode == "prefill" else None)
@@ -315,7 +319,9 @@ def _vlm_stack(cfg, rules, params, x, positions, aux, mode, state, t_max,
             unroll=cfg.scan_unroll,
         )
         return x, {"kv": kv}
-    x, ys = jax.lax.scan(body, x, (params["self_blocks"], params["cross_blocks"]), unroll=cfg.scan_unroll)
+    x, ys = jax.lax.scan(
+        body, x, (params["self_blocks"], params["cross_blocks"]), unroll=cfg.scan_unroll
+    )
     return x, ({"kv": ys} if mode == "prefill" else None)
 
 

@@ -79,7 +79,9 @@ def adamw_update(grads, params, state, cfg: OptConfig):
         return p - lr * delta, m2, v2
 
     out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(
+        lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)
+    )
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
     return (

@@ -324,8 +324,9 @@ def materialize_jobs(
             edge_flow_total: dict[tuple[int, int], float] = {}
             for path, flow in paths:
                 for a, b in zip(path[:-1], path[1:]):
-                    edge_flow_total[(a, b)] = \
+                    edge_flow_total[(a, b)] = (
                         edge_flow_total.get((a, b), 0.0) + flow
+                    )
             for pid, (path, flow) in enumerate(paths):
                 for hop, (a, b) in enumerate(zip(path[:-1], path[1:])):
                     m_edge = int(round(plan.M[a, b]))

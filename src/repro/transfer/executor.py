@@ -175,8 +175,7 @@ class _JobState:
     def remaining_gb(self) -> float:
         # half-chunk shave so re-chunking the remainder reproduces the
         # integer chunk count exactly (ceil is not float-robust at the edge)
-        return max(self.remaining_chunks - 0.5, 0.5) \
-            * self.chunk_gbit / GBIT_PER_GB
+        return max(self.remaining_chunks - 0.5, 0.5) * self.chunk_gbit / GBIT_PER_GB
 
     def dst_done(self, d: int) -> bool:
         return self.delivered_by_dst.get(d, 0) >= self.n_chunks
@@ -505,8 +504,7 @@ class TransferService:
                             affected.add(i)
                 elif isinstance(f, VMFailure):
                     caps = self.vm_caps_by_job.setdefault(f.job, {})
-                    lost = caps.get(f.region, float(self.top.limit_vm)) \
-                        - f.count
+                    lost = caps.get(f.region, float(self.top.limit_vm)) - f.count
                     caps[f.region] = max(lost, 0.0)
                     if 0 <= f.job < len(states):
                         affected.add(f.job)

@@ -496,8 +496,11 @@ def simulate_multi_reference(
                     for s0 in firsts[int(su.chunk_path[ev][ch])]:
                         ready[s0].append(ch)
             elif isinstance(ev, LinkDegrade):
-                want = su.edges_used.index((ev.src, ev.dst)) \
-                    if (ev.src, ev.dst) in su.edges_used else -1
+                want = (
+                    su.edges_used.index((ev.src, ev.dst))
+                    if (ev.src, ev.dst) in su.edges_used
+                    else -1
+                )
                 for c in conns:
                     if c.edge_ix == want:
                         c.rate *= ev.factor

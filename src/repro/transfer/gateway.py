@@ -512,6 +512,22 @@ class MulticastGatewayReport:
     retried_chunks: int
     faults_injected: int
     per_tree_chunks: dict  # tree id -> chunks initially binned to it
+    # passive telemetry, same shape as the unicast report: per tree-edge
+    # region pair, envelope bytes that crossed it (each chunk once, however
+    # many destinations it serves downstream) and the active window
+    per_edge_bytes: dict | None = None  # (a, b) -> bytes
+    per_edge_seconds: dict | None = None  # (a, b) -> active seconds
+
+    def link_gbps(self) -> dict:
+        """Observed per-edge delivered rate (Gbit/s) — the fan-out path's
+        feed for ``calibrate.BeliefGrid.observe_link_rates``, mirroring
+        ``GatewayReport.link_gbps``."""
+        out = {}
+        for e, nbytes in (self.per_edge_bytes or {}).items():
+            secs = (self.per_edge_seconds or {}).get(e, 0.0)
+            if secs > 1e-9:
+                out[e] = nbytes * 8.0 / 1e9 / secs
+        return out
 
     @property
     def checksum_failures(self) -> int:
@@ -616,8 +632,11 @@ def transfer_objects_multicast(
             st.tid = tid
             st.edge = e
             st.hop = 0 if e[0] == plan.src else 1
-            st.q = queue.Queue() if st.hop == 0 \
+            st.q = (
+                queue.Queue()
+                if st.hop == 0
                 else queue.Queue(maxsize=relay_buffer_chunks)
+            )
             st.serves = serves[e] & set(dests)
             st.deliver = delivers.get(e)
             if st.deliver is not None and st.deliver not in stores:
@@ -652,6 +671,12 @@ def transfer_objects_multicast(
     bytes_moved = [0]
     retried = [0]
     live = {st.sid: workers_per_hop for st in stages}
+    # per region-pair telemetry (several stages may share one region pair
+    # across trees — the counters aggregate the pair): envelope bytes that
+    # crossed the hop and first-pickup/last-completion stamps
+    edge_bytes: dict[tuple[int, int], int] = {}
+    edge_t0: dict[tuple[int, int], float] = {}
+    edge_t1: dict[tuple[int, int], float] = {}
     forwarded: set[tuple[int, str]] = set()  # (sid, chunk id) fan-in dedup
     verified: set[tuple[int, str]] = set()  # (dest, chunk id)
     # every (dest, chunk) pair the transfer owes — fixed up front so retry
@@ -692,6 +717,12 @@ def transfer_objects_multicast(
             except queue.Empty:
                 continue
             ch, data, attempt, target = item
+            # open the edge's telemetry window at FIRST pickup — stamping at
+            # first completion would shave one chunk's time off the window
+            # and overstate the link rate (same discipline as the unicast
+            # path)
+            with lock:
+                edge_t0.setdefault(st.edge, time.monotonic())
             if data is None:  # root stage: read from the source store once
                 data = src_store.get_range(ch.object_key, ch.offset, ch.length)
             if fault_injector is not None:
@@ -710,6 +741,8 @@ def transfer_objects_multicast(
                     return  # the worker dies with its chunk
             with lock:
                 bytes_moved[0] += len(data)
+                edge_bytes[st.edge] = edge_bytes.get(st.edge, 0) + len(data)
+                edge_t1[st.edge] = time.monotonic()
             _fan_out(st, ch, data, attempt, target)
 
     threads: list[threading.Thread] = []
@@ -836,4 +869,8 @@ def transfer_objects_multicast(
         faults_injected=0 if fault_injector is None
         else fault_injector.faults_injected,
         per_tree_chunks=per_tree_count,
+        per_edge_bytes=dict(edge_bytes),
+        per_edge_seconds={
+            e: max(edge_t1[e] - edge_t0[e], 1e-9) for e in edge_bytes
+        },
     )

@@ -1,0 +1,316 @@
+"""Probe-policy engine (ISSUE 5): pluggable probe scheduling, per-provider
+drift priors, belief epoch rolls, multicast gateway telemetry."""
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (
+    BeliefGrid,
+    CalibratedTransferService,
+    Calibrator,
+    DriftModel,
+    PolicyContext,
+    ProbeBudget,
+    make_policy,
+)
+from repro.calibrate.policies import POLICY_NAMES
+from repro.core import Planner, default_topology, milp, toy_topology
+from repro.core.profiles import (
+    DEFAULT_DRIFT_PRIOR,
+    PROVIDER_DRIFT_PRIOR,
+    prior_rel_sigma_grid,
+)
+from repro.transfer import TransferRequest
+
+SRC, DST = "aws:us-west-2", "aws:eu-central-1"
+
+
+@pytest.fixture(scope="module")
+def top():
+    return default_topology()
+
+
+@pytest.fixture(scope="module")
+def truth(top):
+    return DriftModel(top, seed=11, drift_sigma=0.3,
+                      diurnal_amp=0.0).tput_at(500.0)
+
+
+# ----------------------------------------------------------------- policies
+def test_make_policy_names_and_unknown():
+    for name in POLICY_NAMES:
+        pol = make_policy(name, seed=3)
+        assert pol.name == name
+    with pytest.raises(ValueError, match="unknown probe policy"):
+        make_policy("thompson")
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_every_policy_respects_probe_budget_exactly(top, truth, policy):
+    """Acceptance: the round's $ / seconds / count caps hold under every
+    scheduler — budget enforcement lives in the Calibrator, not in the
+    policy, so no ranking can overspend."""
+    budget = ProbeBudget(usd_per_round=0.08, seconds_per_round=15.0,
+                         max_probes_per_round=3)
+    bel = BeliefGrid(top)
+    cal = Calibrator(bel, policy=make_policy(policy, seed=5), budget=budget)
+    pl = Planner(top, max_relays=6)
+    for k in range(4):
+        rnd = cal.run_round(float(k), truth, planner=pl,
+                            contexts=[(SRC, DST)])
+        assert rnd.cost_usd <= budget.usd_per_round + 1e-12
+        assert rnd.n_probes <= budget.max_probes_per_round
+        assert rnd.n_probes > 0
+        assert rnd.policy == policy
+        for r in rnd.records:
+            assert r.duration_s <= budget.seconds_per_round + 1e-12
+            assert r.cost_usd > 0
+
+
+def test_epsilon_greedy_is_seed_deterministic(top, truth):
+    """Same seed -> bitwise-identical probe schedule; a different seed
+    explores differently."""
+    pl = Planner(top, max_relays=6)
+    budget = ProbeBudget(usd_per_round=1.0, seconds_per_round=30.0,
+                         max_probes_per_round=4)
+
+    def schedule(seed):
+        bel = BeliefGrid(top)
+        cal = Calibrator(
+            bel, budget=budget,
+            policy=make_policy("epsilon_greedy", seed=seed, epsilon=0.5),
+        )
+        out = []
+        for k in range(4):
+            rnd = cal.run_round(float(k), truth, planner=pl,
+                                contexts=[(SRC, DST)])
+            out.append(tuple((r.src, r.dst) for r in rnd.records))
+        return out
+
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)
+
+
+def test_round_robin_guarantees_staleness_coverage(top, truth):
+    """The LRU sweep must touch EVERY candidate within
+    ceil(candidates / probes-per-round) rounds — the coverage guarantee
+    score-driven policies do not give."""
+    pl = Planner(top, max_relays=6)
+    bel = BeliefGrid(top)
+    cal = Calibrator(bel, policy="round_robin",
+                     budget=ProbeBudget(usd_per_round=100.0,
+                                        seconds_per_round=60.0,
+                                        max_probes_per_round=6))
+    candidates = cal.candidate_links(pl, [(SRC, DST)])
+    probed = set()
+    rounds = int(np.ceil(len(candidates) / 6))
+    for k in range(rounds):
+        rnd = cal.run_round(float(k), truth, planner=pl,
+                            contexts=[(SRC, DST)])
+        probed |= {(r.src, r.dst) for r in rnd.records}
+    assert probed == set(candidates)
+
+
+def test_evoi_zero_struct_builds_when_warm(top, truth):
+    """Acceptance: the EVOI policy's LP evaluations ride the planner's
+    cached structures — after the first round, ranking assembles
+    nothing."""
+    pl = Planner(top, max_relays=6)
+    bel = BeliefGrid(top)
+    cal = Calibrator(bel, policy="evoi")
+    cal.run_round(0.0, truth, planner=pl, contexts=[(SRC, DST)])  # warm
+    builds0 = milp.N_STRUCT_BUILDS
+    cal.run_round(1.0, truth, planner=pl, contexts=[(SRC, DST)])
+    assert milp.N_STRUCT_BUILDS == builds0, "EVOI re-assembled an LP"
+
+
+def test_evoi_prioritizes_stale_plan_links(top):
+    """Every candidate was just re-measured except the link carrying the
+    plan's flow, whose confidence has gone stale: its re-opened LCB/mean
+    gap is the regret the robust plan pays, so EVOI must rank
+    re-measuring it first."""
+    pl = Planner(top, max_relays=6)
+    plan = pl.plan_cost_min(SRC, DST, 4.0, 8.0)
+    bel = BeliefGrid(top)
+    links = Calibrator(bel).candidate_links(pl, [(SRC, DST)])
+    a, b = max(
+        ((a, b) for a, b in links if plan.F[a, b] > 1e-9),
+        key=lambda e: plan.F[e],
+    )
+    for x, y in links:
+        t_obs = 0.0 if (x, y) == (a, b) else 59.0
+        bel.observe(x, y, float(bel.mean[x, y]), weight=8.0, t_s=t_obs)
+    pol = make_policy("evoi")
+    ctx = PolicyContext(belief=bel, t_s=60.0, planner=pl,
+                        contexts=((SRC, DST),), plans=(plan,))
+    order = pol.rank(list(links), ctx)
+    top3 = [links[int(i)] for i in order[:3]]
+    assert (a, b) in top3, (top3, (a, b))
+
+
+def test_greedy_policy_matches_legacy_scoring(top):
+    """The extracted GreedyVoIPolicy must rank exactly as the Calibrator's
+    original argsort(-score) did."""
+    bel = BeliefGrid(top)
+    pl = Planner(top, max_relays=6)
+    plan = pl.plan_cost_min(SRC, DST, 3.0, 4.0)
+    cal = Calibrator(bel)  # default policy IS greedy
+    links = cal.candidate_links(pl, [(SRC, DST)])
+    scores = cal.score_links(links, plans=[plan], t_s=5.0)
+    ctx = PolicyContext(belief=bel, t_s=5.0, plans=(plan,))
+    order = cal.policy.rank(links, ctx)
+    assert np.array_equal(order, np.argsort(-scores, kind="stable"))
+
+
+# ------------------------------------------------------ per-provider priors
+def test_default_prior_comes_from_provider_table(top):
+    bel = BeliefGrid(top)
+    grid = prior_rel_sigma_grid(top)
+    assert np.array_equal(bel.prior_rel_sigma, grid)
+    providers = [r.provider for r in top.regions]
+    i_aws = providers.index("aws")
+    i_gcp = providers.index("gcp")
+    assert grid[i_aws, i_gcp] == PROVIDER_DRIFT_PRIOR[("aws", "gcp")]
+    assert grid[i_gcp, i_gcp] == PROVIDER_DRIFT_PRIOR[("gcp", "gcp")]
+    # unknown providers (toy grids) fall back to the old global knob
+    toy = toy_topology(n=4, seed=0)
+    assert (prior_rel_sigma_grid(toy) == DEFAULT_DRIFT_PRIOR).all()
+
+
+def test_provider_priors_scale_lcbs_only_for_intended_pairs(top):
+    """Acceptance: a per-provider prior moves the LCB exactly on that
+    provider pair's links and nowhere else."""
+    providers = np.array([r.provider for r in top.regions])
+    custom = np.full((top.num_regions, top.num_regions), DEFAULT_DRIFT_PRIOR)
+    gcp = providers == "gcp"
+    gg = np.outer(gcp, gcp)
+    custom[gg] = 0.45
+    flat = BeliefGrid(top, prior_rel_sigma=DEFAULT_DRIFT_PRIOR)
+    prov = BeliefGrid(top, prior_rel_sigma=custom)
+    live = np.asarray(top.tput) > 0
+    lb_flat, lb_prov = flat.lower_bound(1.5), prov.lower_bound(1.5)
+    assert (lb_prov[gg & live] < lb_flat[gg & live]).all()
+    assert np.array_equal(lb_prov[~gg], lb_flat[~gg])
+
+
+def test_prior_rel_sigma_shape_validated(top):
+    with pytest.raises(ValueError, match="scalar or"):
+        BeliefGrid(top, prior_rel_sigma=np.ones(3))
+
+
+def test_reset_link_reseeds_at_per_link_prior(top):
+    s, d = top.index(SRC), top.index(DST)
+    bel = BeliefGrid(top)
+    bel.reset_link(s, d, 1.0)
+    sig = bel.prior_rel_sigma[s, d]
+    assert bel.sigma()[s, d] == pytest.approx(sig * 1.0)
+
+
+# -------------------------------------------------------------- epoch rolls
+def _degraded_belief(top, s, factor):
+    bel = BeliefGrid(top)
+    for b in range(top.num_regions):
+        if b != s and top.tput[s, b] > 0:
+            bel.reset_link(s, b, factor * top.tput[s, b])
+    return bel
+
+
+def _roll_service(top, factor, **kw):
+    s = top.index(SRC)
+    drift = DriftModel(top, seed=0, drift_sigma=0.02, diurnal_amp=0.0)
+    svc = CalibratedTransferService(
+        drift, belief=_degraded_belief(top, s, factor), backend="jax",
+        max_relays=6, check_interval_s=4.0, policy="round_robin",
+        max_segments=120, **kw,
+    )
+    svc._epoch0 = svc.top  # the construction-time epoch, for assertions
+    svc.submit(TransferRequest("roll", SRC, DST, 4.0, 4.0))
+    return svc, svc.run()
+
+
+def test_epoch_roll_fires_and_is_bounded(top):
+    """Acceptance: the epoch grid undersells reality 20x; probes raise the
+    belief past the hysteresis threshold, the service rolls (counted,
+    bounded structure builds), plans re-pin on the improved grid, and
+    drift re-plans stay zero-build."""
+    svc, rep = _roll_service(top, 0.05, max_epoch_rolls=2)
+    assert rep.jobs[0].status == "done"
+    assert 1 <= len(rep.epoch_rolls) <= 2
+    roll = rep.epoch_rolls[0]
+    assert roll.ratio >= svc.epoch_roll_threshold
+    assert 0 < rep.epoch_roll_builds <= 8
+    # the roll's re-plans live on the roll record, NOT in job replans —
+    # every drift re-plan must still be a pure cache hit
+    assert all(r.structure_builds == 0 for r in rep.replans)
+    assert roll.replans and all(
+        r.plan.solver_status == "optimal" for r in roll.replans
+    )
+    # the epoch was re-pinned: new topology (fresh caches), planner follows,
+    # and on the plan-carrying source edges the new epoch sits far above
+    # the degraded construction-time grid
+    assert svc.top is not svc._epoch0
+    assert svc.planner.top is svc.top
+    s = top.index(SRC)
+    old, new = np.asarray(svc._epoch0.tput), np.asarray(svc.top.tput)
+    assert (new[s][old[s] > 0] > old[s][old[s] > 0]).any()
+
+
+def test_epoch_roll_never_fires_mid_segment(top):
+    _, rep = _roll_service(top, 0.05, max_epoch_rolls=2)
+    assert rep.epoch_rolls and rep.boundaries
+    for roll in rep.epoch_rolls:
+        assert any(abs(roll.t_s - b) < 1e-9 for b in rep.boundaries), (
+            roll.t_s, rep.boundaries,
+        )
+
+
+def test_epoch_roll_respects_hysteresis_threshold(top):
+    """A belief only mildly below reality (ratio < threshold) must NOT
+    trigger a roll; the same scenario with a lower threshold must."""
+    _, calm = _roll_service(top, 0.95, max_epoch_rolls=2)
+    assert calm.epoch_rolls == []
+    _, eager = _roll_service(top, 0.95, max_epoch_rolls=2,
+                             epoch_roll_threshold=1.01)
+    assert eager.epoch_rolls
+    _, capped = _roll_service(top, 0.05, max_epoch_rolls=0)
+    assert capped.epoch_rolls == []
+
+
+def test_epoch_roll_improves_delivered_throughput(top):
+    _, rolled = _roll_service(top, 0.05, max_epoch_rolls=2)
+    _, stale = _roll_service(top, 0.05, max_epoch_rolls=0)
+    ach = lambda rep: (  # noqa: E731
+        rep.jobs[0].delivered_gb * 8.0 / max(rep.time_s, 1e-9)
+    )
+    assert ach(rolled) > ach(stale)
+
+
+# ------------------------------------------------- multicast gateway feed
+def test_multicast_gateway_reports_link_rates_and_feeds_belief():
+    """The fan-out gateway exposes per-edge bytes/seconds like the unicast
+    path; the belief consumes the observed rates."""
+    from repro.transfer import BlobStore, transfer_objects_multicast
+
+    top = toy_topology(n=6, seed=3)
+    pl = Planner(top, max_relays=4)
+    plan = pl.plan_multicast_cost_min("toy:r0", ["toy:r1", "toy:r2"],
+                                      1.0, 0.02)
+    rng = np.random.default_rng(0)
+    src = BlobStore()
+    src.put("obj", rng.bytes(1_200_000))
+    dsts = {"toy:r1": BlobStore(), "toy:r2": BlobStore()}
+    rep = transfer_objects_multicast(plan, src, dsts, ["obj"],
+                                     chunk_bytes=1 << 17, workers_per_hop=2)
+    assert rep.chunks_missing == 0
+    assert rep.per_edge_bytes and rep.per_edge_seconds
+    # envelope accounting: every byte crossing any hop is counted once
+    assert sum(rep.per_edge_bytes.values()) == rep.bytes_moved
+    tree_edges = {e for t in plan.trees() for e in t.edges()}
+    assert set(rep.per_edge_bytes) <= tree_edges
+    rates = rep.link_gbps()
+    assert rates and all(g > 0 for g in rates.values())
+    bel = BeliefGrid(top)
+    n = bel.observe_link_rates(rates, weight=1.0, t_s=3.0, one_sided=False)
+    assert n == len(rates)
+    for a, b in rates:
+        assert bel.last_obs_t[a, b] == 3.0

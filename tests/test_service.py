@@ -133,8 +133,7 @@ def test_admission_after_faults_plans_on_degraded_view(top):
     plan = late.plan
     # the admission plan respects the degraded 4b row of the dead link
     phi = svc.degraded_links[(s, d)]
-    assert plan.F[s, d] <= phi * top.tput[s, d] * plan.M[s, d] \
-        / top.limit_conn + 1e-6
+    assert plan.F[s, d] <= phi * top.tput[s, d] * plan.M[s, d] / top.limit_conn + 1e-6
 
 
 def test_service_on_reference_simulator(top):
