@@ -49,6 +49,16 @@ HARD_METRICS: dict[str, tuple[str, float, float]] = {
     "multicast/cost_ratio_vs_unicasts": ("lower", 0.10, 0.75),
     "multicast/egress_savings_pct": ("higher", 0.10, 25.0),
     "multicast/replan_struct_builds": ("lower", 0.0, 0.0),
+    # chaos plane: delivered bytes are sacred (zero loss, exact oracle
+    # parity), quarantine/deadline re-plans never re-assemble an LP, the
+    # breaker arm never does worse than the no-breaker baseline on SLO
+    # violations (1.0 = tie, >1 = violations avoided), and quarantining
+    # must not blow up tail latency (p99 within 15% of the baseline)
+    "chaos/lost_chunks": ("lower", 0.0, 0.0),
+    "chaos/parity_mismatches": ("lower", 0.0, 0.0),
+    "chaos/replan_struct_builds": ("lower", 0.0, 0.0),
+    "chaos/slo_gain_vs_no_breaker": ("higher", 0.25, 1.0),
+    "chaos/p99_completion_ratio": ("lower", 0.10, 1.15),
     # probe policies: EVOI must keep earning its LP solves (the combined
     # gate is >= 1 when it clears either acceptance leg; capped at 5, and
     # tolerant relatively — the interesting signal is the absolute floor),

@@ -20,6 +20,7 @@ import traceback
 
 from . import (  # noqa: F401
     calibration_bench,
+    chaos_bench,
     common,
     fig3_grid,
     fig6_transfer_comparison,
@@ -49,6 +50,7 @@ MODULES = {
     "multijob": multijob_bench,
     "multicast": multicast_bench,
     "calibration": calibration_bench,
+    "chaos": chaos_bench,
     "probe_policies": probe_policy_bench,
     "roofline": roofline,
 }

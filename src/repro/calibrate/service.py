@@ -51,7 +51,12 @@ from repro.core.plan import MulticastPlan
 from repro.core.planner import Planner
 from repro.core.topology import GBIT_PER_GB
 from repro.transfer.events import TransferJob
-from repro.transfer.executor import ReplanRecord, ServiceReport, TransferService
+from repro.transfer.executor import (
+    ReplanRecord,
+    ServiceReport,
+    TransferService,
+    _drop_trickle_paths,
+)
 
 from .belief import BeliefGrid, capacity_sample_from_rates
 from .calibrator import Calibrator, ProbeRound
@@ -185,33 +190,17 @@ class CalibratedTransferService(TransferService):
         when calibration is off (the stale baseline trusts its grid)."""
         if not self.calibrate:
             return None
-        phi = self.belief.scale_grid(self.top, z=self.robustness)
+        # deadline shedding may strip the robustness margin for headroom:
+        # z=0 plans on the belief mean instead of its lower bound
+        z = self.robustness if self._replan_z is None else float(self._replan_z)
+        phi = self.belief.scale_grid(self.top, z=max(z, 0.0))
         if (phi >= 1.0 - 1e-9).all():
             return None
         return phi
 
-    @staticmethod
-    def _drop_trickle_paths(plan, frac: float = 0.05):
-        """Drop decomposed paths below ``frac`` of plan throughput and
-        rebuild F. A trickle path over a collapsed link is rational to the
-        LP (the re-plan goal sits at 95% of robust capacity, so the solver
-        scrapes every capped drop) but poisonous to the segmented data
-        plane: its in-flight chunks crawl, and every boundary drain waits
-        for them — a latency tax far above the capacity the path adds."""
-        if isinstance(plan, MulticastPlan):
-            return plan
-        paths = plan.paths()
-        total = sum(f for _, f in paths)
-        keep = [(p, f) for p, f in paths if f >= frac * total]
-        if not keep or len(keep) == len(paths):
-            return plan
-        F = np.zeros_like(plan.F)
-        for p, f in keep:
-            for a, b in zip(p[:-1], p[1:]):
-                F[a, b] += f
-        plan.F = F
-        plan.tput_goal = min(plan.tput_goal, float(F[plan.src, :].sum()))
-        return plan
+    # kept as a staticmethod alias — the implementation moved next to the
+    # deadline-shedding machinery that also needs it
+    _drop_trickle_paths = staticmethod(_drop_trickle_paths)
 
     def _plan_for(self, req, goal, volume_gb, *, vm_caps=None, constrained):
         plan = super()._plan_for(req, goal, volume_gb,
@@ -219,6 +208,13 @@ class CalibratedTransferService(TransferService):
         if self.calibrate and plan.solver_status == "optimal":
             plan = self._drop_trickle_paths(plan)
         return plan
+
+    def _post_replan(self, st) -> None:
+        """Re-plans issued by the shared deadline/quarantine machinery must
+        refresh the drift detector's reference grid like the run loop's
+        own re-plan sites do."""
+        if st.status != "failed":
+            st._assumed = self._assumed_grid(st.plan)
 
     def _assumed_grid(self, plan) -> np.ndarray:
         """Per-link throughput the plan effectively assumed: the epoch grid
@@ -422,11 +418,72 @@ class CalibratedTransferService(TransferService):
                     assumed_gbps=assumed, observed_gbps=obs, source=source,
                 ))
 
+        def breaker_feed(hits, t) -> list[tuple[int, int]]:
+            """Drift detections are the breaker's failure signal here.
+            A link that trips open is quarantined on the planner view and
+            reseeded in the belief at the observed collapsed rate — the
+            regime changed, the old posterior is evidence about nothing."""
+            opened: list[tuple[int, int]] = []
+            if self.breaker is None:
+                return opened
+            for a, b, _assumed, obs in hits:
+                if self.breaker.record_failure((a, b), t):
+                    self._quarantine((a, b))
+                    self.belief.reset_link(a, b, max(obs, 1e-6), t_s=t)
+                    opened.append((a, b))
+            return opened
+
+        def replan_quarantined_users(opened, t) -> None:
+            """Every still-active job riding a just-quarantined link gets
+            its remainder re-planned off it (cached structures — the
+            quarantine is an extra_ub=0 scale cut, not a rebuild)."""
+            for a, b in opened:
+                for i in active_indices():
+                    st = states[i]
+                    g = np.asarray(
+                        st.plan.G if isinstance(st.plan, MulticastPlan)
+                        else st.plan.F
+                    )
+                    if g[a, b] > _FLOW_EPS:
+                        self._replan(st, i, at_s=t, reason="quarantine")
+                        self._post_replan(st)
+
         while segments < self.max_segments:
             act = active_indices()
             if not act:
                 break
             true_now = self.drift.tput_at(now)
+
+            # ---- breaker: quarantined links past their cooldown get a
+            # targeted half-open probe through the calibrator; the
+            # measurement reseeds the belief either way (regime change),
+            # and a healthy link rejoins the plannable topology
+            if (
+                self.calibrate
+                and self.breaker is not None
+                and self.calibrator is not None
+            ):
+                for key in self.breaker.due_half_open(now):
+                    a, b = key
+                    rnd = self.calibrator.run_round(now, true_now, links=[key])
+                    probe_rounds.append(rnd)
+                    trajectory.append((now, rnd.belief_error))
+                    measured = (
+                        rnd.records[0].measured_gbps if rnd.records else 0.0
+                    )
+                    healthy = (
+                        measured
+                        >= self.breaker.config.heal_ratio
+                        * float(np.asarray(self.top.tput)[a, b])
+                    )
+                    self.belief.reset_link(a, b, max(measured, 1e-6), t_s=now)
+                    self.breaker.half_open_result(key, now, healthy)
+                    if healthy:
+                        self._unquarantine(key)
+                        for i in active_indices():
+                            self._replan(states[i], i, at_s=now,
+                                         reason="quarantine")
+                            self._post_replan(states[i])
 
             # ---- probe round: spend the budget where VoI is highest
             if self.calibrate and self.calibrator is not None:
@@ -448,14 +505,17 @@ class CalibratedTransferService(TransferService):
                 samples = {
                     (r.src, r.dst): r.measured_gbps for r in rnd.records
                 }
+                opened: list[tuple[int, int]] = []
                 for i in act:
                     st = states[i]
                     hits = self._probe_drifted_links(st, samples)
                     if hits:
                         note_drift(st, hits, now, "probe")
+                        opened += breaker_feed(hits, now)
                         self._replan(st, i, at_s=now)
                         if st.status != "failed":
                             st._assumed = self._assumed_grid(st.plan)
+                replan_quarantined_users(opened, now)
 
             # ---- one segment on the true topology frozen at `now`
             act = active_indices()
@@ -494,6 +554,7 @@ class CalibratedTransferService(TransferService):
                     g = (st.plan.G if isinstance(st.plan, MulticastPlan)
                          else st.plan.F)
                     agg = agg + np.asarray(g)
+                opened = []
                 for i, jr in zip(act, res.jobs):
                     st = states[i]
                     _, hits = self._harvest(st, jr, t_s=seg_end,
@@ -504,9 +565,14 @@ class CalibratedTransferService(TransferService):
                         and st.remaining_chunks
                     ):
                         note_drift(st, hits, seg_end, "telemetry")
+                        opened += breaker_feed(hits, seg_end)
                         self._replan(st, i, at_s=seg_end)
                         if st.status != "failed":
                             st._assumed = self._assumed_grid(st.plan)
+                replan_quarantined_users(opened, seg_end)
+
+            # ---- deadline SLOs: escalate pressured jobs down the ladder
+            self._deadline_checks(states, seg_end)
 
             # ---- epoch roll: exploit a belief that rose past the epoch
             # grid. Only ever AT a segment boundary (never mid-segment),
@@ -526,6 +592,10 @@ class CalibratedTransferService(TransferService):
             time_s=now,
             segments=segments,
             sim_events=sim_events,
+            quarantines=(
+                list(self.breaker.transitions)
+                if self.breaker is not None else []
+            ),
             probe_rounds=probe_rounds,
             drift_events=drift_events,
             belief_error_trajectory=trajectory,

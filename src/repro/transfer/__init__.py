@@ -5,13 +5,30 @@ from .flowsim_ref import (  # noqa: F401
     simulate_transfer_reference,
 )
 from .events import (  # noqa: F401
+    GrayFailure,
     JobSimResult,
     LinkDegrade,
+    LinkRestore,
     MultiSimResult,
     TransferJob,
     VMFailure,
 )
+from .breaker import (  # noqa: F401
+    BreakerConfig,
+    BreakerTransition,
+    LinkBreaker,
+)
+from .chaos import (  # noqa: F401
+    ChaosScenario,
+    FlappingLink,
+    GrayLink,
+    ProviderBrownout,
+    RegionOutage,
+    compile_archetypes,
+)
 from .executor import (  # noqa: F401
+    BackoffLadder,
+    DegradationLadder,
     ExecutionReport,
     JobReport,
     ReplanRecord,

@@ -8,7 +8,19 @@ The fault-tolerant data plane (ISSUE 2) runs several concurrent
     (compounding: ``factor`` multiplies the *current* rates);
   * ``VMFailure``     — gateway VMs of one job die; their in-flight chunks
     are lost and re-dispatched to the surviving workers of the same stage
-    (chunk-level retry, zero data loss while any worker survives).
+    (chunk-level retry, zero data loss while any worker survives);
+  * ``GrayFailure``   — the chaos plane's silent partial failure: the same
+    rate multiplication as ``LinkDegrade``, but no failure signal — the
+    TransferService never folds it into its degraded view, only telemetry
+    (or a circuit breaker fed by it) can catch the slowdown;
+  * ``LinkRestore``   — visible recovery: the inverse multiplication of an
+    earlier degrade; the service heals its degraded view (capped at full
+    capacity) and circuit breakers read it as the up-edge of a flap.
+
+All three rate events (``RATE_EVENTS``) are executed identically by both
+simulators — a compounding multiply on the affected connections' rates and
+the shared link cap — so the chaos suite's chunk-for-chunk parity holds
+for every archetype ``transfer.chaos`` compiles down to them.
 
 Both the vectorized simulator (``flowsim.simulate_multi``) and the
 object-per-connection oracle (``flowsim_ref.simulate_multi_reference``)
@@ -69,6 +81,41 @@ class LinkDegrade:
 
 
 @dataclasses.dataclass(frozen=True)
+class GrayFailure:
+    """At ``t_s``, the (src, dst) link silently delivers ``factor`` of its
+    current rate. Data-plane effect identical to ``LinkDegrade``; control-
+    plane effect deliberately absent — there is NO failure signal, so the
+    orchestrator keeps planning on the healthy view until telemetry or a
+    breaker notices the shortfall. A silent recovery is another
+    ``GrayFailure`` carrying the inverse factor."""
+
+    t_s: float
+    src: int  # region index
+    dst: int
+    factor: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRestore:
+    """At ``t_s``, the (src, dst) link recovers: rates multiply by
+    ``factor`` (the inverse of an earlier degrade, > 1). Visible to the
+    service — the degraded-topology view heals (capped at full capacity)
+    and circuit breakers read it as the up-edge of a flap."""
+
+    t_s: float
+    src: int  # region index
+    dst: int
+    factor: float
+
+
+# Every event that is a pure rate multiplication on one directed link.
+# BOTH event loops must dispatch on this tuple (not on LinkDegrade alone):
+# a rate event handled by one simulator and not the other breaks the
+# chunk-for-chunk parity the chaos tests pin.
+RATE_EVENTS = (LinkDegrade, GrayFailure, LinkRestore)
+
+
+@dataclasses.dataclass(frozen=True)
 class VMFailure:
     """At ``t_s``, ``count`` gateway VMs of job ``job`` in ``region`` die.
 
@@ -108,6 +155,12 @@ class JobSimResult:
     # under-read links that idled while the job waited on other hops.
     per_edge_active_s: dict | None = None
     per_edge_obs_gb: dict | None = None
+    # connections still carrying a partially-transferred chunk when the sim
+    # ended (0 for completed jobs). A horizon cut restarts these chunks from
+    # scratch in the next segment — the service counts them against the
+    # job's retry budget, same as a gateway re-dispatching a chunk whose
+    # worker died mid-copy.
+    chunks_in_flight: int = 0
 
     @property
     def done(self) -> bool:

@@ -27,7 +27,15 @@ from repro.core.baselines import CloudServiceModel
 from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.planner import Planner
 from repro.core.topology import GBIT_PER_GB, Topology
-from .events import LinkDegrade, TransferJob, VMFailure
+from .breaker import LinkBreaker
+from .events import (
+    T_EPS,
+    GrayFailure,
+    LinkDegrade,
+    LinkRestore,
+    TransferJob,
+    VMFailure,
+)
 from .flowsim import SimResult, simulate_transfer
 
 
@@ -74,7 +82,15 @@ class TransferRequest:
 
     ``dsts`` switches the job to one-to-many replication: the service plans
     a single multicast transfer to every listed destination (``dst`` is
-    ignored) with ``tput_goal_gbps`` as the per-destination floor."""
+    ignored) with ``tput_goal_gbps`` as the per-destination floor.
+
+    ``deadline_s`` (relative to ``arrival_s``) declares a completion SLO:
+    the service sheds work down the :class:`DegradationLadder` under
+    deadline pressure and, at the deadline itself, cuts the job to an
+    explicit partial delivery instead of running late. ``retry_budget``
+    caps chunk retries — exhaustion also ends in a ``"partial"`` report
+    with the delivered byte count intact, never silent loss. Both default
+    to None: no deadline, unlimited retries — exactly today's semantics."""
 
     name: str
     src: str
@@ -84,10 +100,77 @@ class TransferRequest:
     arrival_s: float = 0.0
     chunk_mb: float = 16.0
     dsts: list[str] | None = None
+    deadline_s: float | None = None
+    retry_budget: int | None = None
 
     @property
     def multicast(self) -> bool:
         return self.dsts is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffLadder:
+    """Named goal-backoff schedule for constrained re-plans.
+
+    When a re-plan at the capacity-capped goal is infeasible, the service
+    walks ``factors`` (each a multiplier on that base goal) until a rung
+    solves. The default reproduces the halving ladder the service always
+    had, but as data: benchmarks can pin an aggressive single-rung ladder,
+    tests can enumerate the exact sequence, and ``ReplanRecord.ladder``
+    names which schedule produced each record."""
+
+    name: str = "halving"
+    factors: tuple[float, ...] = (1.0, 0.5, 0.25)
+
+    def goals(self, base_goal: float) -> list[float]:
+        return [base_goal * f for f in self.factors]
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationLadder:
+    """What a deadline-pressured job sheds, in order, before giving up.
+
+    At each segment boundary the service compares the job's ETA (at the
+    more pessimistic of planned and realized throughput) against the time
+    left; when ``eta * pressure`` exceeds it, the job climbs one rung:
+
+      * ``"shed_robustness"`` — re-plan at z=0: stop paying the belief's
+        lower-confidence-bound safety margin for headroom;
+      * ``"shed_trickle"``    — re-plan and drop paths below
+        ``trickle_frac`` of plan throughput: a slow path's in-flight
+        chunks gate every boundary drain, a latency tax a deadline job
+        cannot afford;
+      * ``"partial"``         — stop: report partial delivery now rather
+        than miss the deadline by more.
+
+    Rungs are sticky — every later re-plan of the job keeps the shed."""
+
+    steps: tuple[str, ...] = ("shed_robustness", "shed_trickle", "partial")
+    pressure: float = 1.0  # >1 escalates earlier (safety margin on the ETA)
+    trickle_frac: float = 0.25
+
+
+def _drop_trickle_paths(plan, frac: float = 0.05):
+    """Drop decomposed paths below ``frac`` of plan throughput and
+    rebuild F. A trickle path over a collapsed link is rational to the
+    LP (the re-plan goal sits at 95% of robust capacity, so the solver
+    scrapes every capped drop) but poisonous to the segmented data
+    plane: its in-flight chunks crawl, and every boundary drain waits
+    for them — a latency tax far above the capacity the path adds."""
+    if isinstance(plan, MulticastPlan):
+        return plan
+    paths = plan.paths()
+    total = sum(f for _, f in paths)
+    keep = [(p, f) for p, f in paths if f >= frac * total]
+    if not keep or len(keep) == len(paths):
+        return plan
+    F = np.zeros_like(plan.F)
+    for p, f in keep:
+        for a, b in zip(p[:-1], p[1:]):
+            F[a, b] += f
+    plan.F = F
+    plan.tput_goal = min(plan.tput_goal, float(F[plan.src, :].sum()))
+    return plan
 
 
 @dataclasses.dataclass
@@ -100,6 +183,8 @@ class ReplanRecord:
     plan: TransferPlan
     goal_gbps: float = 0.0  # throughput goal the accepted re-plan ran at
     backoffs: int = 0  # times the goal was backed off before success
+    ladder: str = "halving"  # BackoffLadder.name that produced the goals
+    reason: str = "fault"  # "fault" | "deadline" | "quarantine"
 
     @property
     def reused_structure(self) -> bool:
@@ -116,7 +201,7 @@ class ReplanRecord:
 class JobReport:
     request: TransferRequest
     plan: TransferPlan  # the job's current (possibly re-planned) allocation
-    status: str  # "done" | "stalled" | "failed" | "running"
+    status: str  # "done" | "stalled" | "failed" | "running" | "partial"
     planned_tput_gbps: float
     planned_cost: float
     realized_tput_gbps: float
@@ -125,6 +210,11 @@ class JobReport:
     retried_chunks: int
     contended: bool  # realized tput fell below the contention threshold
     replans: list[ReplanRecord]
+    deadline_met: bool | None = None  # None when no deadline was requested
+    budget_exhausted: bool = False  # retry budget spent -> partial delivery
+    degrade_level: int = 0  # DegradationLadder rungs climbed
+    n_chunks: int = 0  # total chunks the request chunked into
+    delivered_chunks: int = 0  # chunks landed (== n_chunks iff done)
 
     @property
     def tput_ratio(self) -> float:
@@ -134,6 +224,15 @@ class JobReport:
     def cost_ratio(self) -> float:
         return self.realized_cost / max(self.planned_cost, 1e-9)
 
+    @property
+    def lost_chunks(self) -> int:
+        """Chunks neither delivered nor accounted by an explicit partial/
+        failed/stalled/running status. Nonzero means silent loss — the
+        integrity invariant every chaos scenario must keep at zero."""
+        if self.status != "done":
+            return 0  # undelivered remainder is explicit, not lost
+        return self.n_chunks - self.delivered_chunks
+
 
 @dataclasses.dataclass
 class ServiceReport:
@@ -141,6 +240,8 @@ class ServiceReport:
     time_s: float
     segments: int
     sim_events: int
+    # breaker audit trail: every open/half-open/close transition
+    quarantines: list = dataclasses.field(default_factory=list)
 
     @property
     def replans(self) -> list[ReplanRecord]:
@@ -149,6 +250,22 @@ class ServiceReport:
     @property
     def all_done(self) -> bool:
         return all(j.status == "done" for j in self.jobs)
+
+    @property
+    def partial_jobs(self) -> list[JobReport]:
+        return [j for j in self.jobs if j.status == "partial"]
+
+    @property
+    def slo_violations(self) -> int:
+        """Jobs that requested a deadline and missed it (late or partial)."""
+        return sum(1 for j in self.jobs if j.deadline_met is False)
+
+    @property
+    def slo_violation_rate(self) -> float:
+        with_slo = [j for j in self.jobs if j.request.deadline_s is not None]
+        if not with_slo:
+            return 0.0
+        return sum(1 for j in with_slo if j.deadline_met is False) / len(with_slo)
 
 
 @dataclasses.dataclass
@@ -165,6 +282,8 @@ class _JobState:
     retried_chunks: int = 0
     finished_at: float | None = None
     status: str = "queued"
+    degrade_level: int = 0  # DegradationLadder rungs climbed so far
+    budget_exhausted: bool = False
     replans: list = dataclasses.field(default_factory=list)
     # multicast: cumulative chunks per destination region (capped at
     # n_chunks) — a full destination drops out of the next re-plan's goals,
@@ -217,17 +336,35 @@ class TransferService:
         backend: str = "jax",
         max_relays: int = 10,
         contention_ratio: float = 0.5,
+        backoff_ladder: BackoffLadder | None = None,
+        degradation: DegradationLadder | None = None,
+        breaker: LinkBreaker | None = None,
     ):
         self.top = top
         self.backend = backend
         self.planner = Planner(top, max_relays=max_relays)
         self.contention_ratio = contention_ratio
+        self.backoff_ladder = (
+            backoff_ladder if backoff_ladder is not None else BackoffLadder()
+        )
+        self.degradation = degradation
+        self.breaker = breaker
         self._queue: list[TransferRequest] = []
         # degraded-topology view, accumulated across faults. Link health is
         # physical and shared by every tenant; VM loss is per job (job 0's
         # dead gateways say nothing about job 1's quota in that region).
         self.degraded_links: dict[tuple[int, int], float] = {}
         self.vm_caps_by_job: dict[int, dict[int, float]] = {}
+        # gray view: rate multipliers the service does NOT know about —
+        # GrayFailures fold here so the simulator keeps feeling them across
+        # segment boundaries while plans stay blissfully on the healthy view
+        self._gray: dict[tuple[int, int], float] = {}
+        # link health stashed while the breaker quarantines it (the view
+        # pins at 0.0; degrades/restores keep compounding on the shadow)
+        self._pre_quarantine: dict[tuple[int, int], float] = {}
+        # deadline-shedding state, set around re-plans of degraded jobs
+        self._replan_z: float | None = None
+        self._replan_trickle: float | None = None
 
     def submit(self, req: TransferRequest) -> TransferRequest:
         self._queue.append(req)
@@ -257,13 +394,20 @@ class TransferService:
                 vm_caps=vm_caps if constrained else None,
                 tput_scale=scale,
             )
-        return self.planner.plan_cost_min(
+        plan = self.planner.plan_cost_min(
             req.src, req.dst, float(goal), volume_gb,
             backend="numpy" if constrained else self.backend,
             degraded_links=self.degraded_links if constrained else None,
             vm_caps=vm_caps if constrained else None,
             tput_scale=scale,
         )
+        if (
+            self._replan_trickle is not None
+            and plan.solver_status == "optimal"
+        ):
+            # deadline shedding: a pressured job refuses slow paths
+            plan = _drop_trickle_paths(plan, self._replan_trickle)
+        return plan
 
     def _capacity(self, req: TransferRequest, *, vm_caps=None) -> float:
         scale = self._plan_scale()
@@ -303,40 +447,55 @@ class TransferService:
         st.status = "planned" if plan.solver_status == "optimal" else "failed"
         return st
 
-    def _replan(self, st: _JobState, job_ix: int, at_s: float) -> None:
+    def _replan(
+        self, st: _JobState, job_ix: int, at_s: float, reason: str = "fault"
+    ) -> None:
         req = st.req
         vm_caps = self.vm_caps_by_job.get(job_ix, {})
         t0 = time.perf_counter()
         builds0 = milp.N_STRUCT_BUILDS
-        cap = self._capacity(req, vm_caps=vm_caps)
-        if cap <= 1e-9:
-            st.status = "failed"
-            return
-        goal = min(req.tput_goal_gbps, cap * 0.95)
-        # A non-optimal constrained solve does not mean the job is dead: a
-        # lower throughput goal may still be feasible on the degraded
-        # topology. Back the goal off before declaring failure; the record
-        # keeps the degraded SLO visible.
-        plan, backoffs = None, 0
-        for backoff in range(3):
-            g = goal * (0.5 ** backoff)
-            # the record reports the LAST goal actually attempted, whether
-            # or not it was accepted
-            goal, backoffs = g, backoff
-            if req.multicast:
-                goals = [
-                    0.0 if st.dst_done(self.top.index(d)) else g
-                    for d in req.dsts
-                ]
-                if not any(goals):
-                    return  # every branch already delivered in full
-                g_try = goals
-            else:
-                g_try = g
-            plan = self._plan_for(req, g_try, st.remaining_gb,
-                                  vm_caps=vm_caps, constrained=True)
-            if plan.solver_status == "optimal":
-                break
+        # deadline-pressure shedding is sticky: every re-plan of a degraded
+        # job keeps the rungs it has climbed (z=0 / trickle-free plans)
+        climbed: tuple[str, ...] = ()
+        if self.degradation is not None and st.degrade_level > 0:
+            climbed = self.degradation.steps[: st.degrade_level]
+        self._replan_z = 0.0 if "shed_robustness" in climbed else None
+        self._replan_trickle = (
+            self.degradation.trickle_frac
+            if "shed_trickle" in climbed else None
+        )
+        try:
+            cap = self._capacity(req, vm_caps=vm_caps)
+            if cap <= 1e-9:
+                st.status = "failed"
+                return
+            base_goal = min(req.tput_goal_gbps, cap * 0.95)
+            # A non-optimal constrained solve does not mean the job is
+            # dead: a lower throughput goal may still be feasible on the
+            # degraded topology. Walk the backoff ladder before declaring
+            # failure; the record keeps the degraded SLO visible.
+            goal, plan, backoffs = base_goal, None, 0
+            for backoff, g in enumerate(self.backoff_ladder.goals(base_goal)):
+                # the record reports the LAST goal actually attempted,
+                # whether or not it was accepted
+                goal, backoffs = g, backoff
+                if req.multicast:
+                    goals = [
+                        0.0 if st.dst_done(self.top.index(d)) else g
+                        for d in req.dsts
+                    ]
+                    if not any(goals):
+                        return  # every branch already delivered in full
+                    g_try = goals
+                else:
+                    g_try = g
+                plan = self._plan_for(req, g_try, st.remaining_gb,
+                                      vm_caps=vm_caps, constrained=True)
+                if plan.solver_status == "optimal":
+                    break
+        finally:
+            self._replan_z = None
+            self._replan_trickle = None
         rec = ReplanRecord(
             job=req.name,
             at_s=at_s,
@@ -346,6 +505,8 @@ class TransferService:
             plan=plan,
             goal_gbps=goal,
             backoffs=backoffs,
+            ladder=self.backoff_ladder.name,
+            reason=reason,
         )
         st.replans.append(rec)
         if plan.solver_status == "optimal":
@@ -353,21 +514,95 @@ class TransferService:
         else:
             st.status = "failed"
 
-    def _sim_faults(self) -> list[LinkDegrade]:
-        """The degraded-topology view as t=0 events for the simulator."""
-        return [
+    def _post_replan(self, st: _JobState) -> None:
+        """Hook for subclasses to refresh per-plan caches after a re-plan
+        issued outside their own run loop (deadline/quarantine paths)."""
+
+    # ------------------------------------------------------- chaos policies
+    def _quarantine(self, key: tuple[int, int]) -> None:
+        """Open-breaker quarantine: pin the link's degraded-view factor to
+        0.0 — the planner turns that into ``extra_ub = 0`` rows on the
+        CACHED structures, so no plan can route a byte over it and no
+        constraint matrix is re-assembled. The link's real health keeps
+        compounding on a shadow entry for when the breaker closes."""
+        self._pre_quarantine[key] = self.degraded_links.get(key, 1.0)
+        self.degraded_links[key] = 0.0
+
+    def _unquarantine(self, key: tuple[int, int]) -> None:
+        phi = self._pre_quarantine.pop(key, 1.0)
+        if phi >= 1.0 - 1e-9:
+            self.degraded_links.pop(key, None)
+        else:
+            self.degraded_links[key] = phi
+
+    def _deadline_checks(self, states: list[_JobState], now: float) -> None:
+        """At a segment boundary, escalate deadline-pressured jobs one rung
+        down the degradation ladder — or cut them to partial delivery at
+        the deadline itself. Jobs without a deadline are never touched."""
+        for i, st in enumerate(states):
+            if st.req.deadline_s is None:
+                continue
+            if st.status not in ("planned", "running") or not st.remaining_chunks:
+                continue
+            time_left = st.req.arrival_s + st.req.deadline_s - now
+            if time_left <= T_EPS:
+                # the deadline has passed with chunks outstanding: an
+                # explicit partial delivery beats an unbounded overrun
+                st.status = "partial"
+                continue
+            if self.degradation is None:
+                continue
+            rate = max(float(st.plan.throughput), 1e-9)
+            elapsed = now - st.req.arrival_s
+            if st.delivered_chunks > 0 and elapsed > T_EPS:
+                realized = st.delivered_chunks * st.chunk_gbit / elapsed
+                rate = min(rate, max(realized, 1e-9))
+            eta = st.remaining_chunks * st.chunk_gbit / rate
+            if eta * self.degradation.pressure <= time_left:
+                continue
+            if st.degrade_level >= len(self.degradation.steps):
+                continue
+            st.degrade_level += 1
+            step = self.degradation.steps[st.degrade_level - 1]
+            if step == "partial":
+                st.status = "partial"
+            else:
+                self._replan(st, i, at_s=now, reason="deadline")
+                self._post_replan(st)
+
+    def _sim_faults(self) -> list:
+        """The degraded + gray views as t=0 events for the simulator. The
+        gray entries re-inject the silent slowdowns the service does not
+        know about — both fold to the same rate multiply in the sim, the
+        split only matters to the control plane."""
+        evs: list = [
             LinkDegrade(t_s=0.0, src=a, dst=b, factor=phi)
             for (a, b), phi in self.degraded_links.items()
         ]
+        evs += [
+            GrayFailure(t_s=0.0, src=a, dst=b, factor=g)
+            for (a, b), g in self._gray.items()
+        ]
+        return evs
 
-    def _fold_segment(self, active: list[_JobState], res, now: float) -> None:
+    def _fold_segment(
+        self, active: list[_JobState], res, now: float, *,
+        restart: bool = False,
+    ) -> None:
         """Fold one simulated segment's per-job results into job state
-        (delivered/remaining chunks, realized cost, retries, status)."""
+        (delivered/remaining chunks, realized cost, retries, status).
+
+        ``restart=True`` marks a segment cut at a fault boundary: chunks
+        in flight at the cut restart from scratch under the next plan, so
+        they count against the job's retry budget — the fluid analogue of
+        the gateway re-dispatching chunks whose worker died mid-copy."""
         for st, jr in zip(active, res.jobs):
             st.delivered_chunks += jr.chunks_delivered
             st.remaining_chunks -= jr.chunks_delivered
             st.realized_cost += jr.total_cost
             st.retried_chunks += jr.retried_chunks
+            if restart and jr.status == "running":
+                st.retried_chunks += jr.chunks_in_flight
             if jr.per_dst_delivered:
                 for d, cnt in jr.per_dst_delivered.items():
                     st.delivered_by_dst[d] = min(
@@ -383,6 +618,15 @@ class TransferService:
                 st.status = "stalled"
             elif jr.status == "running":
                 st.status = "running"
+            if (
+                st.req.retry_budget is not None
+                and st.retried_chunks > st.req.retry_budget
+                and st.remaining_chunks > 0
+            ):
+                # budget exhausted with chunks outstanding: explicit
+                # partial delivery, delivered count intact — never silent
+                st.status = "partial"
+                st.budget_exhausted = True
 
     def _job_reports(self, states: list[_JobState], now: float) -> list[JobReport]:
         """Final per-job reports from terminal (or horizon-cut) job state."""
@@ -395,6 +639,15 @@ class TransferService:
             status = st.status
             if status == "planned":  # never simulated (no active segment)
                 status = "queued"
+            if st.req.deadline_s is None:
+                deadline_met = None
+            else:
+                deadline_met = (
+                    status == "done"
+                    and st.finished_at is not None
+                    and st.finished_at - st.req.arrival_s
+                    <= st.req.deadline_s + 1e-9
+                )
             reports.append(JobReport(
                 request=st.req,
                 plan=st.plan,
@@ -411,6 +664,11 @@ class TransferService:
                     < self.contention_ratio * st.planned_tput0
                 ),
                 replans=st.replans,
+                deadline_met=deadline_met,
+                budget_exhausted=st.budget_exhausted,
+                degrade_level=st.degrade_level,
+                n_chunks=st.n_chunks,
+                delivered_chunks=st.delivered_chunks,
             ))
         return reports
 
@@ -426,16 +684,29 @@ class TransferService:
         """Plan, execute and (on faults) re-plan every submitted job.
 
         ``faults`` are service-level events (events.LinkDegrade /
-        events.VMFailure with absolute times); ``sim`` overrides the
-        simulator entry point (defaults to flowsim.simulate_multi — the
-        reference oracle drops in for cross-checks)."""
+        events.LinkRestore / events.GrayFailure / events.VMFailure with
+        absolute times); ``sim`` overrides the simulator entry point
+        (defaults to flowsim.simulate_multi — the reference oracle drops
+        in for cross-checks).
+
+        Visible events segment the timeline and fold into the degraded
+        view (re-planning affected jobs); GrayFailures are SILENT — they
+        reach the simulator so the data plane feels them, but never the
+        planner's view, never a segment boundary, never a re-plan. That
+        asymmetry is the whole gray-failure story: only telemetry (or a
+        breaker fed by it) can catch what the control plane cannot see."""
         from .flowsim import simulate_multi
 
         sim = sim or simulate_multi
         states = [self._admit(r) for r in self._queue]
-        boundaries = sorted({float(f.t_s) for f in faults})
+        visible = [f for f in faults if not isinstance(f, GrayFailure)]
+        silent = sorted(
+            (f for f in faults if isinstance(f, GrayFailure)),
+            key=lambda f: f.t_s,
+        )
+        boundaries = sorted({float(f.t_s) for f in visible})
         by_time: dict[float, list] = {}
-        for f in faults:
+        for f in visible:
             by_time.setdefault(float(f.t_s), []).append(f)
 
         now = 0.0
@@ -443,6 +714,22 @@ class TransferService:
         segments = 0
         seg_end = 0.0
         for seg, boundary in enumerate(boundaries + [None]):
+            # gray events already behind us compound into the gray view
+            # (re-injected at t=0 each segment); upcoming ones within this
+            # segment ride along at sim-relative times
+            while silent and silent[0].t_s < now - T_EPS:
+                f = silent.pop(0)
+                key = (f.src, f.dst)
+                g = self._gray.get(key, 1.0) * f.factor
+                if abs(g - 1.0) <= 1e-9:
+                    self._gray.pop(key, None)  # silent recovery healed it
+                else:
+                    self._gray[key] = g
+            seg_silent = [
+                dataclasses.replace(f, t_s=max(f.t_s - now, 0.0))
+                for f in silent
+                if boundary is None or f.t_s < boundary - T_EPS
+            ]
             active = [
                 st for st in states
                 if st.status in ("planned", "running") and st.remaining_chunks
@@ -459,14 +746,15 @@ class TransferService:
                     for st in active
                 ]
                 res = sim(
-                    sim_jobs, self._sim_faults(),
+                    sim_jobs, self._sim_faults() + seg_silent,
                     horizon_s=None if boundary is None else boundary - now,
                     seed=seed + 101 * seg,
                     link_capacity_scale=link_capacity_scale,
                     **sim_kwargs,
                 )
                 sim_events += res.events
-                self._fold_segment(active, res, now)
+                self._fold_segment(active, res, now,
+                                   restart=boundary is not None)
                 seg_end = now + res.time_s
             else:
                 seg_end = now
@@ -484,23 +772,87 @@ class TransferService:
                 now = seg_end
                 break
             now = boundary
+
+            # ---- breaker: cooldowns that elapsed by this boundary get
+            # their half-open health check (the base service's stand-in
+            # probe: did a visible restore arrive since the open?)
+            if self.breaker is not None:
+                for key in self.breaker.due_half_open(now):
+                    healthy = self.breaker.restore_seen(key)
+                    self.breaker.half_open_result(key, now, healthy)
+                    if healthy:
+                        self._unquarantine(key)
+                        for i, st in enumerate(states):
+                            if (
+                                st.status in ("planned", "running")
+                                and st.remaining_chunks
+                            ):
+                                self._replan(st, i, at_s=now,
+                                             reason="quarantine")
+                                self._post_replan(st)
+
             # ---- fold the fault(s) into the degraded-topology view
             affected: set[int] = set()
+
+            def _mark_users(src: int, dst: int) -> None:
+                for i, st in enumerate(states):
+                    # a multicast job rides the link iff its envelope
+                    # does (the bytes actually on the wire)
+                    used = (
+                        st.plan.G[src, dst]
+                        if isinstance(st.plan, MulticastPlan)
+                        else st.plan.F[src, dst]
+                    )
+                    if used > 1e-9:
+                        affected.add(i)
+
             for f in by_time[boundary]:
                 if isinstance(f, LinkDegrade):
                     key = (f.src, f.dst)
-                    self.degraded_links[key] = (
-                        self.degraded_links.get(key, 1.0) * f.factor
+                    quarantined = (
+                        self.breaker is not None
+                        and self.breaker.is_quarantined(key)
                     )
-                    for i, st in enumerate(states):
-                        # a multicast job rides the link iff its envelope
-                        # does (the bytes actually on the wire)
-                        used = (
-                            st.plan.G[f.src, f.dst]
-                            if isinstance(st.plan, MulticastPlan)
-                            else st.plan.F[f.src, f.dst]
+                    if quarantined:
+                        # the view stays pinned at 0.0; health compounds
+                        # on the shadow for when the breaker closes
+                        self._pre_quarantine[key] = (
+                            self._pre_quarantine.get(key, 1.0) * f.factor
                         )
-                        if used > 1e-9:
+                    else:
+                        self.degraded_links[key] = (
+                            self.degraded_links.get(key, 1.0) * f.factor
+                        )
+                        _mark_users(f.src, f.dst)
+                    if self.breaker is not None:
+                        if self.breaker.record_failure(key, now) and (
+                            not quarantined
+                        ):
+                            self._quarantine(key)
+                            _mark_users(f.src, f.dst)
+                elif isinstance(f, LinkRestore):
+                    key = (f.src, f.dst)
+                    if (
+                        self.breaker is not None
+                        and self.breaker.is_quarantined(key)
+                    ):
+                        self._pre_quarantine[key] = min(
+                            self._pre_quarantine.get(key, 1.0) * f.factor,
+                            1.0,
+                        )
+                        self.breaker.note_restore(key, now)
+                    else:
+                        phi = min(
+                            self.degraded_links.get(key, 1.0) * f.factor, 1.0
+                        )
+                        if phi >= 1.0 - 1e-9:
+                            self.degraded_links.pop(key, None)
+                        else:
+                            self.degraded_links[key] = phi
+                        # restored capacity is worth re-optimizing for —
+                        # every active job may want the healed link back
+                        # (the no-breaker baseline's trap under flapping)
+                        for i, st in enumerate(states):
                             affected.add(i)
                 elif isinstance(f, VMFailure):
                     caps = self.vm_caps_by_job.setdefault(f.job, {})
@@ -514,9 +866,17 @@ class TransferService:
                 st = states[i]
                 if st.status in ("planned", "running") and st.remaining_chunks:
                     self._replan(st, i, at_s=boundary)
+                    self._post_replan(st)
+
+            # ---- deadline SLOs: escalate pressured jobs down the ladder
+            self._deadline_checks(states, now)
 
         self._queue = []
         return ServiceReport(
             jobs=self._job_reports(states, now), time_s=now,
             segments=segments, sim_events=sim_events,
+            quarantines=(
+                list(self.breaker.transitions)
+                if self.breaker is not None else []
+            ),
         )

@@ -565,7 +565,7 @@ def simulate_multi(
 
     def apply_due():
         nonlocal ptr, last_active
-        from .events import LinkDegrade, VMFailure
+        from .events import RATE_EVENTS, VMFailure
 
         while ptr < len(sched) and sched[ptr][0] <= now + T_EPS:
             ev = sched[ptr][2]
@@ -577,7 +577,11 @@ def simulate_multi(
                 for ch in range(int(su.n_chunks[ev])):
                     for s0 in firsts[int(su.chunk_path[ev][ch])]:
                         ready[s0].append(ch)
-            elif isinstance(ev, LinkDegrade):
+            elif isinstance(ev, RATE_EVENTS):
+                # LinkDegrade / GrayFailure / LinkRestore: one compounding
+                # multiply on the link's connection rates and shared cap —
+                # gray-vs-visible is a control-plane distinction, the data
+                # plane feels them all the same way
                 on_edge = np.array(
                     [e == (ev.src, ev.dst) for e in su.edges_used], dtype=bool
                 )
@@ -781,5 +785,8 @@ def simulate_multi(
             per_dst_delivered=per_dst,
             per_edge_active_s=per_edge_active_s,
             per_edge_obs_gb=per_edge_obs_gb,
+            chunks_in_flight=int(np.count_nonzero(
+                (su.conn_job == j) & (chunk_arr >= 0)
+            )),
         ))
     return MultiSimResult(jobs=out, time_s=now, events=events)

@@ -444,7 +444,7 @@ def simulate_multi_reference(
     vectorized loop must reproduce its per-job delivered-chunk counts
     exactly (``exec_top`` included: the believed/true grid split changes
     rates, not materialization order)."""
-    from .events import T_EPS, JobSimResult, LinkDegrade, MultiSimResult
+    from .events import RATE_EVENTS, T_EPS, JobSimResult, MultiSimResult
     from .events import VMFailure, materialize_jobs, sorted_schedule
     from repro.core.plan import MulticastPlan
 
@@ -495,7 +495,9 @@ def simulate_multi_reference(
                 for ch in range(int(su.n_chunks[ev])):
                     for s0 in firsts[int(su.chunk_path[ev][ch])]:
                         ready[s0].append(ch)
-            elif isinstance(ev, LinkDegrade):
+            elif isinstance(ev, RATE_EVENTS):
+                # same compounding multiply as the vectorized loop — gray
+                # or visible, the data plane cannot tell them apart
                 want = (
                     su.edges_used.index((ev.src, ev.dst))
                     if (ev.src, ev.dst) in su.edges_used
@@ -672,5 +674,8 @@ def simulate_multi_reference(
             status=status,
             per_edge_gb=per_edge_gb,
             per_dst_delivered=per_dst,
+            chunks_in_flight=sum(
+                1 for c in conns if c.job == j and c.chunk >= 0
+            ),
         ))
     return MultiSimResult(jobs=out, time_s=now, events=events)

@@ -29,13 +29,31 @@ instead of (path id, hop).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import queue
+import random
 import threading
 import time
+import warnings
 from pathlib import Path
 
 from repro.core.plan import MulticastPlan, TransferPlan
 from .chunk import Chunk, checksum, chunk_manifest, chunk_object
+
+
+def _retry_delay(attempt: int, base_s: float, cap_s: float,
+                 rng: random.Random) -> float:
+    """Exponential backoff with seeded jitter for chunk re-dispatch.
+
+    ``base_s * 2**(attempt-1)`` capped at ``cap_s``, scaled by a uniform
+    jitter in [0.5, 1.5) so simultaneous failures (a killed worker drops
+    its whole queue) do not re-dispatch as one synchronized thundering
+    herd onto the next path. Deterministic given the rng's seed; attempt
+    0 (first dispatch) never waits."""
+    if attempt <= 0 or base_s <= 0.0:
+        return 0.0
+    delay = min(base_s * (2.0 ** (attempt - 1)), cap_s)
+    return delay * (0.5 + rng.random())
 
 
 class ObjectStore:
@@ -190,6 +208,7 @@ class GatewayReport:
     faults_injected: int = 0
     objects_skipped: int = 0  # already present + verified at the destination
     chunks_missing: int = 0  # gave up after max_attempts (0 == zero loss)
+    workers_leaked: int = 0  # threads still alive after the shutdown join
     # passive telemetry for the calibration plane: per region-pair edge,
     # bytes that crossed the hop and the wall-clock window they crossed in
     per_edge_bytes: dict | None = None  # (a, b) -> bytes
@@ -237,6 +256,9 @@ def transfer_objects(
     max_attempts: int = 5,
     stall_timeout_s: float = 1.0,
     resume: bool = True,
+    retry_backoff_s: float = 0.01,
+    retry_backoff_cap_s: float = 0.25,
+    seed: int = 0,
 ) -> GatewayReport:
     """Move objects src->dst along the plan's decomposed paths.
 
@@ -261,6 +283,8 @@ def transfer_objects(
             relay_buffer_chunks=relay_buffer_chunks, verify=verify,
             fault_injector=fault_injector, max_attempts=max_attempts,
             stall_timeout_s=stall_timeout_s, resume=resume,
+            retry_backoff_s=retry_backoff_s,
+            retry_backoff_cap_s=retry_backoff_cap_s, seed=seed,
         )
     paths = plan.paths()
     if not paths:
@@ -395,27 +419,48 @@ def transfer_objects(
                 if all(live[(pid, h)] > 0 for h in range(len(path) - 1))
             ]
 
+    def dispatch(ch: Chunk, attempt: int) -> None:
+        if ch.id in verified:
+            return  # a duplicate copy already landed: nothing to do
+        if attempt > max_attempts:
+            dead.add(ch.id)
+            return
+        targets = alive_paths()
+        if not targets:
+            dead.add(ch.id)
+            return
+        with lock:
+            retried[0] += 1
+        pid = targets[rr[0] % len(targets)]
+        rr[0] += 1
+        attempts[ch.id] = max(attempts.get(ch.id, 0), attempt)
+        first_qs[pid].put((ch, attempt))
+
     def feeder():
+        # exponential backoff with seeded jitter: re-dispatches wait on a
+        # due-time heap instead of sleeping inline, so one backed-off chunk
+        # never delays another's (shorter) retry
+        rng = random.Random(seed)
+        pending: list = []  # (due monotonic time, tiebreak, chunk, attempt)
+        tick = 0
         while not done_event.is_set():
+            timeout = 0.05
+            if pending:
+                timeout = max(min(timeout, pending[0][0] - time.monotonic()),
+                              0.0)
             try:
-                ch, attempt = retry_q.get(timeout=0.05)
+                ch, attempt = retry_q.get(timeout=timeout)
+                delay = _retry_delay(attempt, retry_backoff_s,
+                                     retry_backoff_cap_s, rng)
+                tick += 1
+                heapq.heappush(
+                    pending, (time.monotonic() + delay, tick, ch, attempt)
+                )
             except queue.Empty:
-                continue
-            if ch.id in verified:
-                continue  # a duplicate copy already landed: nothing to do
-            if attempt > max_attempts:
-                dead.add(ch.id)
-                continue
-            targets = alive_paths()
-            if not targets:
-                dead.add(ch.id)
-                continue
-            with lock:
-                retried[0] += 1
-            pid = targets[rr[0] % len(targets)]
-            rr[0] += 1
-            attempts[ch.id] = max(attempts.get(ch.id, 0), attempt)
-            first_qs[pid].put((ch, attempt))
+                pass
+            while pending and pending[0][0] <= time.monotonic():
+                _, _, ch, attempt = heapq.heappop(pending)
+                dispatch(ch, attempt)
 
     feeder_t = threading.Thread(target=feeder, daemon=True)
     feeder_t.start()
@@ -480,6 +525,19 @@ def transfer_objects(
     feeder_t.join(timeout=2.0)
     for t in threads:
         t.join(timeout=2.0)
+    # a worker blocked inside a store call (hung disk/network read) survives
+    # the bounded join: it is a real leak until its syscall returns. Count
+    # and surface it — silent thread leaks poison long-lived processes.
+    leaked = sum(1 for t in threads if t.is_alive()) + (
+        1 if feeder_t.is_alive() else 0
+    )
+    if leaked:
+        warnings.warn(
+            f"gateway shutdown leaked {leaked} worker thread(s) still "
+            "blocked after the 2s join (likely stuck in a store call)",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
     missing = len(all_chunks) - len(verified)
     return GatewayReport(
@@ -494,6 +552,7 @@ def transfer_objects(
         else fault_injector.faults_injected,
         objects_skipped=skipped,
         chunks_missing=missing,
+        workers_leaked=leaked,
         per_edge_bytes=dict(edge_bytes),
         per_edge_seconds={
             e: max(edge_t1[e] - edge_t0[e], 1e-9) for e in edge_bytes
@@ -512,6 +571,7 @@ class MulticastGatewayReport:
     retried_chunks: int
     faults_injected: int
     per_tree_chunks: dict  # tree id -> chunks initially binned to it
+    workers_leaked: int = 0  # threads still alive after the shutdown join
     # passive telemetry, same shape as the unicast report: per tree-edge
     # region pair, envelope bytes that crossed it (each chunk once, however
     # many destinations it serves downstream) and the active window
@@ -556,6 +616,9 @@ def transfer_objects_multicast(
     max_attempts: int = 5,
     stall_timeout_s: float = 1.0,
     resume: bool = True,
+    retry_backoff_s: float = 0.01,
+    retry_backoff_cap_s: float = 0.25,
+    seed: int = 0,
 ) -> MulticastGatewayReport:
     """Replicate objects to every destination of a multicast plan.
 
@@ -771,27 +834,47 @@ def transfer_objects_multicast(
 
     rr = [0]
 
+    def dispatch(ch: Chunk, attempt: int, d: int) -> None:
+        if (d, ch.id) not in needed or (d, ch.id) in verified:
+            return  # not owed / already landed: nothing to do
+        if attempt > max_attempts:
+            dead.add((d, ch.id))
+            return
+        routes = alive_routes(d)
+        if not routes:
+            dead.add((d, ch.id))
+            return
+        with lock:
+            retried[0] += 1
+        tid, _ = routes[rr[0] % len(routes)]
+        rr[0] += 1
+        attempts[(d, ch.id)] = max(attempts.get((d, ch.id), 0), attempt)
+        stages[path_stages[(tid, d)][0]].q.put((ch, None, attempt, d))
+
     def feeder():
+        # same heap-scheduled exponential backoff as the unicast feeder —
+        # per-(dest, chunk) re-dispatches jittered off a shared seeded rng
+        rng = random.Random(seed)
+        pending: list = []  # (due time, tiebreak, chunk, attempt, dest)
+        tick = 0
         while not done_event.is_set():
+            timeout = 0.05
+            if pending:
+                timeout = max(min(timeout, pending[0][0] - time.monotonic()),
+                              0.0)
             try:
-                ch, attempt, d = retry_q.get(timeout=0.05)
+                ch, attempt, d = retry_q.get(timeout=timeout)
+                delay = _retry_delay(attempt, retry_backoff_s,
+                                     retry_backoff_cap_s, rng)
+                tick += 1
+                heapq.heappush(
+                    pending, (time.monotonic() + delay, tick, ch, attempt, d)
+                )
             except queue.Empty:
-                continue
-            if (d, ch.id) not in needed or (d, ch.id) in verified:
-                continue  # not owed / already landed: nothing to do
-            if attempt > max_attempts:
-                dead.add((d, ch.id))
-                continue
-            routes = alive_routes(d)
-            if not routes:
-                dead.add((d, ch.id))
-                continue
-            with lock:
-                retried[0] += 1
-            tid, _ = routes[rr[0] % len(routes)]
-            rr[0] += 1
-            attempts[(d, ch.id)] = max(attempts.get((d, ch.id), 0), attempt)
-            stages[path_stages[(tid, d)][0]].q.put((ch, None, attempt, d))
+                pass
+            while pending and pending[0][0] <= time.monotonic():
+                _, _, ch, attempt, d = heapq.heappop(pending)
+                dispatch(ch, attempt, d)
 
     feeder_t = threading.Thread(target=feeder, daemon=True)
     feeder_t.start()
@@ -846,6 +929,16 @@ def transfer_objects_multicast(
     feeder_t.join(timeout=2.0)
     for t in threads:
         t.join(timeout=2.0)
+    leaked = sum(1 for t in threads if t.is_alive()) + (
+        1 if feeder_t.is_alive() else 0
+    )
+    if leaked:
+        warnings.warn(
+            f"multicast gateway shutdown leaked {leaked} worker thread(s) "
+            "still blocked after the 2s join (likely stuck in a store call)",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
     per_dest = {}
     for d in dests:
@@ -869,6 +962,7 @@ def transfer_objects_multicast(
         faults_injected=0 if fault_injector is None
         else fault_injector.faults_injected,
         per_tree_chunks=per_tree_count,
+        workers_leaked=leaked,
         per_edge_bytes=dict(edge_bytes),
         per_edge_seconds={
             e: max(edge_t1[e] - edge_t0[e], 1e-9) for e in edge_bytes

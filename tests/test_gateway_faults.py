@@ -1,5 +1,8 @@
 """Gateway fault tolerance: chunk retry, checksummed resume, DirStore."""
 
+import random
+import threading
+
 import numpy as np
 import pytest
 
@@ -11,6 +14,7 @@ from repro.transfer import (
     transfer_objects,
 )
 from repro.transfer.chunk import chunk_manifest
+from repro.transfer.gateway import _retry_delay
 
 
 @pytest.fixture(scope="module")
@@ -130,3 +134,67 @@ def test_gateway_through_dirstore_roundtrip(toy_plan, tmp_path):
     assert rep.checksum_failures == 0 and rep.chunks_missing == 0
     for k in keys:
         assert dst.get(k) == src.get(k)
+
+
+def test_retry_delay_backoff_shape_and_determinism():
+    """Exponential, capped, jittered in [0.5, 1.5), seeded: the same seed
+    replays the same delays, attempt 0 (first dispatch) never waits."""
+    assert _retry_delay(0, 0.01, 0.25, random.Random(1)) == 0.0
+    assert _retry_delay(3, 0.0, 0.25, random.Random(1)) == 0.0
+    rng = random.Random(7)
+    seen = [_retry_delay(a, 0.01, 0.25, rng) for a in range(1, 12)]
+    for a, d in enumerate(seen, start=1):
+        nominal = min(0.01 * 2.0 ** (a - 1), 0.25)
+        assert 0.5 * nominal <= d < 1.5 * nominal
+    assert max(seen) < 1.5 * 0.25  # the cap really binds deep attempts
+    replay = random.Random(7)
+    assert seen == [
+        _retry_delay(a, 0.01, 0.25, replay) for a in range(1, 12)
+    ]
+
+
+class _OneHangStore(BlobStore):
+    """Serves normally except the FIRST get_range call, which blocks until
+    released — a hung disk/network read holding its worker thread hostage."""
+
+    def __init__(self):
+        super().__init__()
+        self._lock = threading.Lock()
+        self._hung = False
+        self.release = threading.Event()
+
+    def get_range(self, key, offset, length):
+        # manifest checksumming reads from the main thread: only a gateway
+        # worker's read may hang, and only the first one
+        if threading.current_thread() is not threading.main_thread():
+            with self._lock:
+                hang, self._hung = not self._hung, True
+            if hang:
+                self.release.wait()
+        return super().get_range(key, offset, length)
+
+
+def test_gateway_counts_leaked_workers_and_still_delivers(toy_plan):
+    """Satellite: a worker stuck in a store call survives the bounded
+    shutdown join — the report counts it, a RuntimeWarning surfaces it,
+    and stall re-dispatch still lands every byte."""
+    rng = np.random.default_rng(3)
+    src = _OneHangStore()
+    keys = []
+    for i in range(3):
+        k = f"shard/{i:03d}.npy"
+        src.put(k, rng.bytes(600_000))
+        keys.append(k)
+    dst = BlobStore()
+    try:
+        with pytest.warns(RuntimeWarning, match="leaked"):
+            rep = transfer_objects(
+                toy_plan, src, dst, keys, chunk_bytes=1 << 17,
+                workers_per_hop=3, stall_timeout_s=0.2,
+            )
+    finally:
+        src.release.set()  # let the hostage thread exit after the test
+    assert rep.workers_leaked >= 1
+    assert rep.chunks_missing == 0 and rep.checksum_failures == 0
+    for k in keys:
+        assert dst.get(k) == src.get(k)  # zero loss despite the leak
