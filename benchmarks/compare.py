@@ -66,6 +66,14 @@ HARD_METRICS: dict[str, tuple[str, float, float]] = {
     "probe_policies/evoi_gate": ("higher", 0.50, 1.0),
     "probe_policies/epoch_rolls": ("lower", 0.0, 2.0),
     "probe_policies/epoch_roll_struct_builds": ("lower", 0.0, 8.0),
+    # fleet control plane: consolidating N tenants onto one shared belief
+    # must not cost aggregate throughput, must amortize the probe budget
+    # (per-tenant spend <= 0.7x the isolated arms'), and fleet re-plans
+    # ride cached structures like everything else
+    "fleet/agg_tput_ratio_vs_isolated": ("higher", 0.25, 1.0),
+    "fleet/p99_job_latency_ratio": ("lower", 0.25, 1.1),
+    "fleet/probe_cost_per_tenant_ratio": ("lower", 0.25, 0.7),
+    "fleet/replan_struct_builds": ("lower", 0.0, 0.0),
 }
 
 

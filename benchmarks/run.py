@@ -28,6 +28,7 @@ from . import (  # noqa: F401
     fig8_bottlenecks,
     fig9_microbench,
     fig10_overlay_vs_vms,
+    fleet_bench,
     flowsim_bench,
     multicast_bench,
     multijob_bench,
@@ -51,6 +52,7 @@ MODULES = {
     "multicast": multicast_bench,
     "calibration": calibration_bench,
     "chaos": chaos_bench,
+    "fleet": fleet_bench,
     "probe_policies": probe_policy_bench,
     "roofline": roofline,
 }

@@ -36,7 +36,7 @@ from repro.calibrate import (  # noqa: E402
     DriftModel,
     Incident,
 )
-from repro.core import Planner, default_topology  # noqa: E402
+from repro.core import PlanSpec, Planner, default_topology  # noqa: E402
 from repro.transfer import TransferRequest  # noqa: E402
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
@@ -55,9 +55,10 @@ def main():
 
     # Scenario: the TRUE topology drifts slowly everywhere, and the stale
     # plan's primary edge suffers a step-change incident mid-transfer.
-    stale_primary = Planner(top, max_relays=6).plan_cost_min(
-        SRC, DST, GOAL_GBPS, VOLUME_GB
-    )
+    stale_primary = Planner(top, max_relays=6).plan(PlanSpec(
+        objective="cost_min", src=SRC, dst=DST,
+        tput_goal_gbps=GOAL_GBPS, volume_gb=VOLUME_GB,
+    ))
     a, b = np.unravel_index(int(np.argmax(stale_primary.F)),
                             stale_primary.F.shape)
     keys = top.keys()

@@ -19,7 +19,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import Planner, default_topology, toy_topology  # noqa: E402
+from repro.core import PlanSpec, Planner, default_topology, toy_topology  # noqa: E402
 from repro.transfer import (  # noqa: E402
     BlobStore,
     FaultInjector,
@@ -66,7 +66,10 @@ def control_plane_demo():
 def data_plane_demo():
     print("=== data plane: real bytes through a killed gateway worker ===")
     top = toy_topology(n=5, seed=2)
-    plan = Planner(top, max_relays=3).plan_cost_min("toy:r0", "toy:r1", 2.0, 0.02)
+    plan = Planner(top, max_relays=3).plan(PlanSpec(
+        objective="cost_min", src="toy:r0", dst="toy:r1",
+        tput_goal_gbps=2.0, volume_gb=0.02,
+    ))
     rng = np.random.default_rng(7)
     src_store, dst_store = BlobStore(), BlobStore()
     keys = []

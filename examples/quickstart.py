@@ -11,7 +11,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import dataclasses  # noqa: E402
 
-from repro.core import Planner, default_topology, direct_plan  # noqa: E402
+from repro.core import PlanSpec, Planner, default_topology, direct_plan  # noqa: E402
 from repro.transfer import execute_plan  # noqa: E402
 
 
@@ -31,16 +31,20 @@ def main():
           f"at ${direct.cost_per_gb:.4f}/GB")
 
     # ----- Skyplane mode 2: maximize throughput under a 1.25x price ceiling
-    plan = planner.plan_tput_max(
-        src, dst, cost_ceiling_per_gb=direct.cost_per_gb * 1.25,
+    plan = planner.plan(PlanSpec(
+        objective="tput_max", src=src, dst=dst,
+        cost_ceiling_per_gb=direct.cost_per_gb * 1.25,
         volume_gb=volume_gb,
-    )
+    ))
     print(plan.describe())
     print(f"-> {plan.throughput / direct.throughput:.2f}x faster for "
           f"{plan.cost_per_gb / direct.cost_per_gb:.2f}x the price")
 
     # ----- Skyplane mode 1: cheapest plan that sustains 20 Gbps
-    cheap = planner.plan_cost_min(src, dst, 20.0, volume_gb)
+    cheap = planner.plan(PlanSpec(
+        objective="cost_min", src=src, dst=dst,
+        tput_goal_gbps=20.0, volume_gb=volume_gb,
+    ))
     print(f"cost-min @20Gbps: ${cheap.cost_per_gb:.4f}/GB "
           f"({cheap.throughput:.1f} Gbps planned)")
 

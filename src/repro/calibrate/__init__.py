@@ -10,7 +10,11 @@ closes the measure→believe→plan→observe loop around the transfer service
 (``service.CalibratedTransferService`` — including epoch rolls that
 re-pin the planner's grid when the belief rises past it)."""
 
-from .belief import BeliefGrid, capacity_sample_from_rates  # noqa: F401
+from .belief import (  # noqa: F401
+    BeliefGrid,
+    BeliefSnapshot,
+    capacity_sample_from_rates,
+)
 from .calibrator import (  # noqa: F401
     Calibrator,
     ProbeBudget,
@@ -34,3 +38,27 @@ from .service import (  # noqa: F401
     DriftEvent,
     EpochRoll,
 )
+
+__all__ = [
+    "POLICY_NAMES",
+    "BayesianEVOIPolicy",
+    "BeliefGrid",
+    "BeliefSnapshot",
+    "CalibratedServiceReport",
+    "CalibratedTransferService",
+    "Calibrator",
+    "DriftEvent",
+    "DriftModel",
+    "EpochRoll",
+    "EpsilonGreedyPolicy",
+    "GreedyVoIPolicy",
+    "Incident",
+    "PolicyContext",
+    "ProbeBudget",
+    "ProbePolicy",
+    "ProbeRecord",
+    "ProbeRound",
+    "RoundRobinPolicy",
+    "capacity_sample_from_rates",
+    "make_policy",
+]

@@ -29,12 +29,61 @@ or a [V, V] array for full control.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core.profiles import prior_rel_sigma_grid
 from repro.core.topology import Topology
 
 _EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class BeliefSnapshot:
+    """An immutable, epoch-versioned read view of a ``BeliefGrid``.
+
+    The fleet control plane shares ONE live belief across many tenant
+    services; a tenant planning a cohort must not see the grid move under
+    it mid-decision (another tenant's probe landing between its scale-cut
+    computation and its admission would make the two inconsistent).
+    ``BeliefGrid.snapshot()`` copies the sufficient statistics and stamps
+    them with ``version`` (bumped on every fold/reset) and ``epoch`` —
+    readers check ``grid.version != snap.version`` to know their view is
+    stale, writers never block."""
+
+    base: Topology
+    mean: np.ndarray
+    count: np.ndarray
+    m2: np.ndarray
+    min_tput: float
+    version: int
+    epoch: int
+    taken_t: float | None = None
+
+    def stderr(self) -> np.ndarray:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            var = np.where(self.count > 0,
+                           self.m2 / np.maximum(self.count, _EPS), 0.0)
+        return np.sqrt(np.maximum(var, 0.0)) / np.sqrt(
+            np.maximum(self.count, 1.0)
+        )
+
+    def lower_bound(self, z: float = 1.5) -> np.ndarray:
+        lb = self.mean - float(z) * self.stderr()
+        return np.where(self.mean > 0, np.maximum(lb, self.min_tput), 0.0)
+
+    def scale_grid(
+        self, epoch_top: Topology, z: float = 1.5, floor: float = 0.02
+    ) -> np.ndarray:
+        ref = np.asarray(epoch_top.tput, dtype=float)
+        lb = self.lower_bound(z)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            phi = np.where(ref > 0, lb / np.maximum(ref, _EPS), 1.0)
+        return np.clip(phi, float(floor), 1.0)
+
+    def believed_topology(self) -> Topology:
+        return self.base.with_tput(self.mean)
 
 
 class BeliefGrid:
@@ -72,6 +121,12 @@ class BeliefGrid:
         )
         self.min_tput = float(min_tput)
         self.observations = 0
+        # concurrency story for shared (fleet) beliefs: version bumps on
+        # every mutation, epoch on every planner re-anchoring (the
+        # calibrated service's epoch roll) — snapshot() readers compare
+        # both to detect staleness without ever blocking a writer
+        self.version = 0
+        self.epoch = 0
         # when each link was last measured: the stale profile counts as one
         # very old measurement, so probe targeting (staleness-aware scores)
         # sweeps every candidate before re-visiting
@@ -97,6 +152,7 @@ class BeliefGrid:
         if t_s is not None:
             self.last_obs_t[src, dst] = float(t_s)
         self.observations += 1
+        self.version += 1
 
     def reset_link(
         self,
@@ -127,6 +183,7 @@ class BeliefGrid:
         if t_s is not None:
             self.last_obs_t[src, dst] = float(t_s)
         self.observations += 1
+        self.version += 1
 
     def observe_adaptive(
         self,
@@ -216,6 +273,30 @@ class BeliefGrid:
         return float(observed_gbps) < self.mean[src, dst] - band
 
     # ------------------------------------------------------- planner-facing
+    def snapshot(self, t_s: float | None = None) -> BeliefSnapshot:
+        """Epoch-versioned immutable read view — what a fleet tenant plans
+        against while other tenants keep folding probes into the live
+        grid. Copies the sufficient statistics (O(V^2), cheap next to one
+        LP solve); see ``BeliefSnapshot``."""
+        return BeliefSnapshot(
+            base=self.base,
+            mean=self.mean.copy(),
+            count=self.count.copy(),
+            m2=self.m2.copy(),
+            min_tput=self.min_tput,
+            version=self.version,
+            epoch=self.epoch,
+            taken_t=t_s,
+        )
+
+    def roll_epoch(self) -> int:
+        """Mark a planner re-anchoring (the calibrated service's epoch
+        roll): bumps ``epoch`` so shared-belief readers can tell a mere
+        mean drift from a re-based planning grid."""
+        self.epoch += 1
+        self.version += 1
+        return self.epoch
+
     def believed_topology(self) -> Topology:
         """A fresh Topology carrying the belief mean — the planner's epoch
         grid (copy-on-write; caches start clean on the new instance)."""

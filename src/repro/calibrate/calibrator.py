@@ -69,6 +69,9 @@ class ProbeRound:
     duration_s: float  # probes run concurrently: the slowest one
     belief_error: float | None = None  # vs-true error AFTER the round
     policy: str = ""  # scheduling policy that ranked this round
+    deduped: int = 0  # candidates skipped as freshly measured (fleet
+    # cross-tenant amortization: another tenant's probe already landed
+    # inside the dedup window)
 
     @property
     def n_probes(self) -> int:
@@ -88,6 +91,7 @@ class Calibrator:
         staleness_halflife_s: float = 30.0,
         seed: int = 0,
         policy: ProbePolicy | str | None = None,
+        dedup_window_s: float = 0.0,
     ):
         self.belief = belief
         self.budget = budget or ProbeBudget()
@@ -96,6 +100,24 @@ class Calibrator:
         self.noise_sigma = float(noise_sigma)
         self.on_plan_bonus = float(on_plan_bonus)
         self.staleness_halflife_s = float(staleness_halflife_s)
+        # cross-tenant probe dedup (the fleet's shared profiler): a
+        # candidate whose belief entry was measured within the window —
+        # by ANY tenant sharing this calibrator — is skipped this round,
+        # amortizing probe $ across the fleet. 0 disables (per-service
+        # calibrators keep the historical behavior, including same-
+        # timestamp targeted rounds).
+        self.dedup_window_s = float(dedup_window_s)
+        # when each link was last ACTIVELY probed (passive telemetry does
+        # not count: a throttled link looks freshly-observed every segment,
+        # and deduping — or staleness-ranking — against that would skip
+        # exactly the saturating probe that could expose the drift). Kept
+        # both as a dict (dedup lookups) and as a grid handed to policies
+        # so their staleness terms age links by probe time, not by the
+        # last allocation-shaped telemetry sample.
+        self.last_probe_t: dict[tuple[int, int], float] = {}
+        self._probe_t_grid = np.full_like(
+            np.asarray(belief.mean, dtype=float), -np.inf
+        )
         self._rng = np.random.default_rng(seed)
         # the greedy scorer stays available (score_links) even when another
         # policy schedules the rounds — diagnostics and ε-greedy reuse it
@@ -147,7 +169,7 @@ class Calibrator:
         scheduling the rounds."""
         ctx = PolicyContext(
             belief=self.belief, t_s=float(t_s), budget=self.budget,
-            plans=tuple(plans),
+            plans=tuple(plans), last_probe_t=self._probe_t_grid,
         )
         return self._greedy.score(list(links), ctx)
 
@@ -169,6 +191,10 @@ class Calibrator:
         candidates; the Calibrator takes them in rank order while the
         round's dollar / second / count budget holds, then folds every
         measurement into the belief."""
+        # dedup applies to the broad VoI sweeps only: an explicitly
+        # targeted round (breaker half-open, drift confirmation) exists to
+        # get a FRESH saturating measurement and always runs
+        targeted = links is not None
         if links is None:
             if planner is None:
                 raise ValueError("need either links= or planner+contexts")
@@ -177,6 +203,7 @@ class Calibrator:
         ctx = PolicyContext(
             belief=self.belief, t_s=float(t_s), budget=self.budget,
             planner=planner, contexts=tuple(contexts), plans=tuple(plans),
+            last_probe_t=self._probe_t_grid,
         )
         order = np.asarray(self.policy.rank(list(links), ctx), dtype=np.int64)
 
@@ -184,12 +211,18 @@ class Calibrator:
         records: list[ProbeRecord] = []
         spent_usd = 0.0
         longest = 0.0
+        deduped = 0
         for i in order:
             if len(records) >= self.budget.max_probes_per_round:
                 break
             a, b = links[int(i)]
             truth = float(true_tput[a, b])
             if truth <= 0:
+                continue
+            if (not targeted and self.dedup_window_s > 0.0
+                    and self.last_probe_t.get((int(a), int(b)), -np.inf)
+                    >= float(t_s) - self.dedup_window_s):
+                deduped += 1
                 continue
             measured = truth
             if self.noise_sigma > 0:
@@ -225,6 +258,8 @@ class Calibrator:
             self.belief.observe_adaptive(r.src, r.dst, r.measured_gbps,
                                          weight=self.probe_weight,
                                          t_s=float(t_s))
+            self.last_probe_t[(r.src, r.dst)] = float(t_s)
+            self._probe_t_grid[r.src, r.dst] = float(t_s)
         # convergence metric scoped to the links the calibrator can act on
         # (the candidate set): global grid error is dominated by links no
         # plan could ever use and no budget could ever probe
@@ -236,6 +271,7 @@ class Calibrator:
             cost_usd=spent_usd, duration_s=longest,
             belief_error=self.belief.error_vs(true_tput, mask=mask),
             policy=getattr(self.policy, "name", type(self.policy).__name__),
+            deduped=deduped,
         )
         self.rounds.append(rnd)
         return rnd

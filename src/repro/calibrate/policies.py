@@ -41,6 +41,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core.spec import PlanSpec
+
 from .belief import BeliefGrid
 
 
@@ -67,6 +69,23 @@ class PolicyContext:
     planner: object | None = None
     contexts: tuple = ()  # (src, dst) or (src, [dsts]) planner keys
     plans: tuple = ()  # current TransferPlan / MulticastPlan objects
+    # when each link was last ACTIVELY probed (grid, -inf = never). The
+    # belief's own last_obs_t is refreshed by passive telemetry every
+    # segment, so ranking staleness on it starves exactly the plan's
+    # load-bearing links: allocation-shaped telemetry keeps them looking
+    # fresh while proving nothing about capacity (it is one-sided — see
+    # ``capacity_sample_from_rates``). Only a saturating probe re-earns
+    # capacity confidence, so policies age links against this stamp when
+    # the round's Calibrator provides it.
+    last_probe_t: np.ndarray | None = None
+
+    @property
+    def probe_age_t(self) -> np.ndarray:
+        """Per-link active-probe age stamps: ``last_probe_t`` when the
+        Calibrator supplied them, else the belief's passive stamps."""
+        if self.last_probe_t is not None:
+            return self.last_probe_t
+        return self.belief.last_obs_t
 
 
 @runtime_checkable
@@ -103,7 +122,17 @@ def greedy_voi_scores(
     hours, so confidence must be re-earned), plan-carrying links
     boosted by their share of the plan's flow, and everything weighted
     toward links with real capacity (a 0.1 Gbps alternate is worth
-    less than a 5 Gbps trunk at equal uncertainty)."""
+    less than a 5 Gbps trunk at equal uncertainty).
+
+    The staleness term SATURATES at one halflife: past that the stamp is
+    simply old, and what still separates candidates is uncertainty, plan
+    relevance, and capacity — not how much older than stale each stamp
+    is. Unbounded aging turns the score into a pure never-probed sweep
+    (every unprobed zero-flow alternate outranks every probed link by
+    orders of magnitude), which starves re-confirmation of the drifting
+    flow-carrying trunks the plans actually depend on until the full
+    candidate set has been swept once — tens of rounds on a real
+    subgraph, far longer than links stay trustworthy."""
     belief = ctx.belief
     unc = belief.rel_uncertainty()
     mean = belief.mean
@@ -116,13 +145,13 @@ def greedy_voi_scores(
         if peak > 0:
             flow = np.maximum(flow, np.asarray(grid) / peak)
     age = np.clip(
-        float(ctx.t_s) - belief.last_obs_t, 0.0, None
-    )  # inf for never-measured links (the stale prior is ancient)
+        float(ctx.t_s) - ctx.probe_age_t, 0.0, None
+    )  # inf for never-probed links (the stale prior is ancient)
     stale = np.where(np.isfinite(age), age / staleness_halflife_s, 1e9)
     out = np.empty(len(links))
     for i, (a, b) in enumerate(links):
         out[i] = (
-            (unc[a, b] + 0.05 * min(stale[a, b], 1e6))
+            (unc[a, b] + 0.05 * min(stale[a, b], 1.0))
             * (1.0 + on_plan_bonus * flow[a, b])
             * np.sqrt(max(mean[a, b], 0.0))
         )
@@ -166,11 +195,11 @@ class GreedyVoIPolicy:
 class RoundRobinPolicy:
     """Least-recently-measured sweep.
 
-    Ranking is by the belief's ``last_obs_t`` stamp (never-measured
-    links, stamped ``-inf``, lead), ties broken by stable candidate
-    order. Probing a link moves its stamp to *now* and sends it to the
-    back of the queue, so successive rounds cycle through the full
-    candidate set — a round-robin over a stable set, and a guarantee no
+    Ranking is by the last-active-probe stamp (never-probed links,
+    stamped ``-inf``, lead), ties broken by stable candidate order.
+    Probing a link moves its stamp to *now* and sends it to the back of
+    the queue, so successive rounds cycle through the full candidate
+    set — a round-robin over a stable set, and a guarantee no
     score-driven policy gives: every candidate's staleness is bounded by
     (candidate count / probes per round) rounds."""
 
@@ -179,7 +208,7 @@ class RoundRobinPolicy:
     def rank(
         self, links: list[tuple[int, int]], ctx: PolicyContext
     ) -> np.ndarray:
-        last = ctx.belief.last_obs_t
+        last = ctx.probe_age_t
         stamps = np.array([last[a, b] for a, b in links])
         return np.lexsort((np.arange(len(links)), stamps))
 
@@ -296,15 +325,18 @@ class BayesianEVOIPolicy:
         )
 
     def _phi_eff(
-        self, belief: BeliefGrid, top, t_s: float
+        self, belief: BeliefGrid, top, t_s: float,
+        probe_age_t: np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """(phi_lcb_eff, phi_mean): the scale grids the EVOI resolves.
 
         phi_lcb_eff is the belief's z-LCB scale with the drift prior
-        folded in — sigma inflated by measurement age — so the regret a
-        stale link causes grows until a probe re-earns its confidence."""
+        folded in — sigma inflated by time since the last ACTIVE probe
+        (passive telemetry cannot re-earn capacity confidence) — so the
+        regret a stale link causes grows until a probe re-confirms it."""
         phi_mean = belief.scale_grid(top, z=0.0)
-        age = np.clip(float(t_s) - belief.last_obs_t, 0.0, None)
+        stamps = probe_age_t if probe_age_t is not None else belief.last_obs_t
+        age = np.clip(float(t_s) - stamps, 0.0, None)
         with np.errstate(invalid="ignore"):
             growth = np.where(
                 np.isfinite(age),
@@ -349,13 +381,15 @@ class BayesianEVOIPolicy:
         for (src, dst), plan in zip(contexts, paired):
             caps = self._vm_caps(plan) if plan is not None else None
             if isinstance(dst, (list, tuple)):
-                total += planner.max_multicast_throughput(
-                    src, list(dst), vm_caps=caps, tput_scale=phi
-                )
+                total += planner.plan(PlanSpec(
+                    objective="max_throughput", src=src, dsts=tuple(dst),
+                    vm_caps=caps, tput_scale=phi,
+                ))
             else:
-                total += planner.max_throughput(
-                    src, dst, vm_caps=caps, tput_scale=phi
-                )
+                total += planner.plan(PlanSpec(
+                    objective="max_throughput", src=src, dst=dst,
+                    vm_caps=caps, tput_scale=phi,
+                ))
         return total
 
     def rank(
@@ -367,7 +401,9 @@ class BayesianEVOIPolicy:
             return np.argsort(-pre, kind="stable")
         belief = ctx.belief
         top = planner.top
-        phi_lcb, phi_mean = self._phi_eff(belief, top, ctx.t_s)
+        phi_lcb, phi_mean = self._phi_eff(
+            belief, top, ctx.t_s, probe_age_t=ctx.last_probe_t
+        )
         gaps = np.array([phi_mean[a, b] - phi_lcb[a, b] for a, b in links])
         # links carrying plan flow take the FRONT of the eval budget (they
         # are where regret lives, even right after a confirming probe

@@ -119,6 +119,29 @@ class CalibratedServiceReport(ServiceReport):
     def epoch_roll_builds(self) -> int:
         return sum(r.structure_builds for r in self.epoch_rolls)
 
+    kind = "calibrated_service"
+    _summary_keys = ("jobs", "time_s", "delivered_gb", "probe_cost_usd",
+                     "drift_events", "epoch_rolls")
+
+    def _payload(self) -> dict:
+        d = super()._payload()
+        d.update({
+            "probe_rounds": len(self.probe_rounds),
+            "probe_cost_usd": self.probe_cost_usd,
+            "probe_seconds": self.probe_seconds,
+            "probes_deduped": sum(
+                getattr(r, "deduped", 0) for r in self.probe_rounds
+            ),
+            "drift_events": len(self.drift_events),
+            "epoch_rolls": len(self.epoch_rolls),
+            "epoch_roll_builds": self.epoch_roll_builds,
+            "belief_error_final": (
+                self.belief_error_trajectory[-1][1]
+                if self.belief_error_trajectory else None
+            ),
+        })
+        return d
+
 
 class CalibratedTransferService(TransferService):
     """TransferService planning on a belief, executing on a drift model.
@@ -181,6 +204,12 @@ class CalibratedTransferService(TransferService):
         self.calibrator = calibrator if calibrator is not None else (
             Calibrator(self.belief, policy=policy) if self.calibrate else None
         )
+        # contention-masked links _harvest flagged for a targeted
+        # confirmation probe at the next boundary: oversubscription scales
+        # the telemetry expectation down, so a capacity collapse hiding
+        # under the mask is invisible to passive sampling — only a
+        # saturating probe can tell contention from drift there
+        self._confirm_links: set[tuple[int, int]] = set()
 
     # --------------------------------------------------------------- planning
     def _plan_scale(self) -> np.ndarray | None:
@@ -257,6 +286,7 @@ class CalibratedTransferService(TransferService):
         roll record (drift re-plans before and after stay zero-build).
         The roll's re-plans live on the roll, not in ``JobReport.replans``."""
         builds0 = milp.N_STRUCT_BUILDS
+        self.belief.roll_epoch()
         self.top = self.belief.believed_topology()
         planner = Planner(self.top, max_relays=self.planner.max_relays)
         planner.belief = self.belief
@@ -278,6 +308,21 @@ class CalibratedTransferService(TransferService):
         )
 
     # ----------------------------------------------------------------- checks
+    def _probe_focus(self, states, act):
+        """(contexts, plans) the boundary's VoI sweep should rank over.
+
+        The base service sweeps every active job's candidate subgraph.
+        The fleet controller overrides this with a rotating per-tenant
+        focus so one default-sized round concentrates on one tenant's
+        links instead of diluting across the union."""
+        ctxs = [
+            (states[i].req.src, states[i].req.dsts)
+            if states[i].req.multicast
+            else (states[i].req.src, states[i].req.dst)
+            for i in act
+        ]
+        return ctxs, [states[i].plan for i in act]
+
     def _probe_drifted_links(
         self, st, samples: dict[tuple[int, int], float]
     ) -> list[tuple[int, int, float, float]]:
@@ -343,7 +388,14 @@ class CalibratedTransferService(TransferService):
                 )
                 agg = float(agg_grid[a, b])
                 if agg > cap_now > 0.0:
-                    expected *= cap_now / agg  # known contention, not drift
+                    # known contention, not drift — but a link that ALSO
+                    # underdelivers against its unmasked expectation may be
+                    # collapsing underneath the oversubscription. Passive
+                    # telemetry cannot tell (the mask absorbs the shortfall);
+                    # flag it for a targeted saturating probe next boundary.
+                    if observed < self.drift_ratio * expected:
+                        self._confirm_links.add((a, b))
+                    expected *= cap_now / agg
             sample = capacity_sample_from_rates(
                 observed, expected,
                 n_vms=max(float(np.round(plan.N[a])), 1.0),
@@ -391,8 +443,7 @@ class CalibratedTransferService(TransferService):
         sim = sim or simulate_multi
         if link_capacity_scale is None:
             link_capacity_scale = self.link_capacity_scale
-        states = [self._admit(r) for r in self._queue]
-        self._queue = []
+        states = self._admit_queue()
         for st in states:
             st._assumed = self._assumed_grid(st.plan)
 
@@ -487,24 +538,37 @@ class CalibratedTransferService(TransferService):
 
             # ---- probe round: spend the budget where VoI is highest
             if self.calibrate and self.calibrator is not None:
+                samples: dict[tuple[int, int], float] = {}
+                if self._confirm_links:
+                    # targeted confirmation of contention-masked links (one
+                    # or two links, not a sweep): the mask scaled their
+                    # telemetry expectation down, so a collapse hiding under
+                    # oversubscription never trips the passive detector —
+                    # a saturating probe settles contention-vs-drift.
+                    # Targeted rounds bypass the dedup window by design.
+                    crnd = self.calibrator.run_round(
+                        now, true_now, links=sorted(self._confirm_links),
+                    )
+                    self._confirm_links.clear()
+                    probe_rounds.append(crnd)
+                    trajectory.append((now, crnd.belief_error))
+                    samples.update({
+                        (r.src, r.dst): r.measured_gbps for r in crnd.records
+                    })
+                ctxs, cplans = self._probe_focus(states, act)
                 rnd = self.calibrator.run_round(
                     now, true_now,
                     planner=self.planner,
-                    contexts=[
-                        (states[i].req.src, states[i].req.dsts)
-                        if states[i].req.multicast
-                        else (states[i].req.src, states[i].req.dst)
-                        for i in act
-                    ],
-                    plans=[states[i].plan for i in act],
+                    contexts=ctxs,
+                    plans=cplans,
                 )
                 probe_rounds.append(rnd)
                 trajectory.append((now, rnd.belief_error))
                 # probe-driven drift: a probed plan link measured far below
                 # what the plan assumed re-plans BEFORE the segment runs
-                samples = {
+                samples.update({
                     (r.src, r.dst): r.measured_gbps for r in rnd.records
-                }
+                })
                 opened: list[tuple[int, int]] = []
                 for i in act:
                     st = states[i]
@@ -545,6 +609,14 @@ class CalibratedTransferService(TransferService):
             sim_events += res.events
             self._fold_segment(active, res, now)
             seg_end = now + res.time_s
+            if res.time_s <= 1e-9:
+                # every admitted job is still ahead of its arrival: jump
+                # the clock to the next arrival instead of spinning the
+                # segment counter at a frozen `now`
+                pending = [st.req.arrival_s for st in active
+                           if st.req.arrival_s > now + 1e-9]
+                if pending:
+                    seg_end = min(pending)
             boundaries.append(seg_end)
 
             # ---- feedback: telemetry -> belief -> drift -> re-plan
@@ -555,10 +627,16 @@ class CalibratedTransferService(TransferService):
                          else st.plan.F)
                     agg = agg + np.asarray(g)
                 opened = []
+                drifted_links: set[tuple[int, int]] = set()
+                replanned: set[int] = set()
                 for i, jr in zip(act, res.jobs):
                     st = states[i]
                     _, hits = self._harvest(st, jr, t_s=seg_end,
                                             agg_grid=agg)
+                    if hits:
+                        drifted_links.update(
+                            (a, b) for a, b, _, _ in hits
+                        )
                     if (
                         hits
                         and st.status in ("planned", "running")
@@ -567,8 +645,33 @@ class CalibratedTransferService(TransferService):
                         note_drift(st, hits, seg_end, "telemetry")
                         opened += breaker_feed(hits, seg_end)
                         self._replan(st, i, at_s=seg_end)
+                        replanned.add(i)
                         if st.status != "failed":
                             st._assumed = self._assumed_grid(st.plan)
+                # a convicted link re-routes EVERY plan riding it — a
+                # co-tenant's telemetry may have been masked by known
+                # contention, or its harvest ran after the first job's
+                # change-point reset moved the belief onto the collapse
+                for a, b in drifted_links:
+                    for i in active_indices():
+                        if i in replanned:
+                            continue
+                        st = states[i]
+                        g = np.asarray(
+                            st.plan.G
+                            if isinstance(st.plan, MulticastPlan)
+                            else st.plan.F
+                        )
+                        if g[a, b] > _FLOW_EPS:
+                            note_drift(
+                                st,
+                                [(a, b, float(st._assumed[a, b]),
+                                  float(self.belief.mean[a, b]))],
+                                seg_end, "telemetry-shared",
+                            )
+                            self._replan(st, i, at_s=seg_end)
+                            replanned.add(i)
+                            self._post_replan(st)
                 replan_quarantined_users(opened, seg_end)
 
             # ---- deadline SLOs: escalate pressured jobs down the ladder

@@ -14,6 +14,7 @@ from pathlib import Path
 
 from repro.core.plan import MulticastPlan
 from repro.core.planner import Planner
+from repro.core.spec import PlanSpec
 from repro.core.topology import Topology
 from repro.transfer.gateway import (
     DirStore,
@@ -82,17 +83,19 @@ def replicate_checkpoint(
     planner = Planner(top, max_relays=max_relays)
 
     if cost_ceiling_per_gb is not None:
-        plan = planner.plan_multicast_tput_max(
-            src_region, dst_regions, cost_ceiling_per_gb, volume_gb
-        )
+        plan = planner.plan(PlanSpec(
+            objective="tput_max", src=src_region, dsts=tuple(dst_regions),
+            cost_ceiling_per_gb=cost_ceiling_per_gb, volume_gb=volume_gb,
+        ))
     else:
-        goal = (
-            tput_floor_gbps
-            or planner.max_multicast_throughput(src_region, dst_regions) * 0.5
-        )
-        plan = planner.plan_multicast_cost_min(
-            src_region, dst_regions, goal, volume_gb
-        )
+        goal = tput_floor_gbps or planner.plan(PlanSpec(
+            objective="max_throughput", src=src_region,
+            dsts=tuple(dst_regions),
+        )) * 0.5
+        plan = planner.plan(PlanSpec(
+            objective="cost_min", src=src_region, dsts=tuple(dst_regions),
+            tput_goal_gbps=goal, volume_gb=volume_gb,
+        ))
 
     gw = transfer_objects_multicast(
         plan, src_store, dst_stores, keys

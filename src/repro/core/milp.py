@@ -123,24 +123,45 @@ def _scale_cut_rows(
     tput_e: np.ndarray,
     limit_conn: float,
     edge_scale: np.ndarray,
-    agg_cap: float | None,
+    agg_cap: float | np.ndarray | None,
     tol: float,
 ) -> list[tuple[np.ndarray, float]]:
     """Shared body of the unicast/multicast ``scale_cuts``: per edge with
     phi < 1, a tightened 4b row (flow column k vs M column m_col + k) and,
-    with ``agg_cap``, an aggregate interconnect row."""
+    with ``agg_cap``, an aggregate interconnect row.
+
+    ``agg_cap`` is a scalar (data-plane capacity factor: aggregate rows
+    only where phi < 1, since an uncapped healthy link never binds) or a
+    per-edge array (per-tenant fair-share caps: an aggregate row for EVERY
+    edge with a finite entry, even healthy ones — a tenant's share of a
+    contended link binds regardless of drift). Non-finite array entries
+    mean "this edge is not share-capped"."""
     cuts: list[tuple[np.ndarray, float]] = []
     coef = tput_e / limit_conn
+    agg_arr = None
+    if agg_cap is not None and np.ndim(agg_cap) > 0:
+        agg_arr = np.asarray(agg_cap, dtype=float)
+        if agg_arr.shape != tput_e.shape:
+            raise ValueError(
+                f"per-edge agg_cap must have shape {tput_e.shape}, "
+                f"got {agg_arr.shape}"
+            )
     for k in np.flatnonzero(edge_scale < 1.0 - tol):
         phi = float(edge_scale[k])
         row = np.zeros(nx)
         row[k] = 1.0
         row[m_col + k] = -phi * coef[k]
         cuts.append((row, 0.0))
-        if agg_cap is not None:
+        if agg_cap is not None and agg_arr is None:
             agg = np.zeros(nx)
             agg[k] = 1.0
             cuts.append((agg, phi * float(tput_e[k]) * float(agg_cap)))
+    if agg_arr is not None:
+        for k in np.flatnonzero(np.isfinite(agg_arr)):
+            phi = min(float(edge_scale[k]), 1.0)
+            agg = np.zeros(nx)
+            agg[k] = 1.0
+            cuts.append((agg, phi * float(tput_e[k]) * float(agg_arr[k])))
     return cuts
 
 
@@ -312,7 +333,7 @@ class LPStructure:
     def scale_cuts(
         self,
         edge_scale: np.ndarray,
-        agg_cap: float | None = None,
+        agg_cap: float | np.ndarray | None = None,
         tol: float = 1e-9,
     ) -> list[tuple[np.ndarray, float]]:
         """Tightened rows for a per-edge throughput scale vector.
@@ -328,6 +349,11 @@ class LPStructure:
             ``F_k <= phi * tput_k * agg_cap`` — an interconnect incident
             caps the wide-area link itself, so the solver cannot buy the
             loss back with more VMs and connections.
+
+        ``agg_cap`` may also be a per-edge array (non-finite = uncapped):
+        then an aggregate row ``F_k <= min(phi,1) * tput_k * agg_cap[k]``
+        is emitted for every finite entry, drifted or not — the fleet
+        controller's per-tenant fair-share caps on shared structures.
 
         This is how the calibration plane plans against a lower-confidence-
         bound grid: the scale vector rides the CACHED structure as
@@ -779,7 +805,7 @@ class MulticastLPStructure:
     def scale_cuts(
         self,
         edge_scale: np.ndarray,
-        agg_cap: float | None = None,
+        agg_cap: float | np.ndarray | None = None,
         tol: float = 1e-9,
     ) -> list[tuple[np.ndarray, float]]:
         """Tightened rows on the ENVELOPE for a per-edge scale vector —

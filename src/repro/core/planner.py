@@ -30,6 +30,7 @@ of systems built on this planner — never re-assemble constraint matrices.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -42,7 +43,17 @@ from .solver.bnb import (
     solve_multicast,
 )
 from .solver.ipm import solve_lp
+from .spec import PlanSpec
 from .topology import Topology
+
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"Planner.{name}() is deprecated; build a core.PlanSpec and call "
+        "Planner.plan(spec) (see README 'Planning API')",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass
@@ -94,21 +105,40 @@ class Planner:
             scale = ts if scale is None else np.minimum(scale, ts)
         return scale
 
-    def _scale_cuts(self, struct, keep, tput_scale) -> list:
+    def _scale_cuts(self, struct, keep, tput_scale, agg_scale=None) -> list:
         """Map a full-grid scale vector into ``struct``'s edge space and
         emit the tightened rows (``milp.*.scale_cuts``) — shared by the
-        unicast and multicast paths, zero re-assembly either way."""
-        if tput_scale is None:
+        unicast and multicast paths, zero re-assembly either way.
+
+        ``agg_scale`` (full-grid [V,V], non-finite = uncapped) adds
+        per-link aggregate share caps — the fleet controller's weighted
+        fair shares — composed with the data plane's scalar
+        ``link_capacity_scale`` where both apply."""
+        if tput_scale is None and agg_scale is None:
             return []
         ix = np.asarray(keep, dtype=np.int64)
-        sub_scale = np.asarray(tput_scale, dtype=float)[np.ix_(ix, ix)]
-        return struct.scale_cuts(
-            sub_scale[struct.eu, struct.ew],
-            agg_cap=self.link_capacity_scale,
-        )
+        if tput_scale is not None:
+            sub_scale = np.asarray(tput_scale, dtype=float)[np.ix_(ix, ix)]
+            edge_scale = sub_scale[struct.eu, struct.ew]
+        else:
+            edge_scale = np.ones(struct.n_edges)
+        agg = self.link_capacity_scale
+        if agg_scale is not None:
+            share = np.asarray(agg_scale, dtype=float)[np.ix_(ix, ix)]
+            share_e = share[struct.eu, struct.ew]
+            capped = np.isfinite(share_e)
+            per_edge = np.where(capped, share_e, np.inf)
+            if agg is not None:
+                # a tenant's share of the data-plane capacity factor; on
+                # drifted edges the plain incident cap must still hold
+                per_edge = np.where(capped, share_e * float(agg), np.inf)
+                drifted = edge_scale < 1.0 - 1e-9
+                per_edge[drifted] = np.minimum(per_edge[drifted], float(agg))
+            agg = per_edge
+        return struct.scale_cuts(edge_scale, agg_cap=agg)
 
     # ----------------------------------------------------------------- bounds
-    def max_throughput(
+    def _max_throughput(
         self,
         src: str,
         dst: str,
@@ -117,17 +147,20 @@ class Planner:
         vm_caps: dict[int, float] | None = None,
         robustness: float = 0.0,
         tput_scale: np.ndarray | None = None,
+        agg_scale: np.ndarray | None = None,
     ) -> float:
         """Max achievable tput (Gbit/s): LP max-flow with N at the VM limit.
 
         degraded_links / vm_caps (full-topology region indices) constrain
-        the same cached LPStructure — see ``plan_cost_min``. robustness /
-        tput_scale bound the flow by the scaled (lower-confidence) grid."""
+        the same cached LPStructure — see the cost_min objective.
+        robustness / tput_scale bound the flow by the scaled (lower-
+        confidence) grid; agg_scale adds per-link share caps."""
         sub, s, t, keep = self._prune(src, dst)
         struct = milp.structure(sub, s, t)
         cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
         cuts = cuts + self._scale_cuts(
-            struct, keep, self._resolve_scale(robustness, tput_scale)
+            struct, keep, self._resolve_scale(robustness, tput_scale),
+            agg_scale,
         )
         fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
         if vm_caps:
@@ -159,8 +192,8 @@ class Planner:
             )
         )
 
-    # ------------------------------------------------------------- public API
-    def plan_cost_min(
+    # --------------------------------------------------------------- unicast
+    def _cost_min(
         self,
         src: str,
         dst: str,
@@ -173,6 +206,7 @@ class Planner:
         vm_caps: dict[int, float] | None = None,
         robustness: float = 0.0,
         tput_scale: np.ndarray | None = None,
+        agg_scale: np.ndarray | None = None,
     ) -> TransferPlan:
         """Paper mode 1: minimize cost subject to a throughput floor.
 
@@ -193,15 +227,15 @@ class Planner:
         sub, s, t, keep = self._prune(src, dst)
         scale = self._resolve_scale(robustness, tput_scale)
         cuts = None
-        if degraded_links or vm_caps or scale is not None:
+        if degraded_links or vm_caps or scale is not None or agg_scale is not None:
             struct = milp.structure(sub, s, t)
             cuts = self._degrade_cuts(struct, keep, degraded_links, vm_caps)
-            cuts = cuts + self._scale_cuts(struct, keep, scale)
+            cuts = cuts + self._scale_cuts(struct, keep, scale, agg_scale)
         res = solve_milp(sub, s, t, tput_goal_gbps, mode=mode or self.mode,
                          backend=backend, extra_ub=cuts or None)
         return self._lift(sub, keep, src, dst, tput_goal_gbps, volume_gb, res)
 
-    def plan_tput_max(
+    def _tput_max(
         self,
         src: str,
         dst: str,
@@ -215,7 +249,7 @@ class Planner:
         tput_scale: np.ndarray | None = None,
     ) -> TransferPlan:
         """Paper mode 2 (§5.2): Pareto sweep, pick fastest plan under ceiling."""
-        frontier = self.pareto_frontier(
+        frontier = self._pareto(
             src, dst, volume_gb, n_samples=n_samples, mode=mode,
             backend=backend, robustness=robustness, tput_scale=tput_scale,
         )
@@ -230,7 +264,7 @@ class Planner:
         return best.plan
 
     # -------------------------------------------------------------- multicast
-    def plan_multicast_cost_min(
+    def _mc_cost_min(
         self,
         src: str,
         dsts: list[str],
@@ -241,6 +275,7 @@ class Planner:
         vm_caps: dict[int, float] | None = None,
         robustness: float = 0.0,
         tput_scale: np.ndarray | None = None,
+        agg_scale: np.ndarray | None = None,
     ) -> MulticastPlan:
         """One-to-many cost-min: minimize $ with every destination receiving
         at least its throughput floor, billing each overlay link's egress
@@ -262,10 +297,11 @@ class Planner:
         if goals.shape != (len(dsts),):
             raise ValueError("need one throughput floor per destination")
         if len(dsts) == 1:
-            uni = self.plan_cost_min(
+            uni = self._cost_min(
                 src, dsts[0], float(goals[0]), volume_gb,
                 degraded_links=degraded_links, vm_caps=vm_caps,
                 robustness=robustness, tput_scale=tput_scale,
+                agg_scale=agg_scale,
             )
             return MulticastPlan(
                 top=self.top, src=uni.src, dsts=[uni.dst],
@@ -276,14 +312,14 @@ class Planner:
         sub, s, ds, keep = self._prune_mc(src, dsts)
         scale = self._resolve_scale(robustness, tput_scale)
         cuts = None
-        if degraded_links or vm_caps or scale is not None:
+        if degraded_links or vm_caps or scale is not None or agg_scale is not None:
             struct = milp.multicast_structure(sub, s, ds)
             cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
-            cuts = cuts + self._scale_cuts(struct, keep, scale)
+            cuts = cuts + self._scale_cuts(struct, keep, scale, agg_scale)
         res = solve_multicast(sub, s, ds, goals, extra_ub=cuts or None)
         return self._lift_mc(sub, keep, src, dsts, goals, volume_gb, res)
 
-    def plan_multicast_tput_max(
+    def _mc_tput_max(
         self,
         src: str,
         dsts: list[str],
@@ -304,9 +340,9 @@ class Planner:
         relaxation filter itself stays cut-free; over-optimistic candidates
         are rejected by the exact robust re-check)."""
         if len(dsts) == 1:
-            uni = self.plan_tput_max(src, dsts[0], cost_ceiling_per_gb,
-                                     volume_gb, robustness=robustness,
-                                     tput_scale=tput_scale)
+            uni = self._tput_max(src, dsts[0], cost_ceiling_per_gb,
+                                 volume_gb, robustness=robustness,
+                                 tput_scale=tput_scale)
             return MulticastPlan(
                 top=self.top, src=uni.src, dsts=[uni.dst],
                 tput_goals=np.array([uni.tput_goal]), volume_gb=volume_gb,
@@ -316,7 +352,7 @@ class Planner:
         from .solver.ipm_batch import solve_lp_batched_auto
 
         sub, s, ds, keep = self._prune_mc(src, dsts)
-        hi = self.max_multicast_throughput(
+        hi = self._mc_max_throughput(
             src, dsts, robustness=robustness, tput_scale=tput_scale
         )
         if hi <= 0:
@@ -339,7 +375,7 @@ class Planner:
         )
         best: MulticastPlan | None = None
         for g in cand:
-            plan = self.plan_multicast_cost_min(
+            plan = self._mc_cost_min(
                 src, dsts, g, volume_gb,
                 robustness=robustness, tput_scale=tput_scale,
             )
@@ -354,7 +390,7 @@ class Planner:
         best.solver_status = "cost_ceiling_infeasible"
         return best
 
-    def max_multicast_throughput(
+    def _mc_max_throughput(
         self,
         src: str,
         dsts: list[str],
@@ -363,6 +399,7 @@ class Planner:
         vm_caps: dict[int, float] | None = None,
         robustness: float = 0.0,
         tput_scale: np.ndarray | None = None,
+        agg_scale: np.ndarray | None = None,
     ) -> float:
         """Max uniform per-destination rate (Gbit/s) with N at the VM limit
         — the multicast scale probe with unit goals and no cap."""
@@ -370,7 +407,8 @@ class Planner:
         struct = milp.multicast_structure(sub, s, ds)
         cuts = self._mc_degrade_cuts(struct, keep, degraded_links, vm_caps)
         cuts = cuts + self._scale_cuts(
-            struct, keep, self._resolve_scale(robustness, tput_scale)
+            struct, keep, self._resolve_scale(robustness, tput_scale),
+            agg_scale,
         )
         fixed_n = np.full(sub.num_regions, float(sub.limit_vm))
         if vm_caps:
@@ -383,7 +421,7 @@ class Planner:
             extra_ub=cuts or None, cap=None,
         )
 
-    def pareto_frontier_fast(
+    def _pareto_fast(
         self,
         src: str,
         dst: str,
@@ -401,7 +439,7 @@ class Planner:
         from .solver.ipm_batch import solve_lp_batched_auto as solve_lp_batched
 
         sub, s, t, keep = self._prune(src, dst)
-        hi = self.max_throughput(src, dst)
+        hi = self._max_throughput(src, dst)
         if hi <= 0:
             raise ValueError(f"no path from {src} to {dst}")
         goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
@@ -423,11 +461,11 @@ class Planner:
             out.append(ParetoPoint(float(g), plan.cost_per_gb, plan))
         if not out:
             # numerical fallback: the exact sequential path
-            return self.pareto_frontier(src, dst, volume_gb,
-                                        n_samples=min(n_samples, 20))
+            return self._pareto(src, dst, volume_gb,
+                                n_samples=min(n_samples, 20))
         return out
 
-    def pareto_frontier(
+    def _pareto(
         self,
         src: str,
         dst: str,
@@ -456,7 +494,7 @@ class Planner:
         if scale is not None:
             struct = milp.structure(sub, s, t)
             cuts = self._scale_cuts(struct, keep, scale) or None
-        hi = self.max_throughput(src, dst, tput_scale=scale)
+        hi = self._max_throughput(src, dst, tput_scale=scale)
         if hi <= 0:
             raise ValueError(f"no path from {src} to {dst}")
         goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
@@ -479,6 +517,194 @@ class Planner:
         if not out:
             raise RuntimeError(f"planner found no feasible plan {src}->{dst}")
         return out
+
+    # ------------------------------------------------------------- public API
+    def plan(self, spec: PlanSpec):
+        """THE planning entry point: one ``PlanSpec`` in, one result out.
+
+        Dispatches on ``spec.objective`` (and ``dst`` vs ``dsts`` for the
+        unicast/multicast formulation). Returns a ``TransferPlan`` /
+        ``MulticastPlan`` for ``cost_min`` and ``tput_max``, a float for
+        ``max_throughput``, and a list of ``ParetoPoint`` for the sweeps.
+        The eight legacy ``plan_*`` / ``max_*`` / ``pareto_*`` methods are
+        deprecated shims over this method."""
+        obj = spec.objective
+        ns = {} if spec.n_samples is None else {"n_samples": spec.n_samples}
+        if obj == "cost_min":
+            if spec.multicast:
+                return self._mc_cost_min(
+                    spec.src, list(spec.dsts), spec.goals(), spec.volume_gb,
+                    degraded_links=spec.degraded_links_map,
+                    vm_caps=spec.vm_caps_map, robustness=spec.robustness,
+                    tput_scale=spec.tput_scale, agg_scale=spec.agg_scale,
+                )
+            return self._cost_min(
+                spec.src, spec.dst, spec.goals(), spec.volume_gb,
+                mode=spec.mode, backend=spec.backend,
+                degraded_links=spec.degraded_links_map,
+                vm_caps=spec.vm_caps_map, robustness=spec.robustness,
+                tput_scale=spec.tput_scale, agg_scale=spec.agg_scale,
+            )
+        if obj == "tput_max":
+            if spec.multicast:
+                return self._mc_tput_max(
+                    spec.src, list(spec.dsts), spec.cost_ceiling_per_gb,
+                    spec.volume_gb, robustness=spec.robustness,
+                    tput_scale=spec.tput_scale, **ns,
+                )
+            return self._tput_max(
+                spec.src, spec.dst, spec.cost_ceiling_per_gb, spec.volume_gb,
+                mode=spec.mode, backend=spec.backend,
+                robustness=spec.robustness, tput_scale=spec.tput_scale, **ns,
+            )
+        if obj == "max_throughput":
+            if spec.multicast:
+                return self._mc_max_throughput(
+                    spec.src, list(spec.dsts),
+                    degraded_links=spec.degraded_links_map,
+                    vm_caps=spec.vm_caps_map, robustness=spec.robustness,
+                    tput_scale=spec.tput_scale, agg_scale=spec.agg_scale,
+                )
+            return self._max_throughput(
+                spec.src, spec.dst,
+                degraded_links=spec.degraded_links_map,
+                vm_caps=spec.vm_caps_map, robustness=spec.robustness,
+                tput_scale=spec.tput_scale, agg_scale=spec.agg_scale,
+            )
+        if obj == "pareto":
+            return self._pareto(
+                spec.src, spec.dst, spec.volume_gb, mode=spec.mode,
+                backend=spec.backend, robustness=spec.robustness,
+                tput_scale=spec.tput_scale, **ns,
+            )
+        return self._pareto_fast(spec.src, spec.dst, spec.volume_gb, **ns)
+
+    def plan_cohort(self, specs: list[PlanSpec]) -> list:
+        """Plan a whole admitted cohort in one sweep.
+
+        Unicast ``cost_min`` specs in relaxed mode carrying no per-spec
+        cuts are grouped by (src, dst) route and each group solves as ONE
+        batched round-down sweep (``solve_milp_batched``) over the route's
+        cached LPStructure — the fleet controller's admission path, a
+        single stacked solve instead of a Python loop of per-job planner
+        calls. Everything else (multicast, robust, degraded, exact-mode)
+        falls back to the sequential ``plan()`` path, which still rides
+        cached structures. Results come back in spec order."""
+        out: list = [None] * len(specs)
+        groups: dict[tuple[str, str], list[int]] = {}
+        for i, sp in enumerate(specs):
+            batchable = (
+                sp.objective == "cost_min"
+                and not sp.multicast
+                and (sp.mode or self.mode) == "relaxed"
+                and not sp.degraded_links
+                and not sp.vm_caps
+                and not sp.robustness
+                and sp.tput_scale is None
+                and sp.agg_scale is None
+            )
+            if batchable:
+                groups.setdefault((sp.src, sp.dst), []).append(i)
+            else:
+                out[i] = self.plan(sp)
+        for (src, dst), ix in groups.items():
+            sub, s, t, keep = self._prune(src, dst)
+            goals = np.array([specs[i].goals() for i in ix], dtype=float)
+            batch = solve_milp_batched(sub, s, t, goals)
+            for i, g, res in zip(ix, goals, batch):
+                if not res.ok:
+                    # infeasible-goal corner: re-solve sequentially so the
+                    # caller sees the same degraded status plan() returns
+                    out[i] = self.plan(specs[i])
+                    continue
+                out[i] = self._lift(
+                    sub, keep, src, dst, float(g), specs[i].volume_gb, res
+                )
+        return out
+
+    # ------------------------------------------------- deprecated shims
+    # The pre-PlanSpec surface: each method warns, builds the equivalent
+    # spec, and delegates to plan() — bitwise-identical results (pinned
+    # by tests/test_api_surface.py).
+    def max_throughput(self, src, dst, *, degraded_links=None, vm_caps=None,
+                       robustness=0.0, tput_scale=None):
+        _warn_deprecated("max_throughput")
+        return self.plan(PlanSpec(
+            objective="max_throughput", src=src, dst=dst,
+            degraded_links=degraded_links, vm_caps=vm_caps,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def max_multicast_throughput(self, src, dsts, *, degraded_links=None,
+                                 vm_caps=None, robustness=0.0,
+                                 tput_scale=None):
+        _warn_deprecated("max_multicast_throughput")
+        return self.plan(PlanSpec(
+            objective="max_throughput", src=src, dsts=tuple(dsts),
+            degraded_links=degraded_links, vm_caps=vm_caps,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def plan_cost_min(self, src, dst, tput_goal_gbps, volume_gb, *,
+                      mode=None, backend="numpy", degraded_links=None,
+                      vm_caps=None, robustness=0.0, tput_scale=None):
+        _warn_deprecated("plan_cost_min")
+        return self.plan(PlanSpec(
+            objective="cost_min", src=src, dst=dst,
+            tput_goal_gbps=tput_goal_gbps, volume_gb=volume_gb, mode=mode,
+            backend=backend, degraded_links=degraded_links, vm_caps=vm_caps,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def plan_tput_max(self, src, dst, cost_ceiling_per_gb, volume_gb, *,
+                      n_samples=40, mode=None, backend="numpy",
+                      robustness=0.0, tput_scale=None):
+        _warn_deprecated("plan_tput_max")
+        return self.plan(PlanSpec(
+            objective="tput_max", src=src, dst=dst,
+            cost_ceiling_per_gb=cost_ceiling_per_gb, volume_gb=volume_gb,
+            n_samples=n_samples, mode=mode, backend=backend,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def plan_multicast_cost_min(self, src, dsts, tput_floor_gbps, volume_gb,
+                                *, degraded_links=None, vm_caps=None,
+                                robustness=0.0, tput_scale=None):
+        _warn_deprecated("plan_multicast_cost_min")
+        return self.plan(PlanSpec(
+            objective="cost_min", src=src, dsts=tuple(dsts),
+            tput_goal_gbps=tput_floor_gbps, volume_gb=volume_gb,
+            degraded_links=degraded_links, vm_caps=vm_caps,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def plan_multicast_tput_max(self, src, dsts, cost_ceiling_per_gb,
+                                volume_gb, *, n_samples=12, robustness=0.0,
+                                tput_scale=None):
+        _warn_deprecated("plan_multicast_tput_max")
+        return self.plan(PlanSpec(
+            objective="tput_max", src=src, dsts=tuple(dsts),
+            cost_ceiling_per_gb=cost_ceiling_per_gb, volume_gb=volume_gb,
+            n_samples=n_samples, robustness=robustness,
+            tput_scale=tput_scale,
+        ))
+
+    def pareto_frontier(self, src, dst, volume_gb, *, n_samples=40,
+                        mode=None, backend="numpy", robustness=0.0,
+                        tput_scale=None):
+        _warn_deprecated("pareto_frontier")
+        return self.plan(PlanSpec(
+            objective="pareto", src=src, dst=dst, volume_gb=volume_gb,
+            n_samples=n_samples, mode=mode, backend=backend,
+            robustness=robustness, tput_scale=tput_scale,
+        ))
+
+    def pareto_frontier_fast(self, src, dst, volume_gb, *, n_samples=64):
+        _warn_deprecated("pareto_frontier_fast")
+        return self.plan(PlanSpec(
+            objective="pareto_fast", src=src, dst=dst, volume_gb=volume_gb,
+            n_samples=n_samples,
+        ))
 
     # -------------------------------------------------------------- internals
     @staticmethod

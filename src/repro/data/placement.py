@@ -7,6 +7,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.planner import Planner
+from repro.core.spec import PlanSpec
 from repro.core.topology import Topology
 
 
@@ -42,11 +43,17 @@ def plan_shard_sources(
             if src not in plan_cache:
                 goal = min(
                     tput_floor_gbps,
-                    planner.max_throughput(src, consumer_region) * 0.9,
+                    planner.plan(PlanSpec(
+                        objective="max_throughput", src=src,
+                        dst=consumer_region,
+                    )) * 0.9,
                 )
                 if goal <= 0:
                     continue
-                plan = planner.plan_cost_min(src, consumer_region, goal, shard_gb)
+                plan = planner.plan(PlanSpec(
+                    objective="cost_min", src=src, dst=consumer_region,
+                    tput_goal_gbps=goal, volume_gb=shard_gb,
+                ))
                 relays = sorted(
                     {r for path, _ in plan.paths() for r in path[1:-1]}
                 )

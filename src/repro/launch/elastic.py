@@ -17,6 +17,7 @@ import jax
 import numpy as np
 
 from repro.core.planner import Planner
+from repro.core.spec import PlanSpec
 from repro.core.topology import Topology
 from repro.models.model import abstract_params
 from repro.sharding.specs import ShardingRules, make_param_shardings
@@ -58,10 +59,15 @@ def plan_reshard(
     for dst in joining:
         best = None
         for src in pod_regions_old:
-            goal = min(tput_floor_gbps, planner.max_throughput(src, dst) * 0.9)
+            goal = min(tput_floor_gbps, planner.plan(PlanSpec(
+                objective="max_throughput", src=src, dst=dst,
+            )) * 0.9)
             if goal <= 0:
                 continue
-            plan = planner.plan_cost_min(src, dst, goal, replica_gb)
+            plan = planner.plan(PlanSpec(
+                objective="cost_min", src=src, dst=dst,
+                tput_goal_gbps=goal, volume_gb=replica_gb,
+            ))
             if best is None or plan.total_cost < best[0]:
                 best = (plan.total_cost, src, plan)
         if best is None:

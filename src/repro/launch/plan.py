@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core import Planner, default_topology, direct_plan
+from repro.core import Planner, PlanSpec, default_topology, direct_plan
 
 
 def main(argv=None):
@@ -33,12 +33,17 @@ def main(argv=None):
     dp = direct_plan(top, args.src, args.dst, args.volume_gb)
 
     if args.tput_floor is not None:
-        plan = planner.plan_cost_min(args.src, args.dst, args.tput_floor,
-                                     args.volume_gb)
+        plan = planner.plan(PlanSpec(
+            objective="cost_min", src=args.src, dst=args.dst,
+            tput_goal_gbps=args.tput_floor, volume_gb=args.volume_gb,
+        ))
     else:
         mult = args.cost_ceiling_x or 1.25
-        plan = planner.plan_tput_max(args.src, args.dst,
-                                     dp.cost_per_gb * mult, args.volume_gb)
+        plan = planner.plan(PlanSpec(
+            objective="tput_max", src=args.src, dst=args.dst,
+            cost_ceiling_per_gb=dp.cost_per_gb * mult,
+            volume_gb=args.volume_gb,
+        ))
 
     info = {
         "direct_gbps": round(dp.throughput, 2),

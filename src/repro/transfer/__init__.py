@@ -1,4 +1,5 @@
 from .chunk import Chunk, chunk_manifest, chunk_object, checksum  # noqa: F401
+from .simconfig import SimConfig  # noqa: F401
 from .flowsim import SimResult, simulate_multi, simulate_transfer  # noqa: F401
 from .flowsim_ref import (  # noqa: F401
     simulate_multi_reference,
@@ -26,6 +27,7 @@ from .chaos import (  # noqa: F401
     RegionOutage,
     compile_archetypes,
 )
+from .reports import Report  # noqa: F401
 from .executor import (  # noqa: F401
     BackoffLadder,
     DegradationLadder,
@@ -48,3 +50,69 @@ from .gateway import (  # noqa: F401
     transfer_objects,
     transfer_objects_multicast,
 )
+
+# The fleet controller subclasses the calibration plane's service, which
+# itself imports this package's executor — importing it lazily (PEP 562)
+# keeps `import repro.calibrate` from hitting a half-initialized module.
+_FLEET_NAMES = ("FleetController", "FleetReport", "TenantReport",
+                "TenantSpec")
+
+__all__ = [
+    "BackoffLadder",
+    "BlobStore",
+    "BreakerConfig",
+    "BreakerTransition",
+    "ChaosScenario",
+    "Chunk",
+    "DegradationLadder",
+    "DirStore",
+    "ExecutionReport",
+    "FaultInjector",
+    "FlappingLink",
+    "FleetController",
+    "FleetReport",
+    "GatewayReport",
+    "GrayFailure",
+    "GrayLink",
+    "JobReport",
+    "JobSimResult",
+    "LinkBreaker",
+    "LinkDegrade",
+    "LinkRestore",
+    "MultiSimResult",
+    "MulticastGatewayReport",
+    "ObjectStore",
+    "ProviderBrownout",
+    "RegionOutage",
+    "ReplanRecord",
+    "Report",
+    "ServiceReport",
+    "SimConfig",
+    "SimResult",
+    "TenantReport",
+    "TenantSpec",
+    "TransferJob",
+    "TransferRequest",
+    "TransferService",
+    "VMFailure",
+    "checksum",
+    "chunk_manifest",
+    "chunk_object",
+    "compile_archetypes",
+    "execute_plan",
+    "execute_service_model",
+    "simulate_multi",
+    "simulate_multi_reference",
+    "simulate_transfer",
+    "simulate_transfer_reference",
+    "transfer_objects",
+    "transfer_objects_multicast",
+]
+
+
+def __getattr__(name):
+    if name in _FLEET_NAMES:
+        from . import fleet
+
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

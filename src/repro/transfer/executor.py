@@ -26,6 +26,7 @@ from repro.core import milp
 from repro.core.baselines import CloudServiceModel
 from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.planner import Planner
+from repro.core.spec import PlanSpec
 from repro.core.topology import GBIT_PER_GB, Topology
 from .breaker import LinkBreaker
 from .events import (
@@ -37,6 +38,7 @@ from .events import (
     VMFailure,
 )
 from .flowsim import SimResult, simulate_transfer
+from .reports import Report
 
 
 @dataclasses.dataclass
@@ -198,7 +200,7 @@ class ReplanRecord:
 
 
 @dataclasses.dataclass
-class JobReport:
+class JobReport(Report):
     request: TransferRequest
     plan: TransferPlan  # the job's current (possibly re-planned) allocation
     status: str  # "done" | "stalled" | "failed" | "running" | "partial"
@@ -233,9 +235,36 @@ class JobReport:
             return 0  # undelivered remainder is explicit, not lost
         return self.n_chunks - self.delivered_chunks
 
+    kind = "job"
+    _summary_keys = ("name", "status", "delivered_gb", "realized_tput_gbps",
+                     "replans", "deadline_met")
+
+    def _payload(self) -> dict:
+        return {
+            "name": self.request.name,
+            "status": self.status,
+            "planned_tput_gbps": self.planned_tput_gbps,
+            "realized_tput_gbps": self.realized_tput_gbps,
+            "planned_cost": self.planned_cost,
+            "realized_cost": self.realized_cost,
+            "delivered_gb": self.delivered_gb,
+            "n_chunks": self.n_chunks,
+            "delivered_chunks": self.delivered_chunks,
+            "retried_chunks": self.retried_chunks,
+            "lost_chunks": self.lost_chunks,
+            "contended": self.contended,
+            "replans": len(self.replans),
+            "replan_struct_builds": sum(
+                r.structure_builds for r in self.replans
+            ),
+            "deadline_met": self.deadline_met,
+            "budget_exhausted": self.budget_exhausted,
+            "degrade_level": self.degrade_level,
+        }
+
 
 @dataclasses.dataclass
-class ServiceReport:
+class ServiceReport(Report):
     jobs: list[JobReport]
     time_s: float
     segments: int
@@ -266,6 +295,28 @@ class ServiceReport:
         if not with_slo:
             return 0.0
         return sum(1 for j in with_slo if j.deadline_met is False) / len(with_slo)
+
+    kind = "service"
+    _summary_keys = ("jobs", "time_s", "delivered_gb", "segments",
+                     "slo_violations")
+
+    def _payload(self) -> dict:
+        return {
+            "jobs": len(self.jobs),
+            "time_s": self.time_s,
+            "segments": self.segments,
+            "sim_events": self.sim_events,
+            "delivered_gb": sum(j.delivered_gb for j in self.jobs),
+            "all_done": self.all_done,
+            "slo_violations": self.slo_violations,
+            "slo_violation_rate": self.slo_violation_rate,
+            "replans": len(self.replans),
+            "replan_struct_builds": sum(
+                r.structure_builds for r in self.replans
+            ),
+            "quarantines": len(self.quarantines),
+            "per_job": [j.to_dict() for j in self.jobs],
+        }
 
 
 @dataclasses.dataclass
@@ -339,11 +390,18 @@ class TransferService:
         backoff_ladder: BackoffLadder | None = None,
         degradation: DegradationLadder | None = None,
         breaker: LinkBreaker | None = None,
+        vm_budget: float | None = None,
     ):
         self.top = top
         self.backend = backend
         self.planner = Planner(top, max_relays=max_relays)
         self.contention_ratio = contention_ratio
+        # the deployment's VM instance quota: no single plan of this
+        # service may provision more VMs than the subscription allows.
+        # None = uncapped. Enforced by goal backoff on every admission
+        # and re-plan solve (_fit_vm_budget).
+        self.vm_budget = vm_budget if vm_budget is None else float(vm_budget)
+        self._vm_clamped: set[str] = set()
         self.backoff_ladder = (
             backoff_ladder if backoff_ladder is not None else BackoffLadder()
         )
@@ -379,30 +437,49 @@ class TransferService:
         the cached LP structures as extra rows (zero re-assembly)."""
         return None
 
+    def _spec_extras(self) -> dict:
+        """Extra ``PlanSpec`` fields every solve of this service carries.
+
+        The base service has none; the fleet controller injects its
+        per-tenant ``agg_scale`` fair-share caps here so admission and
+        re-plans alike respect the tenant's link shares."""
+        return {}
+
+    def _plan_spec(self, req: TransferRequest, goal, volume_gb: float,
+                   *, vm_caps=None, constrained: bool) -> PlanSpec:
+        """The ``PlanSpec`` for one admission/re-plan solve of ``req``."""
+        common = dict(
+            objective="cost_min",
+            src=req.src,
+            volume_gb=volume_gb,
+            degraded_links=(dict(self.degraded_links)
+                            if constrained and self.degraded_links else None),
+            vm_caps=(dict(vm_caps)
+                     if constrained and vm_caps else None),
+            tput_scale=self._plan_scale(),
+            **self._spec_extras(),
+        )
+        if req.multicast:
+            goals = goal if np.ndim(goal) else float(goal)
+            return PlanSpec(dsts=tuple(req.dsts), tput_goal_gbps=goals,
+                            **common)
+        return PlanSpec(
+            dst=req.dst, tput_goal_gbps=float(goal),
+            backend="numpy" if constrained else self.backend, **common,
+        )
+
     def _plan_for(self, req: TransferRequest, goal: float, volume_gb: float,
                   *, vm_caps=None, constrained: bool) -> TransferPlan:
         """One admission/re-plan solve for either job flavor. A multicast
         re-plan only carries goals for the destinations still missing
         chunks, so faulted branches are re-planned and finished ones
         dropped — on the SAME cached structure (goals are pure RHS)."""
-        scale = self._plan_scale()
-        if req.multicast:
-            goals = goal if np.ndim(goal) else float(goal)
-            return self.planner.plan_multicast_cost_min(
-                req.src, req.dsts, goals, volume_gb,
-                degraded_links=self.degraded_links if constrained else None,
-                vm_caps=vm_caps if constrained else None,
-                tput_scale=scale,
-            )
-        plan = self.planner.plan_cost_min(
-            req.src, req.dst, float(goal), volume_gb,
-            backend="numpy" if constrained else self.backend,
-            degraded_links=self.degraded_links if constrained else None,
-            vm_caps=vm_caps if constrained else None,
-            tput_scale=scale,
-        )
+        plan = self.planner.plan(self._plan_spec(
+            req, goal, volume_gb, vm_caps=vm_caps, constrained=constrained,
+        ))
         if (
-            self._replan_trickle is not None
+            not req.multicast
+            and self._replan_trickle is not None
             and plan.solver_status == "optimal"
         ):
             # deadline shedding: a pressured job refuses slow paths
@@ -410,18 +487,54 @@ class TransferService:
         return plan
 
     def _capacity(self, req: TransferRequest, *, vm_caps=None) -> float:
-        scale = self._plan_scale()
-        if req.multicast:
-            return self.planner.max_multicast_throughput(
-                req.src, req.dsts,
-                degraded_links=self.degraded_links, vm_caps=vm_caps,
-                tput_scale=scale,
-            )
-        return self.planner.max_throughput(
-            req.src, req.dst,
-            degraded_links=self.degraded_links, vm_caps=vm_caps,
-            tput_scale=scale,
+        common = dict(
+            objective="max_throughput",
+            src=req.src,
+            degraded_links=dict(self.degraded_links) or None,
+            vm_caps=dict(vm_caps) if vm_caps else None,
+            tput_scale=self._plan_scale(),
+            **self._spec_extras(),
         )
+        if req.multicast:
+            return self.planner.plan(PlanSpec(dsts=tuple(req.dsts), **common))
+        return self.planner.plan(PlanSpec(dst=req.dst, **common))
+
+    def _vm_budget_for(self, req: TransferRequest) -> float | None:
+        """VM ceiling for one plan of ``req`` — the deployment's instance
+        quota. The base service applies its flat ``vm_budget`` (the
+        subscription limit an isolated tenant cannot exceed); the fleet
+        controller overrides this with per-tenant quotas plus idle-pool
+        borrowing."""
+        return self.vm_budget
+
+    def _fit_vm_budget(self, req: TransferRequest, plan, goal,
+                       volume_gb: float, *, vm_caps=None, constrained):
+        """Goal backoff until the plan fits the VM ceiling.
+
+        VM counts are ceil-of-flow OUTPUTS of the LP, not constraint
+        rows, so a quota cannot ride the cached structures as a cut —
+        backing the throughput goal off (pure RHS, zero re-assembly) is
+        how the budget is honored without a structure rebuild. If a
+        backed-off solve goes infeasible the last optimal (over-budget)
+        plan is kept: a quota violation the operator can see beats a
+        failed job."""
+        budget = self._vm_budget_for(req)
+        if budget is None or plan.solver_status != "optimal":
+            return plan
+        g = goal
+        for _ in range(4):
+            if plan.num_vms <= budget + 1e-9:
+                return plan
+            shrink = max(min(budget / max(plan.num_vms, 1e-9), 0.75), 0.1)
+            g = ([float(x) * shrink for x in g] if np.ndim(g)
+                 else float(g) * shrink)
+            self._vm_clamped.add(req.name)
+            nxt = self._plan_for(req, g, volume_gb,
+                                 vm_caps=vm_caps, constrained=constrained)
+            if nxt.solver_status != "optimal":
+                break
+            plan = nxt
+        return plan
 
     def _admit(self, req: TransferRequest) -> _JobState:
         if self.degraded_links or self._plan_scale() is not None:
@@ -431,13 +544,19 @@ class TransferService:
             # nothing ever re-routes them (constrained solves run on the
             # sequential backend; still a cached-structure refit)
             cap = self._capacity(req)
-            plan = self._plan_for(
-                req, min(req.tput_goal_gbps, max(cap, 1e-9) * 0.95),
-                req.volume_gb, constrained=True,
-            )
+            goal = min(req.tput_goal_gbps, max(cap, 1e-9) * 0.95)
+            plan = self._plan_for(req, goal, req.volume_gb, constrained=True)
+            plan = self._fit_vm_budget(req, plan, goal, req.volume_gb,
+                                       constrained=True)
         else:
             plan = self._plan_for(req, req.tput_goal_gbps, req.volume_gb,
                                   constrained=False)
+            plan = self._fit_vm_budget(req, plan, req.tput_goal_gbps,
+                                       req.volume_gb, constrained=False)
+        return self._state_for(req, plan)
+
+    def _state_for(self, req: TransferRequest, plan) -> _JobState:
+        """Chunk the request and wrap its plan as a fresh job state."""
         cg = req.chunk_mb * 8.0 / 1024.0
         n_chunks = max(1, int(np.ceil(req.volume_gb * GBIT_PER_GB / cg)))
         st = _JobState(req=req, plan=plan, chunk_gbit=cg,
@@ -446,6 +565,16 @@ class TransferService:
                        planned_cost0=plan.total_cost)
         st.status = "planned" if plan.solver_status == "optimal" else "failed"
         return st
+
+    def _admit_queue(self) -> list[_JobState]:
+        """Admission hook: turn the queued requests into job states, in
+        submission order (fault scripts address jobs by that index). The
+        base service admits everything with one planner call per job; the
+        fleet controller overrides this with admission control, weighted
+        fair shares, and one batched cohort solve."""
+        states = [self._admit(r) for r in self._queue]
+        self._queue = []
+        return states
 
     def _replan(
         self, st: _JobState, job_ix: int, at_s: float, reason: str = "fault"
@@ -475,6 +604,7 @@ class TransferService:
             # degraded topology. Walk the backoff ladder before declaring
             # failure; the record keeps the degraded SLO visible.
             goal, plan, backoffs = base_goal, None, 0
+            fit_goal = base_goal
             for backoff, g in enumerate(self.backoff_ladder.goals(base_goal)):
                 # the record reports the LAST goal actually attempted,
                 # whether or not it was accepted
@@ -491,8 +621,13 @@ class TransferService:
                     g_try = g
                 plan = self._plan_for(req, g_try, st.remaining_gb,
                                       vm_caps=vm_caps, constrained=True)
+                fit_goal = g_try
                 if plan.solver_status == "optimal":
                     break
+            if plan is not None and plan.solver_status == "optimal":
+                plan = self._fit_vm_budget(req, plan, fit_goal,
+                                           st.remaining_gb,
+                                           vm_caps=vm_caps, constrained=True)
         finally:
             self._replan_z = None
             self._replan_trickle = None
@@ -698,7 +833,7 @@ class TransferService:
         from .flowsim import simulate_multi
 
         sim = sim or simulate_multi
-        states = [self._admit(r) for r in self._queue]
+        states = self._admit_queue()
         visible = [f for f in faults if not isinstance(f, GrayFailure)]
         silent = sorted(
             (f for f in faults if isinstance(f, GrayFailure)),
@@ -871,7 +1006,6 @@ class TransferService:
             # ---- deadline SLOs: escalate pressured jobs down the ladder
             self._deadline_checks(states, now)
 
-        self._queue = []
         return ServiceReport(
             jobs=self._job_reports(states, now), time_s=now,
             segments=segments, sim_events=sim_events,

@@ -36,6 +36,9 @@ import numpy as np
 from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.topology import GBIT_PER_GB
 
+from .simconfig import SimConfig
+from .simconfig import resolve as resolve_sim_config
+
 _EPS = 1e-12
 
 
@@ -462,6 +465,7 @@ def simulate_multi(
     jobs,
     faults=(),
     *,
+    config: SimConfig | None = None,
     link_capacity_scale: float | None = 2.0,
     straggler_prob: float = 0.05,
     straggler_speed: tuple[float, float] = (0.15, 0.5),
@@ -517,9 +521,18 @@ def simulate_multi(
     from .events import T_EPS, JobSimResult, MultiSimResult
     from .events import materialize_jobs, sorted_schedule
 
+    cfg = resolve_sim_config(
+        config, link_capacity_scale=link_capacity_scale,
+        straggler_prob=straggler_prob, straggler_speed=straggler_speed,
+        relay_buffer_chunks=relay_buffer_chunks, seed=seed,
+        horizon_s=horizon_s, exec_top=exec_top, drain=drain,
+    )
+    link_capacity_scale = cfg.link_capacity_scale
+    relay_buffer_chunks = cfg.relay_buffer_chunks
+    horizon_s, drain = cfg.horizon_s, cfg.drain
     su = materialize_jobs(
-        jobs, seed=seed, straggler_prob=straggler_prob,
-        straggler_speed=straggler_speed, exec_top=exec_top,
+        jobs, seed=cfg.seed, straggler_prob=cfg.straggler_prob,
+        straggler_speed=cfg.straggler_speed, exec_top=cfg.exec_top,
     )
     top = su.top
     J = len(jobs)

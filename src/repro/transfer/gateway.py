@@ -39,6 +39,7 @@ from pathlib import Path
 
 from repro.core.plan import MulticastPlan, TransferPlan
 from .chunk import Chunk, checksum, chunk_manifest, chunk_object
+from .reports import Report, per_edge_dict
 
 
 def _retry_delay(attempt: int, base_s: float, cap_s: float,
@@ -197,7 +198,7 @@ class FaultInjector:
 
 
 @dataclasses.dataclass
-class GatewayReport:
+class GatewayReport(Report):
     objects: int
     chunks: int
     bytes_moved: int
@@ -223,6 +224,26 @@ class GatewayReport:
             if secs > 1e-9:
                 out[e] = nbytes * 8.0 / 1e9 / secs
         return out
+
+    kind = "gateway"
+    _summary_keys = ("objects", "chunks", "delivered_gb", "retried_chunks",
+                     "chunks_missing")
+
+    def _payload(self) -> dict:
+        return {
+            "objects": self.objects,
+            "chunks": self.chunks,
+            "delivered_gb": self.bytes_moved / 1e9,
+            "checksum_failures": self.checksum_failures,
+            "retried_chunks": self.retried_chunks,
+            "duplicate_chunks": self.duplicate_chunks,
+            "chunks_missing": self.chunks_missing,
+            "objects_skipped": self.objects_skipped,
+            "faults_injected": self.faults_injected,
+            "workers_leaked": self.workers_leaked,
+            "per_edge": per_edge_dict(self.per_edge_bytes,
+                                      self.per_edge_seconds),
+        }
 
 
 def _same_object(src_store: ObjectStore, dst_store: ObjectStore, key: str,
@@ -562,7 +583,7 @@ def transfer_objects(
 
 # ------------------------------------------------------------------ multicast
 @dataclasses.dataclass
-class MulticastGatewayReport:
+class MulticastGatewayReport(Report):
     """Aggregate + per-destination outcome of a one-to-many transfer."""
 
     per_dest: dict  # destination region key -> GatewayReport
@@ -600,6 +621,27 @@ class MulticastGatewayReport:
     @property
     def duplicate_chunks(self) -> int:
         return sum(r.duplicate_chunks for r in self.per_dest.values())
+
+    kind = "multicast_gateway"
+    _summary_keys = ("chunks", "delivered_gb", "retried_chunks",
+                     "chunks_missing")
+
+    def _payload(self) -> dict:
+        return {
+            "chunks": self.chunks,
+            "delivered_gb": self.bytes_moved / 1e9,
+            "checksum_failures": self.checksum_failures,
+            "retried_chunks": self.retried_chunks,
+            "duplicate_chunks": self.duplicate_chunks,
+            "chunks_missing": self.chunks_missing,
+            "faults_injected": self.faults_injected,
+            "workers_leaked": self.workers_leaked,
+            "per_dst": {
+                dst: rep.to_dict() for dst, rep in self.per_dest.items()
+            },
+            "per_edge": per_edge_dict(self.per_edge_bytes,
+                                      self.per_edge_seconds),
+        }
 
 
 def transfer_objects_multicast(

@@ -1,0 +1,254 @@
+"""API-surface snapshots (ISSUE 7): the unified planning API is pinned.
+
+Three layers of pinning:
+
+  * the public ``__all__`` of the three packages — a rename or removal is
+    a deliberate, test-visible act;
+  * the ``PlanSpec`` / ``SimConfig`` field sets and the two simulators'
+    signatures — the oracle can never silently drift from the fast path;
+  * every deprecated ``plan_*`` shim returns results bitwise-equal to the
+    ``Planner.plan(PlanSpec(...))`` path it delegates to.
+"""
+
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+import repro.calibrate as calibrate
+import repro.core as core
+import repro.transfer as transfer
+from repro.core import PlanSpec, Planner, default_topology
+from repro.transfer.flowsim import simulate_multi
+from repro.transfer.flowsim_ref import simulate_multi_reference
+from repro.transfer.simconfig import SimConfig, resolve
+
+SRC, DST = "aws:us-west-2", "aws:eu-central-1"
+DSTS = ("aws:eu-central-1", "gcp:us-central1")
+
+
+# --------------------------------------------------------------- __all__ pins
+CORE_ALL = {
+    "AWS_DATASYNC", "AZURE_AZCOPY", "GBIT_PER_GB", "GCP_STORAGE_TRANSFER",
+    "CloudServiceModel", "McTree", "MulticastPlan", "ParetoPoint",
+    "PlanSpec", "Planner", "Region", "Topology", "TransferPlan",
+    "default_topology", "direct_plan", "grid_fingerprint", "gridftp_plan",
+    "ron_plan", "toy_topology",
+}
+
+TRANSFER_ALL = {
+    "BackoffLadder", "BlobStore", "BreakerConfig", "BreakerTransition",
+    "ChaosScenario", "Chunk", "DegradationLadder", "DirStore",
+    "ExecutionReport", "FaultInjector", "FlappingLink", "FleetController",
+    "FleetReport", "GatewayReport", "GrayFailure", "GrayLink", "JobReport",
+    "JobSimResult", "LinkBreaker", "LinkDegrade", "LinkRestore",
+    "MultiSimResult", "MulticastGatewayReport", "ObjectStore",
+    "ProviderBrownout", "RegionOutage", "ReplanRecord", "Report",
+    "ServiceReport", "SimConfig", "SimResult", "TenantReport", "TenantSpec",
+    "TransferJob", "TransferRequest", "TransferService", "VMFailure",
+    "checksum", "chunk_manifest", "chunk_object", "compile_archetypes",
+    "execute_plan", "execute_service_model", "simulate_multi",
+    "simulate_multi_reference", "simulate_transfer",
+    "simulate_transfer_reference", "transfer_objects",
+    "transfer_objects_multicast",
+}
+
+CALIBRATE_ALL = {
+    "POLICY_NAMES", "BayesianEVOIPolicy", "BeliefGrid", "BeliefSnapshot",
+    "CalibratedServiceReport", "CalibratedTransferService", "Calibrator",
+    "DriftEvent", "DriftModel", "EpochRoll", "EpsilonGreedyPolicy",
+    "GreedyVoIPolicy", "Incident", "PolicyContext", "ProbeBudget",
+    "ProbePolicy", "ProbeRecord", "ProbeRound", "RoundRobinPolicy",
+    "capacity_sample_from_rates", "make_policy",
+}
+
+
+def test_core_all_pinned():
+    assert set(core.__all__) == CORE_ALL
+
+
+def test_transfer_all_pinned():
+    assert set(transfer.__all__) == TRANSFER_ALL
+
+
+def test_calibrate_all_pinned():
+    assert set(calibrate.__all__) == CALIBRATE_ALL
+
+
+def test_all_names_resolve():
+    for mod in (core, transfer, calibrate):
+        for name in mod.__all__:
+            assert getattr(mod, name, None) is not None, \
+                f"{mod.__name__}.__all__ exports missing name {name}"
+
+
+# ------------------------------------------------------------ field-set pins
+PLANSPEC_FIELDS = {
+    "objective", "src", "dst", "dsts", "volume_gb", "tput_goal_gbps",
+    "cost_ceiling_per_gb", "n_samples", "mode", "backend", "robustness",
+    "degraded_links", "vm_caps", "tput_scale", "agg_scale",
+}
+
+SIMCONFIG_FIELDS = {
+    "link_capacity_scale", "straggler_prob", "straggler_speed",
+    "relay_buffer_chunks", "seed", "horizon_s", "exec_top", "drain",
+}
+
+
+def test_planspec_fields_pinned():
+    assert {f.name for f in dataclasses.fields(PlanSpec)} == PLANSPEC_FIELDS
+
+
+def test_simconfig_fields_pinned():
+    assert {f.name for f in dataclasses.fields(SimConfig)} == SIMCONFIG_FIELDS
+
+
+def test_sim_signatures_identical():
+    """The oracle's surface IS the fast path's surface — name, kind and
+    default of every parameter (the drift SimConfig exists to prevent)."""
+    fast = inspect.signature(simulate_multi)
+    ref = inspect.signature(simulate_multi_reference)
+    assert list(fast.parameters) == list(ref.parameters)
+    for name in fast.parameters:
+        pf, pr = fast.parameters[name], ref.parameters[name]
+        assert pf.kind == pr.kind, name
+        assert pf.default == pr.default or (
+            pf.default is pr.default
+        ), name
+
+
+def test_simconfig_knobs_cover_both_sims():
+    """Every SimConfig field is a keyword of both simulators."""
+    for fn in (simulate_multi, simulate_multi_reference):
+        params = set(inspect.signature(fn).parameters)
+        assert SIMCONFIG_FIELDS <= params
+
+
+# ------------------------------------------------------- PlanSpec validation
+def test_planspec_requires_exactly_one_destination():
+    with pytest.raises(ValueError):
+        PlanSpec(objective="cost_min", src=SRC)
+    with pytest.raises(ValueError):
+        PlanSpec(objective="cost_min", src=SRC, dst=DST, dsts=DSTS)
+
+
+def test_planspec_rejects_unknown_objective():
+    with pytest.raises(ValueError):
+        PlanSpec(objective="fastest", src=SRC, dst=DST)
+
+
+def test_planspec_tput_max_needs_ceiling():
+    with pytest.raises(ValueError):
+        PlanSpec(objective="tput_max", src=SRC, dst=DST)
+
+
+def test_planspec_pareto_is_unicast_only():
+    with pytest.raises(ValueError):
+        PlanSpec(objective="pareto", src=SRC, dsts=DSTS)
+
+
+def test_planspec_freezes_mappings_for_equality():
+    a = PlanSpec(objective="cost_min", src=SRC, dst=DST, tput_goal_gbps=2.0,
+                 degraded_links={(0, 1): 0.5, (2, 3): 0.1},
+                 vm_caps={4: 2.0})
+    b = PlanSpec(objective="cost_min", src=SRC, dst=DST, tput_goal_gbps=2.0,
+                 degraded_links={(2, 3): 0.1, (0, 1): 0.5},
+                 vm_caps={4: 2.0})
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a.degraded_links_map == {(0, 1): 0.5, (2, 3): 0.1}
+    assert a.vm_caps_map == {4: 2.0}
+
+
+def test_simconfig_both_ways_raises():
+    with pytest.raises(ValueError, match="both"):
+        resolve(SimConfig(seed=3), seed=5)
+    # a kwarg still at its default is not a conflict
+    cfg = resolve(SimConfig(seed=3), seed=0)
+    assert cfg.seed == 3
+    assert resolve(None, seed=5).seed == 5
+
+
+# --------------------------------------------------- shim bitwise equality
+@pytest.fixture(scope="module")
+def planner():
+    return Planner(default_topology(), max_relays=6)
+
+
+def _assert_plans_equal(a, b):
+    if isinstance(a, float) or np.ndim(a) == 0 and not hasattr(a, "F"):
+        assert a == b
+        return
+    if isinstance(a, list):  # pareto frontiers
+        assert len(a) == len(b)
+        for pa, pb in zip(a, b):
+            assert pa.tput_goal == pb.tput_goal
+            assert pa.cost_per_gb == pb.cost_per_gb
+            _assert_plans_equal(pa.plan, pb.plan)
+        return
+    grid_a = a.G if hasattr(a, "G") else a.F
+    grid_b = b.G if hasattr(b, "G") else b.F
+    assert np.array_equal(np.asarray(grid_a), np.asarray(grid_b))
+    assert np.array_equal(np.asarray(a.N), np.asarray(b.N))
+    assert a.total_cost == b.total_cost
+    assert a.throughput == b.throughput
+
+
+SHIM_CASES = [
+    ("max_throughput", (SRC, DST), {},
+     dict(objective="max_throughput", src=SRC, dst=DST)),
+    ("max_multicast_throughput", (SRC, DSTS), {},
+     dict(objective="max_throughput", src=SRC, dsts=DSTS)),
+    ("plan_cost_min", (SRC, DST, 2.0, 4.0), {},
+     dict(objective="cost_min", src=SRC, dst=DST, tput_goal_gbps=2.0,
+          volume_gb=4.0)),
+    ("plan_tput_max", (SRC, DST, 0.09, 4.0), {"n_samples": 8},
+     dict(objective="tput_max", src=SRC, dst=DST, cost_ceiling_per_gb=0.09,
+          volume_gb=4.0, n_samples=8)),
+    ("plan_multicast_cost_min", (SRC, DSTS, 1.5, 4.0), {},
+     dict(objective="cost_min", src=SRC, dsts=DSTS, tput_goal_gbps=1.5,
+          volume_gb=4.0)),
+    ("plan_multicast_tput_max", (SRC, DSTS, 0.15, 4.0), {"n_samples": 4},
+     dict(objective="tput_max", src=SRC, dsts=DSTS,
+          cost_ceiling_per_gb=0.15, volume_gb=4.0, n_samples=4)),
+    ("pareto_frontier", (SRC, DST, 4.0), {"n_samples": 6},
+     dict(objective="pareto", src=SRC, dst=DST, volume_gb=4.0,
+          n_samples=6)),
+    ("pareto_frontier_fast", (SRC, DST, 4.0), {"n_samples": 8},
+     dict(objective="pareto_fast", src=SRC, dst=DST, volume_gb=4.0,
+          n_samples=8)),
+]
+
+
+@pytest.mark.parametrize(
+    "method,args,kwargs,spec_kw",
+    SHIM_CASES, ids=[c[0] for c in SHIM_CASES],
+)
+def test_shim_bitwise_equals_spec_path(planner, method, args, kwargs,
+                                       spec_kw):
+    with pytest.warns(DeprecationWarning, match=method):
+        legacy = getattr(planner, method)(*args, **kwargs)
+    fresh = planner.plan(PlanSpec(**spec_kw))
+    _assert_plans_equal(legacy, fresh)
+
+
+# --------------------------------------------------------- report protocol
+def test_report_protocol_conformance():
+    """Every exported report dataclass speaks to_dict()/summary(): a kind
+    tag, canonical payload keys, and declared headline fields."""
+    from repro.transfer.reports import Report
+
+    classes = [
+        transfer.JobReport, transfer.ServiceReport, transfer.GatewayReport,
+        transfer.MulticastGatewayReport, transfer.FleetReport,
+        transfer.TenantReport, calibrate.CalibratedServiceReport,
+    ]
+    kinds = set()
+    for cls in classes:
+        assert issubclass(cls, Report), cls.__name__
+        assert cls.kind != Report.kind, f"{cls.__name__} keeps default kind"
+        assert cls._payload is not Report._payload, cls.__name__
+        assert isinstance(cls._summary_keys, tuple) and cls._summary_keys
+        kinds.add(cls.kind)
+    assert len(kinds) == len(classes), "report kind tags must be unique"

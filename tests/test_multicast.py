@@ -317,16 +317,16 @@ def test_service_replan_backs_off_goal_before_failing(top, monkeypatch):
     svc = TransferService(top, backend="jax", max_relays=6)
     svc.submit(TransferRequest("a", "aws:us-west-2", "aws:eu-central-1",
                                2.0, 4.0))
-    orig = svc.planner.plan_cost_min
+    orig = svc.planner.plan
 
-    def flaky(src, dst, goal, vol, **kw):
-        plan = orig(src, dst, goal, vol, **kw)
-        if kw.get("degraded_links") and goal > 1.5:
+    def flaky(spec):
+        plan = orig(spec)
+        if spec.degraded_links and (spec.tput_goal_gbps or 0.0) > 1.5:
             # degenerate solver stall at high goals on the degraded grid
             return dataclasses.replace(plan, solver_status="max_iter")
         return plan
 
-    monkeypatch.setattr(svc.planner, "plan_cost_min", flaky)
+    monkeypatch.setattr(svc.planner, "plan", flaky)
     s, d = top.index("aws:us-west-2"), top.index("aws:eu-central-1")
     rep = svc.run(faults=[LinkDegrade(t_s=2.0, src=s, dst=d, factor=0.3)])
     (job,) = rep.jobs
