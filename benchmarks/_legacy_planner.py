@@ -245,8 +245,10 @@ def solve_milp_legacy(top, src, dst, tput_goal) -> MILPResult | None:
 
 def pareto_frontier_legacy(planner, src, dst, volume_gb, *, n_samples):
     """Pre-PR §5.2 sweep: one sequential round-down per goal."""
+    from repro.core import PlanSpec
+
     sub, s, t, keep = planner._prune(src, dst)
-    hi = planner.max_throughput(src, dst)
+    hi = planner.plan(PlanSpec(objective="max_throughput", src=src, dst=dst))
     goals = np.linspace(hi / n_samples, hi * 0.999, n_samples)
     out = []
     for g in goals:

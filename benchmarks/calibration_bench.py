@@ -35,13 +35,16 @@ def run():
         Incident,
         ProbeBudget,
     )
-    from repro.core import Planner, default_topology
+    from repro.core import Planner, PlanSpec, default_topology
     from repro.transfer import TransferRequest
 
     top = default_topology()
 
     # the incident lands on the stale plan's widest edge (its primary path)
-    stale_plan = Planner(top, max_relays=6).plan_cost_min(SRC, DST, GOAL, 4.0)
+    stale_plan = Planner(top, max_relays=6).plan(PlanSpec(
+        objective="cost_min", src=SRC, dst=DST,
+        tput_goal_gbps=GOAL, volume_gb=4.0,
+    ))
     a, b = np.unravel_index(int(np.argmax(stale_plan.F)), stale_plan.F.shape)
     drift = DriftModel(
         top, seed=0, drift_sigma=0.10, diurnal_amp=0.0,

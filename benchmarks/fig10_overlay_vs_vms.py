@@ -10,7 +10,7 @@ from .common import FAST, emit, timed
 
 
 def run():
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
 
     top = default_topology()
     planner = Planner(top)
@@ -28,8 +28,11 @@ def run():
             p_n = Planner(top_n)
             with timed() as t:
                 dp = direct_plan(top_n, src, dst, 50.0, num_vms=n_vm)
-                op = p_n.plan_tput_max(src, dst, dp.cost_per_gb * 1.3, 50.0,
-                                       n_samples=8)
+                op = p_n.plan(PlanSpec(
+                    objective="tput_max", src=src, dst=dst,
+                    cost_ceiling_per_gb=dp.cost_per_gb * 1.3,
+                    volume_gb=50.0, n_samples=8,
+                ))
             ratio = op.throughput / max(dp.throughput, 1e-9)
             ratios.append(ratio)
             emit(f"fig10/{label}/vms={n_vm}/overlay_over_direct", t.us,

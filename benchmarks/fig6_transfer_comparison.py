@@ -25,7 +25,7 @@ ROUTES = [
 
 def run():
     import repro.core.baselines as B
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
     from repro.transfer import execute_plan, execute_service_model
 
     top = default_topology()
@@ -37,11 +37,12 @@ def run():
         svc = getattr(B, svc_name)
         with timed() as t:
             dp = direct_plan(top, src, dst, volume)
-            plan = planner.plan_tput_max(
-                src, dst, cost_ceiling_per_gb=max(dp.cost_per_gb * 1.15,
-                                                  svc.cost(top, src, dst, 1.0)),
+            plan = planner.plan(PlanSpec(
+                objective="tput_max", src=src, dst=dst,
+                cost_ceiling_per_gb=max(dp.cost_per_gb * 1.15,
+                                        svc.cost(top, src, dst, 1.0)),
                 volume_gb=volume, n_samples=8 if FAST else 16,
-            )
+            ))
             rep = execute_plan(plan, chunk_mb=chunk, seed=0)
         svc_res = execute_service_model(svc, top, src, dst, volume)
         speedup = svc_res["time_s"] / rep.time_s

@@ -12,7 +12,7 @@ from .common import FAST, emit, timed
 
 
 def run():
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
 
     top = default_topology()
     planner = Planner(top, max_relays=8)
@@ -35,10 +35,11 @@ def run():
             with timed() as t:
                 for s, d in pairs:
                     dp = direct_plan(top, keys[s], keys[d], 50.0)
-                    plan = planner.plan_tput_max(
-                        keys[s], keys[d], dp.cost_per_gb * 1.25, 50.0,
-                        n_samples=8,
-                    )
+                    plan = planner.plan(PlanSpec(
+                        objective="tput_max", src=keys[s], dst=keys[d],
+                        cost_ceiling_per_gb=dp.cost_per_gb * 1.25,
+                        volume_gb=50.0, n_samples=8,
+                    ))
                     sp.append(plan.throughput / max(dp.throughput, 1e-9))
             sp = np.array(sp)
             speedups_all.extend(sp.tolist())

@@ -10,7 +10,7 @@ from .common import FAST, emit, timed
 
 
 def run():
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
     from repro.transfer import simulate_transfer
 
     top = default_topology()
@@ -30,9 +30,11 @@ def run():
                 continue
             done += 1
             dp = direct_plan(top, keys[s], keys[d], volume, num_vms=2)
-            op = planner.plan_tput_max(keys[s], keys[d],
-                                       dp.cost_per_gb * 1.3, volume,
-                                       n_samples=6)
+            op = planner.plan(PlanSpec(
+                objective="tput_max", src=keys[s], dst=keys[d],
+                cost_ceiling_per_gb=dp.cost_per_gb * 1.3,
+                volume_gb=volume, n_samples=6,
+            ))
             for mode, plan in (("direct", dp), ("overlay", op)):
                 res = simulate_transfer(plan, chunk_mb=16, seed=done,
                                         straggler_prob=0.0)

@@ -28,7 +28,7 @@ def _forced_conn_plan(top, src, dst, n_conn: int, volume: float):
 
 
 def run():
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
     from repro.transfer import simulate_transfer
 
     top = default_topology()
@@ -62,8 +62,10 @@ def run():
     planner = Planner(top)
     for s, d, label in routes[: 1 if FAST else None]:
         with timed() as t:
-            pts = planner.pareto_frontier(s, d, 50.0,
-                                          n_samples=6 if FAST else 14)
+            pts = planner.plan(PlanSpec(
+                objective="pareto", src=s, dst=d, volume_gb=50.0,
+                n_samples=6 if FAST else 14,
+            ))
         base = pts[0].cost_per_gb
         for p in pts[:: max(len(pts) // 5, 1)]:
             emit(

@@ -13,7 +13,7 @@ from .common import FAST, emit
 
 
 def run():
-    from repro.core import Planner, default_topology, direct_plan
+    from repro.core import Planner, PlanSpec, default_topology, direct_plan
     from repro.transfer import simulate_transfer, simulate_transfer_reference
 
     top = default_topology()
@@ -23,10 +23,11 @@ def run():
     volume = 8.0 if FAST else 32.0
     chunk = 32.0
     dp = direct_plan(top, src, dst, volume)
-    plan = planner.plan_tput_max(
-        src, dst, cost_ceiling_per_gb=dp.cost_per_gb * 1.15,
+    plan = planner.plan(PlanSpec(
+        objective="tput_max", src=src, dst=dst,
+        cost_ceiling_per_gb=dp.cost_per_gb * 1.15,
         volume_gb=volume, n_samples=8, backend="jax",
-    )
+    ))
 
     t0 = time.time()
     new = simulate_transfer(plan, chunk_mb=chunk, seed=0)

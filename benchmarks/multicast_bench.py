@@ -20,7 +20,7 @@ FLOOR = 2.0
 
 
 def run():
-    from repro.core import default_topology
+    from repro.core import PlanSpec, default_topology
     from repro.core.planner import Planner
     from repro.transfer import (
         TransferJob,
@@ -34,11 +34,20 @@ def run():
 
     # ---- plan cost: multicast vs N unicasts at the same floor
     t0 = time.time()
-    mc = planner.plan_multicast_cost_min(SRC, DSTS, FLOOR, 16.0)
+    mc = planner.plan(PlanSpec(
+        objective="cost_min", src=SRC, dsts=tuple(DSTS),
+        tput_goal_gbps=FLOOR, volume_gb=16.0,
+    ))
     t_mc = time.time() - t0
     assert mc.solver_status == "optimal" and mc.validate() == []
     t0 = time.time()
-    unis = [planner.plan_cost_min(SRC, d, FLOOR, 16.0) for d in DSTS]
+    unis = [
+        planner.plan(PlanSpec(
+            objective="cost_min", src=SRC, dst=d,
+            tput_goal_gbps=FLOOR, volume_gb=16.0,
+        ))
+        for d in DSTS
+    ]
     t_uni = time.time() - t0
     uni_cost = sum(u.total_cost for u in unis)
     uni_egress = sum(u.egress_cost for u in unis)
@@ -59,10 +68,11 @@ def run():
     s, d0 = top.index(SRC), top.index(DSTS[0])
     builds0 = milp.N_STRUCT_BUILDS
     t0 = time.time()
-    replan = planner.plan_multicast_cost_min(
-        SRC, DSTS, [0.0, FLOOR, FLOOR], 8.0,
+    replan = planner.plan(PlanSpec(
+        objective="cost_min", src=SRC, dsts=tuple(DSTS),
+        tput_goal_gbps=(0.0, FLOOR, FLOOR), volume_gb=8.0,
         degraded_links={(s, d0): 0.3},
-    )
+    ))
     t_re = time.time() - t0
     assert replan.solver_status == "optimal"
     assert milp.N_STRUCT_BUILDS == builds0, "re-plan re-assembled structures"

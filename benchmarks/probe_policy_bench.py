@@ -59,10 +59,16 @@ def _scenario(top):
     carrying each plan's largest flow — the scenario a static belief
     cannot track. Returns (planner, plans, drift, plan_mask)."""
     from repro.calibrate import DriftModel, Incident
-    from repro.core import Planner
+    from repro.core import Planner, PlanSpec
 
     planner = Planner(top, max_relays=6)
-    plans = [planner.plan_cost_min(s, d, GOAL, 8.0) for s, d in CONTEXTS]
+    plans = [
+        planner.plan(PlanSpec(
+            objective="cost_min", src=s, dst=d,
+            tput_goal_gbps=GOAL, volume_gb=8.0,
+        ))
+        for s, d in CONTEXTS
+    ]
     mask = np.zeros_like(np.asarray(top.tput), dtype=bool)
     hit = []
     for p in plans:

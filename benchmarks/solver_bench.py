@@ -11,7 +11,7 @@ from .common import FAST, emit, timed
 
 
 def run():
-    from repro.core import Planner, default_topology
+    from repro.core import Planner, PlanSpec, default_topology
     from repro.core.solver.bnb import solve_milp
 
     top = default_topology()
@@ -19,7 +19,10 @@ def run():
     src, dst = "azure:canadacentral", "gcp:asia-northeast1"
 
     with timed() as t:
-        plan = planner.plan_cost_min(src, dst, 25.0, 50.0)
+        plan = planner.plan(PlanSpec(
+            objective="cost_min", src=src, dst=dst,
+            tput_goal_gbps=25.0, volume_gb=50.0,
+        ))
     emit("solver/cost_min_relaxed_s", t.us, round(t.us / 1e6, 3))
     assert t.us / 1e6 < 5.0, "paper claims <5s solves"
 
@@ -32,7 +35,9 @@ def run():
 
     n = 4 if FAST else 20
     t0 = time.time()
-    planner.pareto_frontier(src, dst, 50.0, n_samples=n)
+    planner.plan(PlanSpec(
+        objective="pareto", src=src, dst=dst, volume_gb=50.0, n_samples=n,
+    ))
     per = (time.time() - t0) / n
     emit("solver/pareto_per_sample_s", per * 1e6, round(per, 3))
     emit("solver/pareto_100_samples_projected_s", per * 1e6, round(per * 100, 1))
@@ -41,7 +46,10 @@ def run():
     # "100 samples in under 20 s on a c5.9xlarge" workload, single CPU core)
     nb = 16 if FAST else 100
     t0 = time.time()
-    pts = planner.pareto_frontier_fast(src, dst, 50.0, n_samples=nb)
+    pts = planner.plan(PlanSpec(
+        objective="pareto_fast", src=src, dst=dst, volume_gb=50.0,
+        n_samples=nb,
+    ))
     dt = time.time() - t0
     emit("solver/pareto_batched_continuous_samples", dt * 1e6, nb)
     emit("solver/pareto_batched_continuous_total_s", dt * 1e6, round(dt, 2))
@@ -53,7 +61,7 @@ def run():
 def _speedup_section(top, src, dst):
     """Fast path (LPStructure cache + presolve + batched round-down) vs the
     frozen pre-PR sequential pipeline, identical plan costs enforced."""
-    from repro.core import Planner
+    from repro.core import Planner, PlanSpec
     from . import _legacy_planner as legacy
 
     n_samples = 8 if FAST else 40
@@ -71,11 +79,17 @@ def _speedup_section(top, src, dst):
         planner = Planner(top)
         # warm both paths once: jit/struct caches are amortized across the
         # thousands of planner calls this hot path serves
-        planner.plan_cost_min(a, b, 20.0, 50.0, backend="jax")
+        planner.plan(PlanSpec(
+            objective="cost_min", src=a, dst=b, tput_goal_gbps=20.0,
+            volume_gb=50.0, backend="jax",
+        ))
 
-        # ---- plan_cost_min: >=3x required
+        # ---- cost_min: >=3x required
         with timed() as t_new:
-            plan_new = planner.plan_cost_min(a, b, 25.0, 50.0, backend="jax")
+            plan_new = planner.plan(PlanSpec(
+                objective="cost_min", src=a, dst=b, tput_goal_gbps=25.0,
+                volume_gb=50.0, backend="jax",
+            ))
         legacy_planner = Planner(top)
         sub, s, t_, keep = legacy_planner._prune(a, b)
         with timed() as t_old:
@@ -92,8 +106,10 @@ def _speedup_section(top, src, dst):
 
         # ---- integerized pareto_frontier: >=5x required
         t0 = time.time()
-        pts_new = planner.pareto_frontier(a, b, 50.0, n_samples=n_samples,
-                                          backend="jax")
+        pts_new = planner.plan(PlanSpec(
+            objective="pareto", src=a, dst=b, volume_gb=50.0,
+            n_samples=n_samples, backend="jax",
+        ))
         t_fast = time.time() - t0
         t0 = time.time()
         pts_old = legacy.pareto_frontier_legacy(legacy_planner, a, b, 50.0,

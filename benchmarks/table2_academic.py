@@ -20,7 +20,8 @@ VOLUME = 16.0
 
 def run():
     from repro.core import (
-        Planner, default_topology, direct_plan, gridftp_plan, ron_plan,
+        Planner, PlanSpec, default_topology, direct_plan, gridftp_plan,
+        ron_plan,
     )
     from repro.transfer import simulate_transfer
 
@@ -33,17 +34,20 @@ def run():
     rows.append(("skyplane_direct_1vm", dp1, "dynamic"))
     rows.append(("skyplane_ron_4vm", ron_plan(top, SRC, DST, VOLUME, num_vms=4),
                  "dynamic"))
-    cost_plan = planner.plan_cost_min(
-        SRC, DST, max(dp1.throughput * 2.2, 1.0), VOLUME
-    )
+    cost_plan = planner.plan(PlanSpec(
+        objective="cost_min", src=SRC, dst=DST,
+        tput_goal_gbps=max(dp1.throughput * 2.2, 1.0), volume_gb=VOLUME,
+    ))
     rows.append(("skyplane_costopt_4vm", cost_plan, "dynamic"))
     ron_cost = rows[2][1].total_cost
     # paper Table 2: tput-opt costs 0.70x RON while beating its throughput;
     # the achievable margin is grid-dependent, so give the planner a 0.85x
     # ceiling (still decisively cheaper than RON)
-    tput_plan = planner.plan_tput_max(
-        SRC, DST, ron_cost / VOLUME * 0.85, VOLUME, n_samples=8 if FAST else 16
-    )
+    tput_plan = planner.plan(PlanSpec(
+        objective="tput_max", src=SRC, dst=DST,
+        cost_ceiling_per_gb=ron_cost / VOLUME * 0.85, volume_gb=VOLUME,
+        n_samples=8 if FAST else 16,
+    ))
     rows.append(("skyplane_tputopt_4vm", tput_plan, "dynamic"))
 
     results = {}

@@ -1,0 +1,656 @@
+"""skylint rules: the repo's load-bearing invariants, machine-checked.
+
+Each rule is a :class:`~repro.analysis.engine.Rule` registered with
+``@register``. Rules key off root-relative paths (``ctx.under(...)``), so
+the self-tests exercise them against synthetic mini-trees under
+``tmp_path`` that mirror the real layout.
+
+| id     | invariant                                                     |
+|--------|---------------------------------------------------------------|
+| SKY001 | determinism: seeded RNG only, no wall-clock in sim/planner    |
+| SKY002 | cache safety: LP structures built only by milp.py factories   |
+| SKY003 | frozen grids: Topology arrays mutate via with_tput only       |
+| SKY004 | sim parity: flowsim / flowsim_ref signatures + dispatch match |
+| SKY005 | report protocol: *Report classes expose kind/to_dict/summary  |
+| SKY006 | deprecated API: first-party code uses Planner.plan(PlanSpec)  |
+| SKY007 | shared state: registered counters + lock-guarded workers only |
+| SKY008 | format drift: 88-col lines, double quotes, no tabs            |
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import Context, Finding, Rule, register
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _tail(node: ast.AST) -> str | None:
+    """The final attribute/name of a call target (``c`` for ``a.b.c``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+# --------------------------------------------------------------------- SKY001
+# Everything the planner, simulators and calibration plane compute must be a
+# pure function of (topology, spec, seed): seeds flow in as parameters and
+# wall-clock never leaks into simulated time. time.monotonic()/perf_counter()
+# stay legal — they measure the measurement, not the simulation.
+_WALL_CLOCK = {
+    "time.time",
+    "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "date.today", "datetime.date.today",
+}
+# Seeded construction stays legal on both RNG front-ends.
+_RANDOM_OK = {"Random", "SystemRandom"}
+_NP_RANDOM_OK = {"default_rng", "Generator", "PCG64", "SeedSequence"}
+_DETERMINISTIC_DIRS = (
+    "src/repro/transfer", "src/repro/core", "src/repro/calibrate",
+    "src/repro/ckpt",
+)
+
+
+@register
+class DeterminismRule(Rule):
+    id = "SKY001"
+    severity = "error"
+    description = (
+        "seeded randomness only: no unseeded default_rng(), no bare "
+        "random.*/np.random.* module calls; no wall-clock reads inside "
+        "sim/planner/calibrate code"
+    )
+    hint = "take a seed parameter and draw from np.random.default_rng(seed)"
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out = []
+        in_sim_code = ctx.under(*_DETERMINISTIC_DIRS)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            tail = _tail(node.func)
+            if tail == "default_rng" and not node.args and not node.keywords:
+                out.append(ctx.finding(
+                    self, node,
+                    "unseeded default_rng() — entropy from the OS breaks "
+                    "replayability",
+                ))
+            elif dotted is not None and dotted.startswith("random."):
+                fn = dotted.split(".", 1)[1]
+                if "." not in fn and fn not in _RANDOM_OK:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"bare {dotted}() draws from the global random "
+                        "module state",
+                        hint="use random.Random(seed) or a passed-in rng",
+                    ))
+            elif dotted is not None and (
+                dotted.startswith("np.random.")
+                or dotted.startswith("numpy.random.")
+            ):
+                fn = dotted.split("random.", 1)[1]
+                if "." not in fn and fn not in _NP_RANDOM_OK:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"{dotted}() uses numpy's legacy global RNG state",
+                    ))
+            elif in_sim_code and dotted in _WALL_CLOCK:
+                out.append(ctx.finding(
+                    self, node,
+                    f"wall-clock read {dotted}() inside deterministic "
+                    "sim/planner code",
+                    hint="pass timestamps in as parameters; "
+                    "time.monotonic()/perf_counter() are fine for "
+                    "measuring real elapsed time",
+                ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY002
+@register
+class CacheSafetyRule(Rule):
+    id = "SKY002"
+    severity = "error"
+    description = (
+        "LPStructure/MulticastLPStructure are built only by core/milp.py's "
+        "factories — re-plans must ride cached structures via scale cuts"
+    )
+    hint = "call milp.structure(...) / milp.multicast_structure(...)"
+
+    FACTORY_HOME = "src/repro/core/milp.py"
+    CLASSES = {"LPStructure", "MulticastLPStructure"}
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        if ctx.current.relpath == self.FACTORY_HOME:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _tail(node.func) in self.CLASSES:
+                out.append(ctx.finding(
+                    self, node,
+                    f"direct {_tail(node.func)}(...) construction bypasses "
+                    "the structure cache (N_STRUCT_BUILDS)",
+                ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY003
+@register
+class FrozenGridRule(Rule):
+    id = "SKY003"
+    severity = "error"
+    description = (
+        "no subscript assignment into Topology grid arrays — the grids "
+        "are frozen; mutation routes through Topology.with_tput"
+    )
+    hint = "build a modified copy with top.with_tput(...)"
+
+    GRIDS = {
+        "tput", "price_egress", "price_vm", "limit_ingress",
+        "limit_egress", "rtt_ms",
+    }
+
+    def _grid_store(self, target: ast.AST) -> ast.AST | None:
+        if (
+            isinstance(target, ast.Subscript)
+            and isinstance(target.value, ast.Attribute)
+            and target.value.attr in self.GRIDS
+        ):
+            return target
+        return None
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out = []
+        for node in ast.walk(tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                hit = self._grid_store(t)
+                if hit is not None:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"in-place write to frozen grid "
+                        f".{t.value.attr}[...]",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY004
+def _func(tree: ast.Module, name: str) -> ast.FunctionDef | None:
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _signature(fn: ast.FunctionDef) -> list[tuple[str, str | None]]:
+    """(name, default-source) pairs across every parameter kind."""
+    a = fn.args
+    sig: list[tuple[str, str | None]] = []
+    pos = list(a.posonlyargs) + list(a.args)
+    pos_defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    for arg, d in zip(pos, pos_defaults):
+        sig.append((arg.arg, None if d is None else ast.unparse(d)))
+    if a.vararg:
+        sig.append(("*" + a.vararg.arg, None))
+    elif a.kwonlyargs:
+        sig.append(("*", None))
+    for arg, d in zip(a.kwonlyargs, a.kw_defaults):
+        sig.append((arg.arg, None if d is None else ast.unparse(d)))
+    if a.kwarg:
+        sig.append(("**" + a.kwarg.arg, None))
+    return sig
+
+
+def _dispatch_names(fn: ast.FunctionDef) -> set[str]:
+    """Names a sim's event loop dispatches on: the second argument of every
+    ``isinstance(ev, ...)`` call under ``fn`` (tuples contribute each
+    member)."""
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "isinstance"
+            and len(node.args) == 2
+        ):
+            continue
+        spec = node.args[1]
+        members = spec.elts if isinstance(spec, ast.Tuple) else [spec]
+        for m in members:
+            t = _tail(m)
+            if t is not None:
+                names.add(t)
+    return names
+
+
+@register
+class SimParityRule(Rule):
+    id = "SKY004"
+    severity = "error"
+    description = (
+        "flowsim.simulate_multi and flowsim_ref.simulate_multi_reference "
+        "keep identical signatures, and every event class in events.py is "
+        "dispatched by both event loops"
+    )
+    hint = "mirror the change in the sibling simulator"
+
+    ANCHOR = "src/repro/transfer/flowsim.py"
+    REF = "src/repro/transfer/flowsim_ref.py"
+    EVENTS = "src/repro/transfer/events.py"
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        if ctx.current.relpath != self.ANCHOR:
+            return []
+        ref_sf = ctx.file(self.REF)
+        ev_sf = ctx.file(self.EVENTS)
+        if ref_sf is None or ref_sf.tree is None:
+            return [ctx.finding(
+                self, 1, f"cannot check sim parity: {self.REF} not in the "
+                "scanned tree", hint="scan src/ as a whole",
+            )]
+        out = []
+        fast = _func(tree, "simulate_multi")
+        ref = _func(ref_sf.tree, "simulate_multi_reference")
+        if fast is None or ref is None:
+            missing = "simulate_multi" if fast is None else (
+                "simulate_multi_reference"
+            )
+            return [ctx.finding(self, 1, f"{missing} not found")]
+
+        sig_fast, sig_ref = _signature(fast), _signature(ref)
+        if sig_fast != sig_ref:
+            out.append(ctx.finding(
+                self, fast,
+                "simulate_multi and simulate_multi_reference signatures "
+                f"differ: {sig_fast} vs {sig_ref}",
+            ))
+
+        # Expand RATE_EVENTS through events.py so dispatching on the tuple
+        # covers its members.
+        groups: dict[str, set[str]] = {}
+        universe: set[str] = set()
+        if ev_sf is not None and ev_sf.tree is not None:
+            for node in ev_sf.tree.body:
+                if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Tuple
+                ):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            groups[t.id] = {
+                                _tail(e) for e in node.value.elts
+                                if _tail(e) is not None
+                            }
+                if isinstance(node, ast.ClassDef):
+                    fields = {
+                        s.target.id for s in node.body
+                        if isinstance(s, ast.AnnAssign)
+                        and isinstance(s.target, ast.Name)
+                    }
+                    # event classes are the frozen dataclasses stamped with
+                    # an event time; result/job records carry no t_s
+                    if "t_s" in fields:
+                        universe.add(node.name)
+
+        def expand(names: set[str]) -> set[str]:
+            flat = set()
+            for n in names:
+                flat |= groups.get(n, {n})
+            return flat
+
+        disp_fast = expand(_dispatch_names(fast))
+        disp_ref = expand(_dispatch_names(ref))
+        for side, disp, fn in (
+            ("flowsim", disp_fast, fast), ("flowsim_ref", disp_ref, ref),
+        ):
+            if "int" not in disp:
+                out.append(ctx.finding(
+                    self, fn,
+                    f"{side} event loop has no job-arrival (int) dispatch "
+                    "branch",
+                ))
+        for ev in sorted(universe):
+            for side, disp, fn in (
+                ("flowsim", disp_fast, fast),
+                ("flowsim_ref", disp_ref, ref),
+            ):
+                if ev not in disp:
+                    out.append(ctx.finding(
+                        self, fn,
+                        f"event class {ev} from events.py has no dispatch "
+                        f"branch in {side}",
+                    ))
+        for ev in sorted(disp_fast ^ disp_ref):
+            if ev == "int" or ev in universe:
+                continue  # already reported above
+            side = "flowsim" if ev in disp_fast else "flowsim_ref"
+            other = "flowsim_ref" if side == "flowsim" else "flowsim"
+            out.append(ctx.finding(
+                self, fast,
+                f"{side} dispatches on {ev} but {other} does not",
+            ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY005
+@register
+class ReportProtocolRule(Rule):
+    id = "SKY005"
+    severity = "error"
+    description = (
+        "every *Report class in the transfer plane exposes the report "
+        "protocol: kind, to_dict, summary"
+    )
+    hint = (
+        "subclass transfer.reports.Report, set kind and implement "
+        "_payload()/_summary_keys"
+    )
+
+    SCOPE = (
+        "src/repro/transfer", "src/repro/core", "src/repro/calibrate",
+        "src/repro/ckpt",
+    )
+    ROOT = "Report"  # the mixin itself is exempt
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        if not ctx.under(*self.SCOPE):
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not node.name.endswith("Report") or node.name == self.ROOT:
+                continue
+            full = ctx.mro_names(node.name)
+            own = ctx.mro_names(node.name, exclude=(self.ROOT,))
+            missing = [m for m in ("to_dict", "summary") if m not in full]
+            # the mixin's to_dict/summary only produce real output when the
+            # subclass chain supplies kind and _payload itself
+            if "kind" not in own:
+                missing.append("kind")
+            if "to_dict" not in own and "_payload" not in own:
+                missing.append("_payload")
+            if missing:
+                out.append(ctx.finding(
+                    self, node,
+                    f"{node.name} does not satisfy the report protocol "
+                    f"(missing: {', '.join(sorted(set(missing)))})",
+                ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY006
+@register
+class DeprecatedApiRule(Rule):
+    id = "SKY006"
+    severity = "error"
+    description = (
+        "first-party code calls Planner.plan(PlanSpec(...)), not the "
+        "deprecated plan_* shims (tests exempt: they pin shim equality)"
+    )
+    hint = "planner.plan(PlanSpec(objective=..., src=..., dst=...))"
+
+    SHIMS = {
+        "max_throughput", "max_multicast_throughput",
+        "plan_cost_min", "plan_tput_max",
+        "plan_multicast_cost_min", "plan_multicast_tput_max",
+        "pareto_frontier", "pareto_frontier_fast",
+    }
+    SCOPE = ("src", "benchmarks", "examples")
+    SHIM_HOME = "src/repro/core/planner.py"  # the shims' own definitions
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        if not ctx.under(*self.SCOPE):
+            return []
+        if ctx.current.relpath == self.SHIM_HOME:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in self.SHIMS
+            ):
+                out.append(ctx.finding(
+                    self, node,
+                    f".{node.func.attr}(...) is a deprecated shim",
+                ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY007
+def _bound_names(fn: ast.FunctionDef) -> set[str]:
+    """Names the function binds locally (params + any store target)."""
+    a = fn.args
+    bound = {p.arg for p in (
+        list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    )}
+    if a.vararg:
+        bound.add(a.vararg.arg)
+    if a.kwarg:
+        bound.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            bound -= set(node.names)
+    return bound
+
+
+class _LockWalk(ast.NodeVisitor):
+    """Find subscript stores on free names outside with-lock blocks."""
+
+    def __init__(self, free: set[str]):
+        self.free = free
+        self.in_lock = 0
+        self.hits: list[ast.AST] = []
+
+    def visit_With(self, node: ast.With):
+        locked = any(
+            "lock" in ast.unparse(item.context_expr).lower()
+            for item in node.items
+        )
+        if locked:
+            self.in_lock += 1
+        self.generic_visit(node)
+        if locked:
+            self.in_lock -= 1
+
+    def _check(self, target: ast.AST, node: ast.AST):
+        if self.in_lock:
+            return
+        if isinstance(target, ast.Subscript):
+            base = target.value
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id in self.free:
+                self.hits.append(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._check(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check(node.target, node)
+        self.generic_visit(node)
+
+
+@register
+class SharedStateRule(Rule):
+    id = "SKY007"
+    severity = "error"
+    description = (
+        "module-level mutable state in transfer//calibrate/ must be a "
+        "registered counter; gateway thread workers write shared "
+        "containers only under the lock"
+    )
+    hint = "register the counter here, or move the write under `with lock:`"
+
+    MODULE_SCOPE = ("src/repro/transfer", "src/repro/calibrate")
+    GLOBAL_SCOPE = (
+        "src/repro/transfer", "src/repro/calibrate", "src/repro/core",
+    )
+    # The sanctioned module-level mutables. N_STRUCT_BUILDS is the cache
+    # counter every zero-re-assembly test pins; __all__ is the API surface.
+    REGISTERED = {"N_STRUCT_BUILDS", "__all__"}
+    MUTABLE_CALLS = {
+        "dict", "list", "set", "defaultdict", "deque", "Counter",
+        "OrderedDict",
+    }
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out = []
+        if ctx.under(*self.MODULE_SCOPE):
+            out += self._module_state(tree, ctx)
+        if ctx.under(*self.GLOBAL_SCOPE):
+            out += self._globals(tree, ctx)
+        if ctx.current.relpath.startswith("src/repro/transfer/gateway"):
+            out += self._worker_closures(tree, ctx)
+        return out
+
+    def _is_mutable(self, value: ast.AST) -> bool:
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                              ast.SetComp, ast.DictComp)):
+            return True
+        return (
+            isinstance(value, ast.Call)
+            and _tail(value.func) in self.MUTABLE_CALLS
+        )
+
+    def _module_state(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out = []
+        for node in tree.body:
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                continue
+            if not self._is_mutable(value):
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id not in self.REGISTERED:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"module-level mutable {t.id!r} is unregistered "
+                        "shared state",
+                    ))
+        return out
+
+    def _globals(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Global):
+                rogue = [n for n in node.names if n not in self.REGISTERED]
+                if rogue:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"global statement on unregistered name(s): "
+                        f"{', '.join(rogue)}",
+                    ))
+        return out
+
+    def _worker_closures(self, tree: ast.Module, ctx: Context) -> list:
+        out = []
+        for top in tree.body:
+            if not isinstance(top, ast.FunctionDef):
+                continue
+            # which nested functions run on threads?
+            targets: set[str] = set()
+            for node in ast.walk(top):
+                if not (isinstance(node, ast.Call)
+                        and _tail(node.func) == "Thread"):
+                    continue
+                for kw in node.keywords:
+                    if kw.arg == "target" and isinstance(kw.value, ast.Name):
+                        targets.add(kw.value.id)
+            if not targets:
+                continue
+            for node in ast.walk(top):
+                if not (isinstance(node, ast.FunctionDef)
+                        and node.name in targets and node is not top):
+                    continue
+                free = _bound_names(top) - _bound_names(node)
+                walk = _LockWalk(free)
+                for st in node.body:
+                    walk.visit(st)
+                for hit in walk.hits:
+                    out.append(ctx.finding(
+                        self, hit,
+                        f"thread worker {node.name!r} writes a shared "
+                        "container outside the lock",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY008
+@register
+class FormatDriftRule(Rule):
+    id = "SKY008"
+    severity = "warning"
+    description = (
+        "format drift: lines stay within 88 columns, strings are "
+        "double-quoted, indentation is spaces (stand-in for the absent "
+        "ruff-format binary)"
+    )
+    hint = "wrap the line / flip the quotes, matching `ruff format` output"
+
+    MAX_COLS = 88
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        import io
+        import tokenize
+
+        out = []
+        sf = ctx.current
+        for i, line in enumerate(sf.lines, start=1):
+            if len(line) > self.MAX_COLS:
+                out.append(ctx.finding(
+                    self, i, f"line is {len(line)} columns (max "
+                    f"{self.MAX_COLS})",
+                ))
+            body = line[:len(line) - len(line.lstrip())]
+            if "\t" in body:
+                out.append(ctx.finding(self, i, "tab indentation"))
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(sf.source).readline)
+            for tok in toks:
+                if tok.type != tokenize.STRING:
+                    continue
+                text = tok.string
+                prefix_len = len(text) - len(text.lstrip("rbufRBUF"))
+                prefix = text[:prefix_len].lower()
+                body = text[prefix_len:]
+                if "r" in prefix and '"' in text:
+                    continue  # raw strings keep their author's quoting
+                if body.startswith("'") and '"' not in body:
+                    out.append(ctx.finding(
+                        self, tok.start[0],
+                        "single-quoted string (double quotes are the "
+                        "repo style)",
+                    ))
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            pass
+        return out

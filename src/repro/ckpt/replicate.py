@@ -23,10 +23,11 @@ from repro.transfer.gateway import (
     ObjectStore,
     transfer_objects_multicast,
 )
+from repro.transfer.reports import Report
 
 
 @dataclasses.dataclass
-class ReplicationReport:
+class ReplicationReport(Report):
     """Per-destination view of one multicast replication.
 
     ``plan_cost`` / ``plan_cost_per_gb`` are the cost of the WHOLE
@@ -40,6 +41,21 @@ class ReplicationReport:
     plan_cost_per_gb: float
     relay_regions: list
     gateway: GatewayReport
+
+    kind = "replication"
+    _summary_keys = ("destination", "plan_tput_gbps", "plan_cost_per_gb",
+                     "relays")
+
+    def _payload(self) -> dict:
+        return {
+            "destination": self.destination,
+            "plan_tput_gbps": self.plan_tput_gbps,
+            "plan_cost": self.plan_cost,
+            "plan_cost_per_gb": self.plan_cost_per_gb,
+            "relays": len(self.relay_regions),
+            "relay_regions": list(self.relay_regions),
+            "gateway": self.gateway.to_dict(),
+        }
 
 
 def replicate_checkpoint(

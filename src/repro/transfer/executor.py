@@ -42,7 +42,7 @@ from .reports import Report
 
 
 @dataclasses.dataclass
-class ExecutionReport:
+class ExecutionReport(Report):
     sim: SimResult
     planned_tput_gbps: float
     planned_cost: float
@@ -52,6 +52,21 @@ class ExecutionReport:
     @property
     def time_s(self) -> float:
         return self.sim.time_s
+
+    kind = "execution"
+    _summary_keys = ("time_s", "realized_tput_gbps", "tput_ratio",
+                     "cost_ratio")
+
+    def _payload(self) -> dict:
+        return {
+            "time_s": self.time_s,
+            "planned_tput_gbps": self.planned_tput_gbps,
+            "realized_tput_gbps": self.sim.tput_gbps,
+            "planned_cost": self.planned_cost,
+            "realized_cost": self.sim.total_cost,
+            "tput_ratio": self.tput_ratio,
+            "cost_ratio": self.cost_ratio,
+        }
 
 
 def execute_plan(plan: TransferPlan, **sim_kwargs) -> ExecutionReport:

@@ -1,0 +1,438 @@
+"""Self-tests for the skylint static-analysis engine (ISSUE 8).
+
+Each rule gets a good/bad fixture pair built as a synthetic mini-tree under
+``tmp_path`` (rules key off root-relative paths, so the trees mirror the
+real layout). The meta-tests at the bottom pin the active-rule id set and
+run the checker over the LIVE repo — the blocking CI gate can never
+silently rot: deleting a rule breaks the id pin, a regression anywhere in
+the tree breaks the exit-0 pin.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import active_rule_ids, check
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+EXPECTED_RULES = (
+    "SKY001", "SKY002", "SKY003", "SKY004",
+    "SKY005", "SKY006", "SKY007", "SKY008",
+)
+
+
+def lint(tmp_path, files):
+    """Write the fixture tree and run the full rule set over it."""
+    roots = set()
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src), encoding="utf-8")
+        roots.add(rel.split("/")[0])
+    return check(tmp_path, sorted(roots))
+
+
+def rule_ids(report):
+    return [f.rule for f in report.findings]
+
+
+# A minimal parity-clean simulator pair every SKY004 fixture starts from.
+EVENTS_SRC = """\
+    import dataclasses
+
+
+    @dataclasses.dataclass(frozen=True)
+    class LinkDegrade:
+        t_s: float
+        factor: float
+
+
+    @dataclasses.dataclass(frozen=True)
+    class VMFailure:
+        t_s: float
+        job: int
+
+
+    RATE_EVENTS = (LinkDegrade,)
+"""
+
+SIM_BODY = """\
+        for ev in faults:
+            if isinstance(ev, int):
+                pass
+            elif isinstance(ev, RATE_EVENTS):
+                pass
+            elif isinstance(ev, VMFailure):
+                pass
+"""
+
+FLOWSIM_SRC = (
+    "    def simulate_multi(jobs, faults=(), *, seed=0):\n" + SIM_BODY
+)
+FLOWSIM_REF_SRC = (
+    "    def simulate_multi_reference(jobs, faults=(), *, seed=0):\n"
+    + SIM_BODY
+)
+
+
+def parity_tree(flowsim=FLOWSIM_SRC, ref=FLOWSIM_REF_SRC):
+    return {
+        "src/repro/transfer/events.py": EVENTS_SRC,
+        "src/repro/transfer/flowsim.py": flowsim,
+        "src/repro/transfer/flowsim_ref.py": ref,
+    }
+
+
+# ------------------------------------------------------------------- SKY001
+def test_sky001_fires_on_unseeded_and_global_rng(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        import random
+
+        import numpy as np
+
+        rng = np.random.default_rng()
+        v = np.random.rand(3)
+        r = random.random()
+    """})
+    assert rule_ids(rep) == ["SKY001", "SKY001", "SKY001"]
+
+
+def test_sky001_fires_on_wall_clock_in_sim_code(tmp_path):
+    rep = lint(tmp_path, {"src/repro/calibrate/x.py": """\
+        import time
+
+        t0 = time.time()
+    """})
+    assert rule_ids(rep) == ["SKY001"]
+
+
+def test_sky001_allows_seeded_rng_monotonic_and_bench_clocks(tmp_path):
+    rep = lint(tmp_path, {
+        "src/repro/core/x.py": """\
+            import random
+            import time
+
+            import numpy as np
+
+            rng = np.random.default_rng(0)
+            r = random.Random(7)
+            t0 = time.monotonic()
+            t1 = time.perf_counter()
+        """,
+        # wall-clock is fine OUTSIDE the deterministic sim/planner dirs
+        "benchmarks/x.py": """\
+            import time
+
+            t0 = time.time()
+        """,
+    })
+    assert rep.ok, rep.to_text()
+
+
+# ------------------------------------------------------------------- SKY002
+def test_sky002_fires_outside_milp_and_allows_milp_itself(tmp_path):
+    rep = lint(tmp_path, {
+        "src/repro/transfer/x.py": """\
+            s = LPStructure(top, 0, 1)
+            m = MulticastLPStructure(top, 0, (1, 2))
+        """,
+        "src/repro/core/milp.py": """\
+            def structure(top, src, dst):
+                return LPStructure(top, src, dst)
+        """,
+    })
+    assert rule_ids(rep) == ["SKY002", "SKY002"]
+    assert all(f.path == "src/repro/transfer/x.py" for f in rep.findings)
+
+
+# ------------------------------------------------------------------- SKY003
+def test_sky003_fires_on_grid_subscript_stores(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        top.tput[0, 1] = 5.0
+        top.price_egress[2, 3] *= 0.5
+    """})
+    assert rule_ids(rep) == ["SKY003", "SKY003"]
+
+
+def test_sky003_allows_with_tput_and_plain_arrays(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        arr[0] = 5.0
+        top2 = top.with_tput(scale=0.5)
+        rate = top.tput[0, 1]
+    """})
+    assert rep.ok, rep.to_text()
+
+
+# ------------------------------------------------------------------- SKY004
+def test_sky004_clean_on_matching_sims(tmp_path):
+    rep = lint(tmp_path, parity_tree())
+    assert rep.ok, rep.to_text()
+
+
+def test_sky004_fires_on_signature_drift(tmp_path):
+    drifted = (
+        "    def simulate_multi_reference(jobs, faults=(), *, seed=0, "
+        "extra=None):\n" + SIM_BODY
+    )
+    rep = lint(tmp_path, parity_tree(ref=drifted))
+    assert rule_ids(rep) == ["SKY004"]
+    assert "signatures" in rep.findings[0].message
+
+
+def test_sky004_fires_on_missing_dispatch_branch(tmp_path):
+    ref_no_vmfail = (
+        "    def simulate_multi_reference(jobs, faults=(), *, seed=0):\n"
+        "        for ev in faults:\n"
+        "            if isinstance(ev, int):\n"
+        "                pass\n"
+        "            elif isinstance(ev, RATE_EVENTS):\n"
+        "                pass\n"
+    )
+    rep = lint(tmp_path, parity_tree(ref=ref_no_vmfail))
+    assert rule_ids(rep) == ["SKY004"]
+    assert "VMFailure" in rep.findings[0].message
+    assert "flowsim_ref" in rep.findings[0].message
+
+
+# ------------------------------------------------------------------- SKY005
+def test_sky005_fires_on_protocol_gaps(tmp_path):
+    rep = lint(tmp_path, {"src/repro/transfer/x.py": """\
+        import dataclasses
+
+
+        @dataclasses.dataclass
+        class FooReport:
+            value: float
+    """})
+    assert rule_ids(rep) == ["SKY005"]
+    msg = rep.findings[0].message
+    assert "kind" in msg and "to_dict" in msg and "summary" in msg
+
+
+def test_sky005_accepts_conformant_and_inherited_reports(tmp_path):
+    rep = lint(tmp_path, {
+        "src/repro/transfer/reports.py": """\
+            class Report:
+                kind = "report"
+
+                def _payload(self):
+                    raise NotImplementedError
+
+                def to_dict(self):
+                    return {"kind": self.kind, **self._payload()}
+
+                def summary(self):
+                    return self.kind
+        """,
+        "src/repro/transfer/x.py": """\
+            from .reports import Report
+
+
+            class FooReport(Report):
+                kind = "foo"
+
+                def _payload(self):
+                    return {}
+
+
+            class SubFooReport(FooReport):
+                kind = "subfoo"
+        """,
+    })
+    assert rep.ok, rep.to_text()
+
+
+# ------------------------------------------------------------------- SKY006
+def test_sky006_fires_in_first_party_code_not_tests(tmp_path):
+    shim_call = """\
+        def run(planner):
+            return planner.plan_cost_min("a", "b", 1.0, 2.0)
+    """
+    rep = lint(tmp_path, {
+        "benchmarks/x.py": shim_call,
+        "tests/test_x.py": shim_call,  # tests pin shim equality: exempt
+    })
+    assert rule_ids(rep) == ["SKY006"]
+    assert rep.findings[0].path == "benchmarks/x.py"
+
+
+# ------------------------------------------------------------------- SKY007
+def test_sky007_fires_on_unregistered_module_state(tmp_path):
+    rep = lint(tmp_path, {"src/repro/transfer/x.py": """\
+        CACHE = {}
+        __all__ = ["run"]
+    """})
+    assert rule_ids(rep) == ["SKY007"]
+    assert "CACHE" in rep.findings[0].message
+
+
+def test_sky007_fires_on_rogue_global(tmp_path):
+    rep = lint(tmp_path, {"src/repro/calibrate/x.py": """\
+        def bump():
+            global COUNT
+            COUNT = 1
+    """})
+    assert rule_ids(rep) == ["SKY007"]
+
+
+def test_sky007_worker_closure_needs_the_lock(tmp_path):
+    unlocked = """\
+        import threading
+
+
+        def run():
+            shared = {}
+            lock = threading.Lock()
+
+            def worker():
+                shared["k"] = 1
+
+            threading.Thread(target=worker).start()
+    """
+    rep = lint(tmp_path, {"src/repro/transfer/gateway.py": unlocked})
+    assert rule_ids(rep) == ["SKY007"]
+    assert "worker" in rep.findings[0].message
+
+    locked = unlocked.replace(
+        '    shared["k"] = 1',
+        '    with lock:\n                    shared["k"] = 1',
+    )
+    rep = lint(tmp_path, {"src/repro/transfer/gateway.py": locked})
+    assert rep.ok, rep.to_text()
+
+
+# ------------------------------------------------------------------- SKY008
+def test_sky008_fires_on_format_drift(tmp_path):
+    long_line = "x = " + "1 + " * 30 + "1"
+    rep = lint(tmp_path, {
+        "src/repro/core/x.py": long_line + "\ny = 'single'\n",
+    })
+    assert rule_ids(rep) == ["SKY008", "SKY008"]
+
+
+def test_sky008_allows_quotes_that_ruff_would_keep(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        a = "double"
+        b = 'has "embedded" doubles'
+    """})
+    assert rep.ok, rep.to_text()
+
+
+# ------------------------------------------------------------------ pragmas
+def test_line_pragma_suppresses_that_line_only(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        top.tput[0, 1] = 5.0  # skylint: disable=SKY003
+        top.tput[2, 3] = 5.0
+    """})
+    assert rule_ids(rep) == ["SKY003"]
+    assert rep.findings[0].line == 2
+    # every pragma is recorded for the allowlist audit
+    assert [(p.scope, p.line, p.rules) for p in rep.pragmas] == [
+        ("line", 1, ("SKY003",))
+    ]
+
+
+def test_file_pragma_suppresses_whole_file(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        # skylint: disable=SKY003
+        top.tput[0, 1] = 5.0
+        top.tput[2, 3] = 5.0
+    """})
+    assert rep.ok, rep.to_text()
+    assert rep.pragmas[0].scope == "file"
+
+
+def test_unknown_pragma_id_is_audited(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        # skylint: disable=SKY999
+        x = 1
+    """})
+    assert rule_ids(rep) == ["SKY000"]
+    assert "SKY999" in rep.findings[0].message
+
+
+def test_pragma_inside_string_literal_is_not_a_pragma(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        note = "# skylint: disable=SKY003"
+        top.tput[0, 1] = 5.0
+    """})
+    assert rule_ids(rep) == ["SKY003"]
+    assert rep.pragmas == []
+
+
+# --------------------------------------------------------------- the report
+def test_json_report_schema(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        top.tput[0, 1] = 5.0  # skylint: disable=SKY008
+    """})
+    d = json.loads(rep.to_json())
+    assert set(d) == {
+        "version", "ok", "files_scanned", "rules", "findings", "pragmas",
+    }
+    assert d["ok"] is False and d["files_scanned"] == 1
+    assert [r["id"] for r in d["rules"]] == list(EXPECTED_RULES)
+    assert all(
+        set(r) == {"id", "severity", "description"} for r in d["rules"]
+    )
+    (f,) = d["findings"]
+    assert set(f) == {"path", "line", "rule", "severity", "message", "hint"}
+    assert f["rule"] == "SKY003" and f["line"] == 1
+    (p,) = d["pragmas"]
+    assert p == {
+        "path": "src/repro/core/x.py", "line": 1, "scope": "line",
+        "rules": ["SKY008"],
+    }
+
+
+def test_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": "def broken(:\n"})
+    assert rule_ids(rep) == ["SKY000"]
+    assert "syntax error" in rep.findings[0].message
+
+
+def test_cli_exit_codes_and_json_output(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "clean.py").write_text('X = "ok"\n', encoding="utf-8")
+    env_cmd = [
+        sys.executable, "-m", "repro.analysis", "check", "src",
+        "--root", str(tmp_path), "--format", "json",
+    ]
+    proc = subprocess.run(
+        env_cmd, capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert json.loads(proc.stdout)["ok"] is True
+
+    (tmp_path / "src" / "bad.py").write_text(
+        "top.tput[0, 1] = 5.0\n", encoding="utf-8"
+    )
+    proc = subprocess.run(
+        env_cmd, capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1
+    out = json.loads(proc.stdout)
+    assert out["ok"] is False
+    assert [f["rule"] for f in out["findings"]] == ["SKY003"]
+
+
+# ------------------------------------------------------------- meta (gate)
+def test_active_rule_set_is_pinned():
+    """Deleting (or renaming) a rule must fail CI, not silently narrow the
+    gate. New rules extend this tuple deliberately."""
+    assert active_rule_ids() == EXPECTED_RULES
+
+
+def test_live_repo_is_clean():
+    """The blocking CI gate, run in-process: skylint over the real tree
+    exits clean. Any new violation anywhere in src/tests/benchmarks/
+    examples fails here first."""
+    rep = check(REPO_ROOT, ["src", "tests", "benchmarks", "examples"])
+    assert len(rep.rules) >= 7
+    assert rep.ok, "\n" + rep.to_text()

@@ -43,7 +43,7 @@ def test_mutation_cannot_poison_cached_lp_structures():
     struct = milp.structure(top, 0, 1)
     coef_before = struct.A_ub[0].copy()
     with pytest.raises(ValueError):
-        top.tput[0, 1] *= 0.01
+        top.tput[0, 1] *= 0.01  # skylint: disable=SKY003
     # the cached structure is untouched and still keyed on this instance
     assert milp.structure(top, 0, 1) is struct
     assert np.array_equal(struct.A_ub[0], coef_before)
