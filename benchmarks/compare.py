@@ -74,6 +74,12 @@ HARD_METRICS: dict[str, tuple[str, float, float]] = {
     "fleet/p99_job_latency_ratio": ("lower", 0.25, 1.1),
     "fleet/probe_cost_per_tenant_ratio": ("lower", 0.25, 0.7),
     "fleet/replan_struct_builds": ("lower", 0.0, 0.0),
+    # observability plane: an enabled tracer stays within 5% of the
+    # untraced simulator (best-of-N wall ratio — deterministic enough to
+    # hard-gate, unlike raw wall times), and re-plans on cached LP
+    # structures never move the registered struct-builds counter
+    "obs/tracing_overhead_ratio": ("lower", 0.15, 1.05),
+    "obs/struct_builds_delta": ("lower", 0.0, 0.0),
 }
 
 

@@ -1,0 +1,94 @@
+"""Skytrace overhead: flowsim with tracing on vs off.
+
+The instrumentation contract is that a disabled tracer costs one
+attribute read per guard site and an ENABLED tracer stays within 5% of
+the untraced simulator — ``obs/tracing_overhead_ratio`` (wall time with
+tracing on over off, best-of-N) is hard-gated at <= 1.05 in
+``benchmarks/compare.py``. Also pins ``N_STRUCT_BUILDS`` parity: re-plans
+over cached LP structures must leave the registered counter untouched.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .common import FAST, emit
+
+SRC, DST = "aws:us-west-2", "aws:eu-central-1"
+SRC2 = "gcp:us-central1"
+
+
+def _scenario():
+    """Two planned bulk jobs plus a seeded chaos suite on their links."""
+    from repro.core import Planner, PlanSpec, default_topology
+    from repro.transfer import ChaosScenario, TransferJob
+
+    top = default_topology()
+    planner = Planner(top, max_relays=6)
+    s, d, s2 = top.index(SRC), top.index(DST), top.index(SRC2)
+    vol = 1.0 if FAST else 2.0
+    specs = [
+        PlanSpec(objective="cost_min", src=SRC, dst=DST,
+                 tput_goal_gbps=2.0, volume_gb=vol),
+        PlanSpec(objective="cost_min", src=SRC2, dst=DST,
+                 tput_goal_gbps=2.0, volume_gb=vol),
+    ]
+    jobs = [
+        TransferJob(plan=planner.plan(specs[0]), name="bulk-a",
+                    chunk_mb=64.0),
+        TransferJob(plan=planner.plan(specs[1]), name="bulk-b",
+                    arrival_s=1.0, chunk_mb=64.0),
+    ]
+    sc = ChaosScenario(top, seed=0, horizon_s=6.0,
+                       n_brownouts=1, n_gray=1, n_flapping=1,
+                       links=[(s, d), (s2, d)])
+    return planner, specs, jobs, sc
+
+
+def run():
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.trace import disable, enable
+    from repro.transfer import simulate_multi
+
+    planner, specs, jobs, sc = _scenario()
+    faults = sc.events(len(jobs))
+
+    def once():
+        return simulate_multi(jobs, faults, seed=0, horizon_s=12.0,
+                              drain=True)
+
+    once()  # warm the vectorized kernels before timing
+    reps = 3 if FAST else 5
+
+    disable()
+    t_off = min(_timed(once) for _ in range(reps))
+
+    tr = enable(capacity=1 << 20)
+    n_events = 0
+    t_on = float("inf")
+    for _ in range(reps):
+        tr.clear()
+        t_on = min(t_on, _timed(once))
+        n_events = len(tr)
+    disable()
+
+    ratio = t_on / max(t_off, 1e-9)
+    emit("obs/sim_wall_off", t_off * 1e6, round(t_off * 1e3, 2))
+    emit("obs/sim_wall_on", t_on * 1e6, round(t_on * 1e3, 2))
+    emit("obs/tracing_overhead_ratio", t_on * 1e6, round(ratio, 3))
+    emit("obs/trace_events_per_run", t_on * 1e6, n_events)
+
+    # N_STRUCT_BUILDS parity: the same specs re-plan on cached structures,
+    # so the registered counter must not move
+    b0 = REGISTRY.counter("planner.struct_builds").value
+    for _ in range(2):
+        for spec in specs:
+            planner.plan(spec)
+    delta = REGISTRY.counter("planner.struct_builds").value - b0
+    emit("obs/struct_builds_delta", 0.0, delta)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

@@ -32,6 +32,7 @@ from . import (  # noqa: F401
     flowsim_bench,
     multicast_bench,
     multijob_bench,
+    obs_bench,
     probe_policy_bench,
     roofline,
     solver_bench,
@@ -54,6 +55,7 @@ MODULES = {
     "chaos": chaos_bench,
     "fleet": fleet_bench,
     "probe_policies": probe_policy_bench,
+    "obs": obs_bench,
     "roofline": roofline,
 }
 

@@ -59,8 +59,14 @@ def control_plane_demo():
               f"({r.structure_builds} LP re-assemblies)")
     assert report.all_done, "a job did not survive the fault schedule"
     assert report.replans and all(r.reused_structure for r in report.replans)
-    print(f"  all jobs done in {report.time_s:.1f}s "
-          f"across {report.segments} segments\n")
+    # the report protocol is the source of truth: summary() renders the
+    # headline keys, to_dict() carries the registry's metrics section
+    print("  " + report.summary())
+    metrics = report.to_dict()["metrics"]
+    assert metrics["service.replans"] >= len(report.replans)
+    assert metrics["planner.struct_builds"] >= 1
+    print("  metrics: "
+          + " ".join(f"{k}={v}" for k, v in metrics.items()) + "\n")
 
 
 def data_plane_demo():
@@ -86,11 +92,10 @@ def data_plane_demo():
         plan, src_store, dst_store, keys,
         chunk_bytes=1 << 18, workers_per_hop=3, fault_injector=injector,
     )
-    print(f"  {rep.chunks} chunks, {rep.faults_injected} faults injected, "
-          f"{rep.retried_chunks} chunk retries, "
-          f"{rep.duplicate_chunks} duplicates discarded")
-    print(f"  checksum_failures={rep.checksum_failures} "
-          f"chunks_missing={rep.chunks_missing}")
+    print("  " + rep.summary())
+    metrics = rep.to_dict()["metrics"]
+    assert metrics["gateway.retries"] >= rep.retried_chunks
+    print("  metrics: " + " ".join(f"{k}={v}" for k, v in metrics.items()))
     assert rep.checksum_failures == 0 and rep.chunks_missing == 0
     for key in keys:
         assert dst_store.get(key) == src_store.get(key)

@@ -83,8 +83,9 @@ def main():
 
     rep = fleet.run()
 
-    print(f"fleet makespan        : {rep.time_s:8.2f} s")
-    print(f"delivered             : {sum(j.delivered_gb for j in rep.jobs):8.2f} GB")
+    # summary() renders the fleet report's headline keys; to_dict()
+    # carries the registry metrics section for the planes the fleet spans
+    print(rep.summary())
     print(f"probe cost (shared)   : {rep.probe_cost_usd:8.4f} $")
     print(f"drift events          : {len(rep.drift_events):8d}")
     print(f"deferred jobs         : {rep.deferred_jobs:8d}")
@@ -106,6 +107,10 @@ def main():
         r.structure_builds for j in rep.jobs for r in j.replans
     )
     assert replan_builds == 0, "a fleet re-plan re-assembled an LP structure"
+    metrics = rep.to_dict()["metrics"]
+    assert metrics["planner.struct_builds"] >= 1
+    assert metrics["calibrate.probes"] >= 1
+    print("metrics: " + " ".join(f"{k}={v}" for k, v in metrics.items()))
     print("OK: all volume delivered, zero structure builds across re-plans")
 
 

@@ -15,6 +15,7 @@ the self-tests exercise them against synthetic mini-trees under
 | SKY006 | deprecated API: first-party code uses Planner.plan(PlanSpec)  |
 | SKY007 | shared state: registered counters + lock-guarded workers only |
 | SKY008 | format drift: 88-col lines, double quotes, no tabs            |
+| SKY009 | counter discipline: obs.metrics instruments, no `global`      |
 """
 
 from __future__ import annotations
@@ -502,19 +503,17 @@ class SharedStateRule(Rule):
     id = "SKY007"
     severity = "error"
     description = (
-        "module-level mutable state in transfer//calibrate/ must be a "
-        "registered counter; gateway thread workers write shared "
+        "module-level mutable state in transfer//calibrate/ must live in "
+        "the obs.metrics registry; gateway thread workers write shared "
         "containers only under the lock"
     )
-    hint = "register the counter here, or move the write under `with lock:`"
+    hint = "register an obs.metrics instrument, or move the write under "\
+           "`with lock:`"
 
     MODULE_SCOPE = ("src/repro/transfer", "src/repro/calibrate")
-    GLOBAL_SCOPE = (
-        "src/repro/transfer", "src/repro/calibrate", "src/repro/core",
-    )
-    # The sanctioned module-level mutables. N_STRUCT_BUILDS is the cache
-    # counter every zero-re-assembly test pins; __all__ is the API surface.
-    REGISTERED = {"N_STRUCT_BUILDS", "__all__"}
+    # The one sanctioned module-level mutable: the API surface. Counters
+    # moved into the obs.metrics registry (SKY009 polices the rest).
+    REGISTERED = {"__all__"}
     MUTABLE_CALLS = {
         "dict", "list", "set", "defaultdict", "deque", "Counter",
         "OrderedDict",
@@ -524,8 +523,6 @@ class SharedStateRule(Rule):
         out = []
         if ctx.under(*self.MODULE_SCOPE):
             out += self._module_state(tree, ctx)
-        if ctx.under(*self.GLOBAL_SCOPE):
-            out += self._globals(tree, ctx)
         if ctx.current.relpath.startswith("src/repro/transfer/gateway"):
             out += self._worker_closures(tree, ctx)
         return out
@@ -556,19 +553,6 @@ class SharedStateRule(Rule):
                         self, node,
                         f"module-level mutable {t.id!r} is unregistered "
                         "shared state",
-                    ))
-        return out
-
-    def _globals(self, tree: ast.Module, ctx: Context) -> list[Finding]:
-        out = []
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Global):
-                rogue = [n for n in node.names if n not in self.REGISTERED]
-                if rogue:
-                    out.append(ctx.finding(
-                        self, node,
-                        f"global statement on unregistered name(s): "
-                        f"{', '.join(rogue)}",
                     ))
         return out
 
@@ -653,4 +637,60 @@ class FormatDriftRule(Rule):
                     ))
         except (tokenize.TokenError, IndentationError, SyntaxError):
             pass
+        return out
+
+
+# --------------------------------------------------------------------- SKY009
+@register
+class CounterDisciplineRule(Rule):
+    id = "SKY009"
+    severity = "error"
+    description = (
+        "counters and gauges in transfer//calibrate//core/ go through "
+        "the obs.metrics registry: no `global` rebinding of module "
+        "state, no ALL-CAPS zero-seeded module counters"
+    )
+    hint = "hold a REGISTRY.counter(...)/gauge(...) from repro.obs.metrics"
+
+    SCOPE = ("src/repro/transfer", "src/repro/calibrate", "src/repro/core")
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        out: list[Finding] = []
+        if not ctx.under(*self.SCOPE):
+            return out
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Global):
+                out.append(ctx.finding(
+                    self, node,
+                    "global statement rebinds module state "
+                    f"({', '.join(node.names)}) — ad-hoc process "
+                    "counters belong in the obs.metrics registry",
+                ))
+        for node in tree.body:
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                continue
+            # an ALL-CAPS name seeded with a literal zero is the ad-hoc
+            # counter idiom (`N_FOO = 0` bumped from function bodies) —
+            # nonzero literals are genuine constants and stay legal
+            if not (
+                isinstance(value, ast.Constant)
+                and type(value.value) in (int, float)
+                and value.value == 0
+            ):
+                continue
+            for t in targets:
+                if (
+                    isinstance(t, ast.Name)
+                    and len(t.id) > 1
+                    and t.id.isupper()
+                ):
+                    out.append(ctx.finding(
+                        self, node,
+                        f"zero-seeded module counter {t.id!r} — register "
+                        "it as an obs.metrics instrument",
+                    ))
         return out

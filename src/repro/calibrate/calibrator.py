@@ -38,6 +38,8 @@ import dataclasses
 import numpy as np
 
 from repro.core.topology import GBIT_PER_GB
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 
 from .belief import BeliefGrid
 from .policies import (
@@ -274,6 +276,17 @@ class Calibrator:
             deduped=deduped,
         )
         self.rounds.append(rnd)
+        REGISTRY.counter("calibrate.probes").inc(len(records))
+        REGISTRY.counter("calibrate.probe_usd").inc(spent_usd)
+        REGISTRY.counter("calibrate.probe_s").inc(longest)
+        if deduped:
+            REGISTRY.counter("calibrate.dedup_hits").inc(deduped)
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("calibrate.probe_round", float(t_s),
+                       track="calibrate", probes=len(records),
+                       deduped=deduped, usd=round(spent_usd, 6),
+                       targeted=targeted)
         return rnd
 
     # ------------------------------------------------------------ accounting

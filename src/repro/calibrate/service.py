@@ -50,6 +50,8 @@ from repro.core import milp
 from repro.core.plan import MulticastPlan
 from repro.core.planner import Planner
 from repro.core.topology import GBIT_PER_GB
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 from repro.transfer.events import TransferJob
 from repro.transfer.executor import (
     ReplanRecord,
@@ -122,6 +124,7 @@ class CalibratedServiceReport(ServiceReport):
     kind = "calibrated_service"
     _summary_keys = ("jobs", "time_s", "delivered_gb", "probe_cost_usd",
                      "drift_events", "epoch_rolls")
+    _metrics_prefixes = ("planner.", "service.", "breaker.", "calibrate.")
 
     def _payload(self) -> dict:
         d = super()._payload()
@@ -301,11 +304,18 @@ class CalibratedTransferService(TransferService):
                 recs.append(st.replans.pop())
             if st.status != "failed":
                 st._assumed = self._assumed_grid(st.plan)
-        return EpochRoll(
+        roll = EpochRoll(
             t_s=float(t_s), ratio=float(ratio),
             structure_builds=milp.N_STRUCT_BUILDS - builds0,
             replans=recs,
         )
+        REGISTRY.counter("calibrate.epoch_rolls").inc()
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("calibrate.epoch_roll", float(t_s), track="calibrate",
+                       ratio=round(float(ratio), 4),
+                       struct_builds=roll.structure_builds)
+        return roll
 
     # ----------------------------------------------------------------- checks
     def _probe_focus(self, states, act):
@@ -463,11 +473,17 @@ class CalibratedTransferService(TransferService):
             ]
 
         def note_drift(st, hits, t, source):
+            tr = get_tracer()
             for a, b, assumed, obs in hits:
                 drift_events.append(DriftEvent(
                     t_s=t, job=st.req.name, src=a, dst=b,
                     assumed_gbps=assumed, observed_gbps=obs, source=source,
                 ))
+                REGISTRY.counter("calibrate.drift_events").inc()
+                if tr.enabled:
+                    tr.instant("calibrate.drift", float(t),
+                               track="calibrate", job=st.req.name,
+                               link=f"{a}->{b}", source=source)
 
         def breaker_feed(hits, t) -> list[tuple[int, int]]:
             """Drift detections are the breaker's failure signal here.
@@ -477,9 +493,13 @@ class CalibratedTransferService(TransferService):
             opened: list[tuple[int, int]] = []
             if self.breaker is None:
                 return opened
+            tr = get_tracer()
             for a, b, _assumed, obs in hits:
                 if self.breaker.record_failure((a, b), t):
                     self._quarantine((a, b))
+                    if tr.enabled:
+                        tr.instant("service.quarantine", float(t),
+                                   track="service", link=f"{a}->{b}")
                     self.belief.reset_link(a, b, max(obs, 1e-6), t_s=t)
                     opened.append((a, b))
             return opened
@@ -618,6 +638,13 @@ class CalibratedTransferService(TransferService):
                 if pending:
                     seg_end = min(pending)
             boundaries.append(seg_end)
+            tr = get_tracer()
+            if tr.enabled:
+                tr.span("service.segment", now, res.time_s,
+                        track="service", seg=segments - 1,
+                        jobs=len(active), sim_events=res.events)
+                tr.instant("service.boundary", seg_end, track="service",
+                           seg=segments - 1)
 
             # ---- feedback: telemetry -> belief -> drift -> re-plan
             if self.calibrate:

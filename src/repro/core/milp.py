@@ -53,6 +53,9 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
+
 from .topology import GBIT_PER_GB, Topology
 
 _ZERO_ROW_TOL = 1e-12
@@ -60,8 +63,20 @@ _RHS_TOL = 1e-9
 
 # Running count of LPStructure assemblies (the O(rows*cols) construction).
 # Re-planning on a degraded topology must be a pure cache hit: tests snapshot
-# this counter around a re-plan and assert it did not move.
-N_STRUCT_BUILDS = 0
+# this counter around a re-plan and assert it did not move. The count lives
+# in the observability plane's registry; the module attribute
+# ``N_STRUCT_BUILDS`` survives as a bitwise-compatible read alias below.
+_struct_builds = REGISTRY.counter("planner.struct_builds")
+_lp_cache_hits = REGISTRY.counter("planner.lp_cache_hits")
+_lp_cache_misses = REGISTRY.counter("planner.lp_cache_misses")
+
+
+def __getattr__(name: str):
+    # PEP 562 read alias: ``milp.N_STRUCT_BUILDS`` (and ``from ... import``)
+    # keeps returning the plain int every zero-re-assembly pin snapshots.
+    if name == "N_STRUCT_BUILDS":
+        return int(_struct_builds.value)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -197,8 +212,7 @@ class LPStructure:
     """Vectorized, cached assembly of Eq. 4a-4j for one (top, src, dst)."""
 
     def __init__(self, top: Topology, src: int, dst: int):
-        global N_STRUCT_BUILDS
-        N_STRUCT_BUILDS += 1
+        _struct_builds.inc()
         self.top = top
         self.src = src
         self.dst = dst
@@ -503,9 +517,19 @@ def structure(top: Topology, src: int, dst: int) -> LPStructure:
     cache = top._lp_struct_cache
     key = (src, dst)
     s = cache.get(key)
+    tr = get_tracer()
     if s is None:
+        _lp_cache_misses.inc()
+        if tr.enabled:
+            tr.instant("planner.lp_cache_miss", tr.now_wall(),
+                       track="planner", key=f"{src}->{dst}")
         s = LPStructure(top, src, dst)
         cache[key] = s
+    else:
+        _lp_cache_hits.inc()
+        if tr.enabled:
+            tr.instant("planner.lp_cache_hit", tr.now_wall(),
+                       track="planner", key=f"{src}->{dst}")
     return s
 
 
@@ -617,8 +641,7 @@ class MulticastLPStructure:
     """
 
     def __init__(self, top: Topology, src: int, dsts: tuple[int, ...]):
-        global N_STRUCT_BUILDS
-        N_STRUCT_BUILDS += 1
+        _struct_builds.inc()
         self.top = top
         self.src = src
         self.dsts = tuple(int(d) for d in dsts)
@@ -943,9 +966,19 @@ def multicast_structure(
     cache = top._lp_struct_cache
     key = ("mc", src, tuple(int(d) for d in dsts))
     s = cache.get(key)
+    tr = get_tracer()
     if s is None:
+        _lp_cache_misses.inc()
+        if tr.enabled:
+            tr.instant("planner.lp_cache_miss", tr.now_wall(),
+                       track="planner", key=f"{src}->mc{list(key[2])}")
         s = MulticastLPStructure(top, src, tuple(int(d) for d in dsts))
         cache[key] = s
+    else:
+        _lp_cache_hits.inc()
+        if tr.enabled:
+            tr.instant("planner.lp_cache_hit", tr.now_wall(),
+                       track="planner", key=f"{src}->mc{list(key[2])}")
     return s
 
 

@@ -34,6 +34,8 @@ import warnings
 
 import numpy as np
 
+from repro.obs.trace import get_tracer
+
 from . import milp
 from .plan import MulticastPlan, TransferPlan
 from .solver.bnb import (
@@ -528,6 +530,21 @@ class Planner:
         ``max_throughput``, and a list of ``ParetoPoint`` for the sweeps.
         The eight legacy ``plan_*`` / ``max_*`` / ``pareto_*`` methods are
         deprecated shims over this method."""
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._plan_impl(spec)
+        w0 = tr.now_wall()
+        b0 = milp._struct_builds.value
+        result = self._plan_impl(spec)
+        tr.span(
+            "planner.plan", w0, tr.now_wall() - w0, track="planner",
+            objective=spec.objective, src=spec.src,
+            dst=spec.dst if not spec.multicast else ",".join(spec.dsts),
+            struct_builds=int(milp._struct_builds.value - b0),
+        )
+        return result
+
+    def _plan_impl(self, spec: PlanSpec):
         obj = spec.objective
         ns = {} if spec.n_samples is None else {"n_samples": spec.n_samples}
         if obj == "cost_min":
@@ -590,6 +607,8 @@ class Planner:
         calls. Everything else (multicast, robust, degraded, exact-mode)
         falls back to the sequential ``plan()`` path, which still rides
         cached structures. Results come back in spec order."""
+        tr = get_tracer()
+        w0 = tr.now_wall() if tr.enabled else 0.0
         out: list = [None] * len(specs)
         groups: dict[tuple[str, str], list[int]] = {}
         for i, sp in enumerate(specs):
@@ -620,6 +639,12 @@ class Planner:
                 out[i] = self._lift(
                     sub, keep, src, dst, float(g), specs[i].volume_gb, res
                 )
+        if tr.enabled:
+            tr.span(
+                "planner.plan_cohort", w0, tr.now_wall() - w0,
+                track="planner", n_specs=len(specs),
+                n_batched_routes=len(groups),
+            )
         return out
 
     # ------------------------------------------------- deprecated shims

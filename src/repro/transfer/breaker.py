@@ -27,7 +27,12 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
+
 Link = tuple[int, int]
+
+_trips = REGISTRY.counter("breaker.trips")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +99,16 @@ class LinkBreaker:
             st.opened_at = float(t_s)
             st.restore_seen = False
             st.trips += 1
+            _trips.inc()
             self.transitions.append(BreakerTransition(
                 t_s=float(t_s), link=link, state="open",
                 failures_in_window=len(st.failures),
             ))
+            tr = get_tracer()
+            if tr.enabled:
+                tr.instant("breaker.open", float(t_s), track="breaker",
+                           link=f"{link[0]}->{link[1]}",
+                           failures=len(st.failures))
             return True
         return False
 
@@ -129,6 +140,11 @@ class LinkBreaker:
                 self.transitions.append(BreakerTransition(
                     t_s=float(t_s), link=link, state="half_open",
                 ))
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.instant("breaker.half_open", float(t_s),
+                               track="breaker",
+                               link=f"{link[0]}->{link[1]}")
                 due.append(link)
         return due
 
@@ -151,6 +167,11 @@ class LinkBreaker:
             self.transitions.append(BreakerTransition(
                 t_s=float(t_s), link=link, state="open",
             ))
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("breaker.close" if healthy else "breaker.reopen",
+                       float(t_s), track="breaker",
+                       link=f"{link[0]}->{link[1]}")
 
     def restore_seen(self, link: Link) -> bool:
         st = self._links.get(link)

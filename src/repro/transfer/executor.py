@@ -28,6 +28,9 @@ from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.planner import Planner
 from repro.core.spec import PlanSpec
 from repro.core.topology import GBIT_PER_GB, Topology
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
+
 from .breaker import LinkBreaker
 from .events import (
     T_EPS,
@@ -314,6 +317,7 @@ class ServiceReport(Report):
     kind = "service"
     _summary_keys = ("jobs", "time_s", "delivered_gb", "segments",
                      "slo_violations")
+    _metrics_prefixes = ("planner.", "service.", "breaker.")
 
     def _payload(self) -> dict:
         return {
@@ -659,6 +663,12 @@ class TransferService:
             reason=reason,
         )
         st.replans.append(rec)
+        REGISTRY.counter("service.replans").inc()
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("service.replan", float(at_s), track="service",
+                       job=req.name, reason=reason,
+                       struct_builds=rec.structure_builds)
         if plan.solver_status == "optimal":
             st.plan = plan
         else:
@@ -677,6 +687,7 @@ class TransferService:
         compounding on a shadow entry for when the breaker closes."""
         self._pre_quarantine[key] = self.degraded_links.get(key, 1.0)
         self.degraded_links[key] = 0.0
+        REGISTRY.counter("service.quarantines").inc()
 
     def _unquarantine(self, key: tuple[int, int]) -> None:
         phi = self._pre_quarantine.pop(key, 1.0)
@@ -906,6 +917,11 @@ class TransferService:
                 self._fold_segment(active, res, now,
                                    restart=boundary is not None)
                 seg_end = now + res.time_s
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.span("service.segment", now, res.time_s,
+                            track="service", seg=seg, jobs=len(active),
+                            sim_events=res.events)
             else:
                 seg_end = now
 
@@ -979,6 +995,13 @@ class TransferService:
                             not quarantined
                         ):
                             self._quarantine(key)
+                            tr = get_tracer()
+                            if tr.enabled:
+                                tr.instant(
+                                    "service.quarantine", now,
+                                    track="service",
+                                    link=f"{key[0]}->{key[1]}",
+                                )
                             _mark_users(f.src, f.dst)
                 elif isinstance(f, LinkRestore):
                     key = (f.src, f.dst)

@@ -48,6 +48,8 @@ import dataclasses
 import numpy as np
 
 from repro.calibrate.calibrator import Calibrator
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 from repro.calibrate.service import (
     CalibratedServiceReport,
     CalibratedTransferService,
@@ -142,6 +144,8 @@ class FleetReport(CalibratedServiceReport):
     kind = "fleet"
     _summary_keys = ("jobs", "tenants_n", "time_s", "delivered_gb",
                      "probe_cost_usd", "deferred_jobs")
+    _metrics_prefixes = ("planner.", "service.", "breaker.", "calibrate.",
+                         "fleet.")
 
     def _payload(self) -> dict:
         d = super()._payload()
@@ -352,6 +356,11 @@ class FleetController(CalibratedTransferService):
                 req.arrival_s = max(req.arrival_s, drain_s)
                 self._deferred[req.name] = req.arrival_s
                 goal = want
+                REGISTRY.counter("fleet.deferrals").inc()
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.instant("fleet.deferral", float(req.arrival_s),
+                               track="fleet", job=req.name)
             goals[req.name] = goal
             committed[key] = committed.get(key, 0.0) + (
                 goal if req.name not in self._deferred else 0.0
@@ -458,6 +467,11 @@ class FleetController(CalibratedTransferService):
                     f"job {r.name!r} was queued without a tenant"
                 )
         goals = self._admission(reqs)
+        REGISTRY.counter("fleet.admission_waves").inc()
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("fleet.admission_wave", 0.0, track="fleet",
+                       jobs=len(reqs), deferred=len(self._deferred))
         self._tenant_shares = self._fair_shares(reqs, goals)
         self._admitting = True
         try:
@@ -528,6 +542,7 @@ class FleetController(CalibratedTransferService):
         if eff > float(spec.vm_quota) + _EPS:
             t = self._tenant_of[req.name]
             self._quota_borrows[t] = self._quota_borrows.get(t, 0) + 1
+            REGISTRY.counter("fleet.quota_borrows").inc()
         return eff
 
     def _probe_focus(self, states, act):

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.plan import MulticastPlan, TransferPlan
 from repro.core.topology import GBIT_PER_GB
+from repro.obs.trace import get_tracer
 
 from .simconfig import SimConfig
 from .simconfig import resolve as resolve_sim_config
@@ -575,21 +576,31 @@ def simulate_multi(
     now = 0.0
     last_active = None
     rates = None
+    tr = get_tracer()
+    if tr.enabled:
+        tr.instant("sim.start", 0.0, jobs=J, scheduled=len(sched))
 
     def apply_due():
         nonlocal ptr, last_active
         from .events import RATE_EVENTS, VMFailure
 
+        applied_t = None
+        rate_n = 0
         while ptr < len(sched) and sched[ptr][0] <= now + T_EPS:
+            t_ev = sched[ptr][0]
             ev = sched[ptr][2]
             ptr += 1
             last_active = None  # any event can change rates/membership
+            applied_t = t_ev
             if isinstance(ev, int):  # job arrival
                 arrived[ev] = True
                 firsts = su.first_stage[ev]
                 for ch in range(int(su.n_chunks[ev])):
                     for s0 in firsts[int(su.chunk_path[ev][ch])]:
                         ready[s0].append(ch)
+                if tr.enabled:
+                    tr.instant("sim.arrival", t_ev, job=int(ev),
+                               chunks=int(su.n_chunks[ev]))
             elif isinstance(ev, RATE_EVENTS):
                 # LinkDegrade / GrayFailure / LinkRestore: one compounding
                 # multiply on the link's connection rates and shared cap —
@@ -601,6 +612,10 @@ def simulate_multi(
                 rate_eff[on_edge[su.conn_edge]] *= ev.factor
                 if edge_cap is not None:
                     edge_cap[on_edge] *= ev.factor
+                # rate events arrive in bursts (gray/flap trains expand to
+                # thousands); coalesced per batch below so tracing stays
+                # inside the obs/tracing_overhead_ratio gate
+                rate_n += 1
             elif isinstance(ev, VMFailure):
                 kill = [
                     v for v in np.flatnonzero(
@@ -608,24 +623,41 @@ def simulate_multi(
                     )
                     if vm_alive[v]
                 ][: ev.count]
-                if not kill:
-                    continue
-                vm_alive[kill] = False
-                hit = conn_alive & (
-                    np.isin(su.conn_src, kill) | np.isin(su.conn_dst, kill)
-                )
-                for ci in np.flatnonzero(hit):
-                    if chunk_arr[ci] >= 0:
-                        sid = int(sid_arr[ci])
-                        ready[sid].append(int(chunk_arr[ci]))
-                        if su.stage_hop[sid] > 0:
-                            relay_occ[sid] += 1
-                        retried[su.conn_job[ci]] += 1
-                        chunk_arr[ci] = -1
-                        remaining[ci] = 0.0
-                conn_alive[hit] = False
+                requeued = 0
+                if kill:
+                    vm_alive[kill] = False
+                    hit = conn_alive & (
+                        np.isin(su.conn_src, kill)
+                        | np.isin(su.conn_dst, kill)
+                    )
+                    for ci in np.flatnonzero(hit):
+                        if chunk_arr[ci] >= 0:
+                            sid = int(sid_arr[ci])
+                            ready[sid].append(int(chunk_arr[ci]))
+                            if su.stage_hop[sid] > 0:
+                                relay_occ[sid] += 1
+                            retried[su.conn_job[ci]] += 1
+                            chunk_arr[ci] = -1
+                            remaining[ci] = 0.0
+                            requeued += 1
+                    conn_alive[hit] = False
+                if tr.enabled:
+                    tr.instant("sim.vm_failure", t_ev, job=int(ev.job),
+                               region=int(ev.region), killed=len(kill),
+                               requeued=requeued)
             else:
                 raise TypeError(f"unknown event {ev!r}")
+        if applied_t is not None and tr.enabled:
+            if rate_n:
+                tr.instant("sim.rate_events", applied_t, n=rate_n)
+            # per-link active-connection sample after every applied batch;
+            # ts comes from the schedule (exact), not the float clock
+            counts = np.bincount(
+                su.conn_edge[chunk_arr >= 0], minlength=ne
+            )
+            for i, (a, b) in enumerate(su.edges_used):
+                if counts[i]:
+                    tr.sample(f"link {a}->{b}", applied_t, int(counts[i]))
 
     def try_refill(ci: int) -> bool:
         sid = int(sid_arr[ci])
@@ -732,6 +764,8 @@ def simulate_multi(
                     delivered[s] >= su.n_chunks[j] for s in su.job_slots[j]
                 ):
                     finish[j] = now
+                    if tr.enabled:
+                        tr.instant("sim.job_done", now, job=j)
             for nsid in children[sid]:
                 if (nsid, ch) in enqueued:
                     continue  # another in-edge already fed this stage
@@ -802,4 +836,7 @@ def simulate_multi(
                 (su.conn_job == j) & (chunk_arr >= 0)
             )),
         ))
+    if tr.enabled:
+        tr.instant("sim.end", now,
+                   delivered=sum(int(r.chunks_delivered) for r in out))
     return MultiSimResult(jobs=out, time_s=now, events=events)

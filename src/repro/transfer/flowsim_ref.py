@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.plan import TransferPlan
 from repro.core.topology import GBIT_PER_GB
+from repro.obs.trace import get_tracer
 
 from .flowsim import SimResult, conn_efficiency
 from .simconfig import SimConfig
@@ -495,18 +496,28 @@ def simulate_multi_reference(
     sched = sorted_schedule(jobs, faults)
     ptr = 0
     now = 0.0
+    tr = get_tracer()
+    if tr.enabled:
+        tr.instant("sim.start", 0.0, jobs=J, scheduled=len(sched))
 
     def apply_due():
         nonlocal ptr
+        applied_t = None
+        rate_n = 0
         while ptr < len(sched) and sched[ptr][0] <= now + T_EPS:
+            t_ev = sched[ptr][0]
             ev = sched[ptr][2]
             ptr += 1
+            applied_t = t_ev
             if isinstance(ev, int):  # job arrival
                 arrived[ev] = True
                 firsts = su.first_stage[ev]
                 for ch in range(int(su.n_chunks[ev])):
                     for s0 in firsts[int(su.chunk_path[ev][ch])]:
                         ready[s0].append(ch)
+                if tr.enabled:
+                    tr.instant("sim.arrival", t_ev, job=int(ev),
+                               chunks=int(su.n_chunks[ev]))
             elif isinstance(ev, RATE_EVENTS):
                 # same compounding multiply as the vectorized loop — gray
                 # or visible, the data plane cannot tell them apart
@@ -520,31 +531,52 @@ def simulate_multi_reference(
                         c.rate *= ev.factor
                 if edge_cap is not None and want >= 0:
                     edge_cap[want] *= ev.factor
+                # coalesced per batch below, exactly like the vectorized
+                # loop — per-event instants would dominate gray/flap trains
+                rate_n += 1
             elif isinstance(ev, VMFailure):
                 kill = [
                     v for v in range(len(vm_alive))
                     if vm_alive[v] and su.vm_job[v] == ev.job
                     and su.vm_region[v] == ev.region
                 ][: ev.count]
-                if not kill:
-                    continue
-                for v in kill:
-                    vm_alive[v] = False
-                killset = set(kill)
-                for ci, c in enumerate(conns):
-                    if not c.alive:
-                        continue
-                    if c.src_vm in killset or c.dst_vm in killset:
-                        if c.chunk >= 0:
-                            ready[c.sid].append(c.chunk)
-                            if su.stage_hop[c.sid] > 0:
-                                relay_occ[c.sid] = relay_occ.get(c.sid, 0) + 1
-                            retried[c.job] += 1
-                            c.chunk = -1
-                            c.remaining = 0.0
-                        c.alive = False
+                requeued = 0
+                if kill:
+                    for v in kill:
+                        vm_alive[v] = False
+                    killset = set(kill)
+                    for ci, c in enumerate(conns):
+                        if not c.alive:
+                            continue
+                        if c.src_vm in killset or c.dst_vm in killset:
+                            if c.chunk >= 0:
+                                ready[c.sid].append(c.chunk)
+                                if su.stage_hop[c.sid] > 0:
+                                    relay_occ[c.sid] = (
+                                        relay_occ.get(c.sid, 0) + 1
+                                    )
+                                retried[c.job] += 1
+                                c.chunk = -1
+                                c.remaining = 0.0
+                                requeued += 1
+                            c.alive = False
+                if tr.enabled:
+                    tr.instant("sim.vm_failure", t_ev, job=int(ev.job),
+                               region=int(ev.region), killed=len(kill),
+                               requeued=requeued)
             else:
                 raise TypeError(f"unknown event {ev!r}")
+        if applied_t is not None and tr.enabled:
+            if rate_n:
+                tr.instant("sim.rate_events", applied_t, n=rate_n)
+            # mirrors the vectorized loop's post-batch link sample exactly
+            counts = [0] * len(su.edges_used)
+            for c in conns:
+                if c.chunk >= 0:
+                    counts[c.edge_ix] += 1
+            for i, (a, b) in enumerate(su.edges_used):
+                if counts[i]:
+                    tr.sample(f"link {a}->{b}", applied_t, counts[i])
 
     def refill(ci: int) -> bool:
         c = conns[ci]
@@ -634,6 +666,8 @@ def simulate_multi_reference(
                         for s in su.job_slots[jj]
                     ):
                         finish[jj] = now
+                        if tr.enabled:
+                            tr.instant("sim.job_done", now, job=jj)
                 for nsid in su.stage_children[c.sid]:
                     if (nsid, ch) in enqueued:
                         continue  # another in-edge already fed this stage
@@ -690,4 +724,7 @@ def simulate_multi_reference(
                 1 for c in conns if c.job == j and c.chunk >= 0
             ),
         ))
+    if tr.enabled:
+        tr.instant("sim.end", now,
+                   delivered=sum(int(r.chunks_delivered) for r in out))
     return MultiSimResult(jobs=out, time_s=now, events=events)

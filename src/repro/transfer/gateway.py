@@ -34,12 +34,21 @@ import queue
 import random
 import threading
 import time
-import warnings
 from pathlib import Path
 
 from repro.core.plan import MulticastPlan, TransferPlan
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
+
 from .chunk import Chunk, checksum, chunk_manifest, chunk_object
 from .reports import Report, per_edge_dict
+
+# registered gateway counters — leaked workers used to be a RuntimeWarning;
+# a counter survives in long-lived processes where warnings are one-shot
+_workers_leaked = REGISTRY.counter("gateway.workers_leaked")
+_retries = REGISTRY.counter("gateway.retries")
+_checksum_failures = REGISTRY.counter("gateway.checksum_failures")
+_stall_rounds = REGISTRY.counter("gateway.stall_rounds")
 
 
 def _retry_delay(attempt: int, base_s: float, cap_s: float,
@@ -228,6 +237,7 @@ class GatewayReport(Report):
     kind = "gateway"
     _summary_keys = ("objects", "chunks", "delivered_gb", "retried_chunks",
                      "chunks_missing")
+    _metrics_prefixes = ("gateway.",)
 
     def _payload(self) -> dict:
         return {
@@ -310,6 +320,8 @@ def transfer_objects(
     paths = plan.paths()
     if not paths:
         raise ValueError("plan has no flow")
+    tr = get_tracer()
+    w0 = tr.now_wall() if tr.enabled else 0.0
 
     skipped = 0
     keys_to_move = []
@@ -389,6 +401,7 @@ def transfer_objects(
                     item = q_in.get(timeout=0.05)
                 except queue.Empty:
                     continue
+                t0w = tr.now_wall() if tr.enabled else 0.0
                 # the telemetry window opens when the FIRST transfer on the
                 # edge begins — stamping at first completion would shave one
                 # chunk's time off the window and overstate the link rate
@@ -409,6 +422,10 @@ def transfer_objects(
                         with lock:
                             live[(pid, h)] -= 1
                         retry_q.put((ch, attempt + 1))
+                        if tr.enabled:
+                            tr.instant("gateway.worker_killed",
+                                       tr.now_wall(), track="gateway",
+                                       path=pid, hop=h)
                         return  # the worker thread dies with its chunk
                 with lock:
                     bytes_moved[0] += len(data)
@@ -416,6 +433,9 @@ def transfer_objects(
                     edge_bytes[e] = edge_bytes.get(e, 0) + len(data)
                     edge_t1[e] = time.monotonic()
                 _put(q_out, (ch, data, attempt))
+                if tr.enabled:
+                    tr.span("gateway.hop", t0w, tr.now_wall() - t0w,
+                            track="gateway", path=pid, hop=h, chunk=ch.id)
 
         for h in range(hops):
             for _ in range(workers_per_hop):
@@ -452,9 +472,13 @@ def transfer_objects(
             return
         with lock:
             retried[0] += 1
+        _retries.inc()
         pid = targets[rr[0] % len(targets)]
         rr[0] += 1
         attempts[ch.id] = max(attempts.get(ch.id, 0), attempt)
+        if tr.enabled:
+            tr.instant("gateway.retry", tr.now_wall(), track="gateway",
+                       chunk=ch.id, attempt=attempt, path=pid)
         first_qs[pid].put((ch, attempt))
 
     def feeder():
@@ -514,10 +538,14 @@ def transfer_objects(
             # by their own round counter (reset on progress), NOT by
             # per-chunk attempts, so timeouts alone never fail a transfer.
             stall_rounds += 1
+            _stall_rounds.inc()
             missing = [c for c in all_chunks
                        if c.id not in verified and c.id not in dead]
             if not missing or stall_rounds > max_attempts:
                 break
+            if tr.enabled:
+                tr.instant("gateway.stall", tr.now_wall(), track="gateway",
+                           missing=len(missing), round=stall_rounds)
             for c in missing:
                 retry_q.put((c, attempts.get(c.id, 0)))
             last_delivery = time.monotonic()  # re-arm for the next round
@@ -530,6 +558,10 @@ def transfer_objects(
             duplicates += 1
             continue
         if verify and checksum(data) != chunk_sums[ch.id]:
+            _checksum_failures.inc()
+            if tr.enabled:
+                tr.instant("gateway.checksum_fail", tr.now_wall(),
+                           track="gateway", chunk=ch.id, attempt=attempt)
             retry_q.put((ch, attempt + 1))
             continue
         verified.add(ch.id)
@@ -541,6 +573,9 @@ def transfer_objects(
             if verify and checksum(blob) != object_sums[ch.object_key]:
                 failures += 1
             dst_store.put(ch.object_key, blob)
+            if tr.enabled:
+                tr.instant("gateway.commit", tr.now_wall(),
+                           track="gateway", key=ch.object_key)
 
     done_event.set()
     feeder_t.join(timeout=2.0)
@@ -553,14 +588,16 @@ def transfer_objects(
         1 if feeder_t.is_alive() else 0
     )
     if leaked:
-        warnings.warn(
-            f"gateway shutdown leaked {leaked} worker thread(s) still "
-            "blocked after the 2s join (likely stuck in a store call)",
-            RuntimeWarning,
-            stacklevel=2,
-        )
+        _workers_leaked.inc(leaked)
+        if tr.enabled:
+            tr.instant("gateway.workers_leaked", tr.now_wall(),
+                       track="gateway", leaked=leaked)
 
     missing = len(all_chunks) - len(verified)
+    if tr.enabled:
+        tr.span("gateway.transfer", w0, tr.now_wall() - w0,
+                track="gateway", chunks=len(all_chunks),
+                retried=retried[0], leaked=leaked)
     return GatewayReport(
         objects=len(object_keys),
         chunks=len(all_chunks),
@@ -625,6 +662,7 @@ class MulticastGatewayReport(Report):
     kind = "multicast_gateway"
     _summary_keys = ("chunks", "delivered_gb", "retried_chunks",
                      "chunks_missing")
+    _metrics_prefixes = ("gateway.",)
 
     def _payload(self) -> dict:
         return {
@@ -689,6 +727,8 @@ def transfer_objects_multicast(
     if not trees or not stores:
         raise ValueError("plan has no flow")
     dests = sorted(stores)
+    tr = get_tracer()
+    w0 = tr.now_wall() if tr.enabled else 0.0
 
     # ---- per-destination resume pre-pass
     skipped = {d: 0 for d in dests}
@@ -822,6 +862,7 @@ def transfer_objects_multicast(
             except queue.Empty:
                 continue
             ch, data, attempt, target = item
+            t0w = tr.now_wall() if tr.enabled else 0.0
             # open the edge's telemetry window at FIRST pickup — stamping at
             # first completion would shave one chunk's time off the window
             # and overstate the link rate (same discipline as the unicast
@@ -843,12 +884,20 @@ def transfer_objects_multicast(
                     wants = st.serves if target is None else {target}
                     for d in sorted(wants):
                         retry_q.put((ch, attempt + 1, d))
+                    if tr.enabled:
+                        tr.instant("gateway.worker_killed", tr.now_wall(),
+                                   track="gateway", tree=st.tid,
+                                   stage=st.sid)
                     return  # the worker dies with its chunk
             with lock:
                 bytes_moved[0] += len(data)
                 edge_bytes[st.edge] = edge_bytes.get(st.edge, 0) + len(data)
                 edge_t1[st.edge] = time.monotonic()
             _fan_out(st, ch, data, attempt, target)
+            if tr.enabled:
+                tr.span("gateway.hop", t0w, tr.now_wall() - t0w,
+                        track="gateway", tree=st.tid, stage=st.sid,
+                        chunk=ch.id)
 
     threads: list[threading.Thread] = []
     for st in stages:
@@ -888,9 +937,13 @@ def transfer_objects_multicast(
             return
         with lock:
             retried[0] += 1
+        _retries.inc()
         tid, _ = routes[rr[0] % len(routes)]
         rr[0] += 1
         attempts[(d, ch.id)] = max(attempts.get((d, ch.id), 0), attempt)
+        if tr.enabled:
+            tr.instant("gateway.retry", tr.now_wall(), track="gateway",
+                       chunk=ch.id, attempt=attempt, dest=d, tree=tid)
         stages[path_stages[(tid, d)][0]].q.put((ch, None, attempt, d))
 
     def feeder():
@@ -940,9 +993,13 @@ def transfer_objects_multicast(
             if quiet < max(stall_timeout_s, 2.0 * max_gap):
                 continue  # plausibly just slow: keep waiting
             stall_rounds += 1
+            _stall_rounds.inc()
             missing = [p for p in needed if p not in verified and p not in dead]
             if not missing or stall_rounds > max_attempts:
                 break
+            if tr.enabled:
+                tr.instant("gateway.stall", tr.now_wall(), track="gateway",
+                           missing=len(missing), round=stall_rounds)
             for dm, cid in missing:
                 retry_q.put((chunk_by_id[cid], attempts.get((dm, cid), 0), dm))
             last_delivery = time.monotonic()
@@ -955,6 +1012,11 @@ def transfer_objects_multicast(
             duplicates[d] = duplicates.get(d, 0) + 1
             continue
         if verify and checksum(data) != chunk_sums[ch.id]:
+            _checksum_failures.inc()
+            if tr.enabled:
+                tr.instant("gateway.checksum_fail", tr.now_wall(),
+                           track="gateway", chunk=ch.id, attempt=attempt,
+                           dest=d)
             retry_q.put((ch, attempt + 1, d))
             continue
         verified.add((d, ch.id))
@@ -966,6 +1028,9 @@ def transfer_objects_multicast(
             if verify and checksum(blob) != object_sums[ch.object_key]:
                 failures[d] += 1
             stores[d].put(ch.object_key, blob)
+            if tr.enabled:
+                tr.instant("gateway.commit", tr.now_wall(),
+                           track="gateway", key=ch.object_key, dest=d)
 
     done_event.set()
     feeder_t.join(timeout=2.0)
@@ -975,12 +1040,10 @@ def transfer_objects_multicast(
         1 if feeder_t.is_alive() else 0
     )
     if leaked:
-        warnings.warn(
-            f"multicast gateway shutdown leaked {leaked} worker thread(s) "
-            "still blocked after the 2s join (likely stuck in a store call)",
-            RuntimeWarning,
-            stacklevel=2,
-        )
+        _workers_leaked.inc(leaked)
+        if tr.enabled:
+            tr.instant("gateway.workers_leaked", tr.now_wall(),
+                       track="gateway", leaked=leaked)
 
     per_dest = {}
     for d in dests:
@@ -996,6 +1059,10 @@ def transfer_objects_multicast(
             objects_skipped=skipped[d],
             chunks_missing=len(need_d - got_d),
         )
+    if tr.enabled:
+        tr.span("gateway.transfer_multicast", w0, tr.now_wall() - w0,
+                track="gateway", chunks=len(all_chunks),
+                retried=retried[0], leaked=leaked)
     return MulticastGatewayReport(
         per_dest=per_dest,
         chunks=len(all_chunks),

@@ -59,16 +59,29 @@ class Report:
 
     Subclasses set ``kind`` (the dict's type tag), implement
     ``_payload()`` (their fields under canonical names), and list their
-    headline keys in ``_summary_keys``."""
+    headline keys in ``_summary_keys``. A class that names registry
+    planes in ``_metrics_prefixes`` (``("gateway.",)`` etc.) gets a
+    ``metrics`` section in its dict: the matching non-zero instruments
+    from ``repro.obs.metrics`` at render time."""
 
     kind: str = "report"
     _summary_keys: tuple = ()
+    _metrics_prefixes: tuple = ()
 
     def _payload(self) -> dict:
         raise NotImplementedError
 
     def to_dict(self) -> dict:
-        return {"kind": self.kind, **self._payload()}
+        d = {"kind": self.kind, **self._payload()}
+        if self._metrics_prefixes:
+            # lazy import: reports is imported by every plane the
+            # registry instruments, so a top-level import would cycle
+            from repro.obs.metrics import get_registry
+
+            metrics = get_registry().snapshot(self._metrics_prefixes)
+            if metrics:
+                d["metrics"] = metrics
+        return d
 
     def summary(self) -> str:
         d = self.to_dict()

@@ -1,6 +1,8 @@
 import sys
 from pathlib import Path
 
+import pytest
+
 # allow `pytest tests/` without installing the package
 SRC = Path(__file__).resolve().parent.parent / "src"
 if str(SRC) not in sys.path:
@@ -9,3 +11,14 @@ if str(SRC) not in sys.path:
 # NOTE: no XLA_FLAGS here on purpose — unit tests must see the real single
 # CPU device. Multi-device behavior is tested in subprocesses (see
 # tests/test_distributed.py) and by launch/dryrun.py.
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs_state():
+    """Zero the metrics registry and drop any enabled tracer after each
+    test, so counter values never bleed across test boundaries."""
+    yield
+    from repro.obs import metrics, trace
+
+    metrics.get_registry().reset()
+    trace.disable()

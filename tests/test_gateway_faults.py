@@ -176,8 +176,13 @@ class _OneHangStore(BlobStore):
 
 def test_gateway_counts_leaked_workers_and_still_delivers(toy_plan):
     """Satellite: a worker stuck in a store call survives the bounded
-    shutdown join — the report counts it, a RuntimeWarning surfaces it,
-    and stall re-dispatch still lands every byte."""
+    shutdown join — the report counts it, the registered
+    ``gateway.workers_leaked`` counter records it (the RuntimeWarning it
+    replaced was one-shot per process), and stall re-dispatch still
+    lands every byte."""
+    from repro.obs.metrics import get_registry
+
+    leaked0 = get_registry().counter("gateway.workers_leaked").value
     rng = np.random.default_rng(3)
     src = _OneHangStore()
     keys = []
@@ -187,14 +192,16 @@ def test_gateway_counts_leaked_workers_and_still_delivers(toy_plan):
         keys.append(k)
     dst = BlobStore()
     try:
-        with pytest.warns(RuntimeWarning, match="leaked"):
-            rep = transfer_objects(
-                toy_plan, src, dst, keys, chunk_bytes=1 << 17,
-                workers_per_hop=3, stall_timeout_s=0.2,
-            )
+        rep = transfer_objects(
+            toy_plan, src, dst, keys, chunk_bytes=1 << 17,
+            workers_per_hop=3, stall_timeout_s=0.2,
+        )
     finally:
         src.release.set()  # let the hostage thread exit after the test
     assert rep.workers_leaked >= 1
+    counted = get_registry().counter("gateway.workers_leaked").value
+    assert counted - leaked0 == rep.workers_leaked
+    assert rep.to_dict()["metrics"]["gateway.workers_leaked"] == counted
     assert rep.chunks_missing == 0 and rep.checksum_failures == 0
     for k in keys:
         assert dst.get(k) == src.get(k)  # zero loss despite the leak

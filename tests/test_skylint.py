@@ -22,7 +22,7 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 
 EXPECTED_RULES = (
     "SKY001", "SKY002", "SKY003", "SKY004",
-    "SKY005", "SKY006", "SKY007", "SKY008",
+    "SKY005", "SKY006", "SKY007", "SKY008", "SKY009",
 )
 
 
@@ -271,13 +271,33 @@ def test_sky007_fires_on_unregistered_module_state(tmp_path):
     assert "CACHE" in rep.findings[0].message
 
 
-def test_sky007_fires_on_rogue_global(tmp_path):
+def test_sky009_fires_on_rogue_global(tmp_path):
     rep = lint(tmp_path, {"src/repro/calibrate/x.py": """\
         def bump():
             global COUNT
             COUNT = 1
     """})
-    assert rule_ids(rep) == ["SKY007"]
+    assert rule_ids(rep) == ["SKY009"]
+    assert "COUNT" in rep.findings[0].message
+
+
+def test_sky009_fires_on_zero_seeded_module_counter(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        N_CALLS = 0
+    """})
+    assert rule_ids(rep) == ["SKY009"]
+    assert "N_CALLS" in rep.findings[0].message
+
+
+def test_sky009_allows_constants_and_registry_instruments(tmp_path):
+    rep = lint(tmp_path, {"src/repro/core/x.py": """\
+        from repro.obs.metrics import REGISTRY
+
+        MAX_RELAYS = 10
+        T_FLOOR = 0.5
+        _calls = REGISTRY.counter("core.calls")
+    """})
+    assert rep.ok, rep.to_text()
 
 
 def test_sky007_worker_closure_needs_the_lock(tmp_path):
