@@ -72,8 +72,10 @@ def _run_suite(top, seeds, *, with_breaker: bool, sim=None):
 def run():
     import numpy as np
 
+    import functools
+
     from repro.core import default_topology
-    from repro.transfer import simulate_multi_reference
+    from repro.transfer import simulate
 
     top = default_topology()
     seeds = list(range(3)) if FAST else list(range(8))
@@ -121,7 +123,7 @@ def run():
     # every delivered-chunk count must agree with the vectorized run
     t0 = time.time()
     rep_r, _, _ = _run_suite(top, seeds[:2], with_breaker=True,
-                             sim=simulate_multi_reference)
+                             sim=functools.partial(simulate, engine="ref"))
     t_ref = time.time() - t0
     rep_v = rep_b[: len(rep_r)]
     mismatches = sum(

@@ -80,6 +80,12 @@ HARD_METRICS: dict[str, tuple[str, float, float]] = {
     # structures never move the registered struct-builds counter
     "obs/tracing_overhead_ratio": ("lower", 0.15, 1.05),
     "obs/struct_builds_delta": ("lower", 0.0, 0.0),
+    # sim engines (ISSUE 10): the accelerator-resident jax engine must
+    # stay chunk-for-chunk bitwise identical to the numpy SoA engine, and
+    # at the 1e5-chunk scale (fixed-cost dispatch amortized) its event
+    # loop must at least match SoA throughput (best-of-N events/s ratio)
+    "flowsim_jax/parity_mismatches": ("lower", 0.0, 0.0),
+    "flowsim_jax/speedup_vs_soa_at_1e5": ("higher", 0.5, 1.0),
 }
 
 

@@ -1,12 +1,22 @@
 """Data-plane simulator throughput: the vectorized event loop vs the
-object-per-connection reference on the Fig. 6 workload.
+object-per-connection reference on the Fig. 6 workload, plus the
+accelerator-resident jax engine vs the numpy SoA engine at scale.
 
 The acceptance bar for the planner-hot-path PR: >=5x events/s at identical
 delivered-chunk counts (fixed seed). The headroom is what lets Fig. 6/7/8
-benchmarks run at 10x the chunk counts."""
+benchmarks run at 10x the chunk counts.
+
+The jax-engine arm pins ISSUE 10: chunk-for-chunk bitwise parity with the
+SoA engine (``flowsim_jax/parity_mismatches`` must be 0) and events/s at
+least matching SoA at the 1e5-chunk scale where per-event python overhead
+is amortized (``flowsim_jax/speedup_vs_soa_at_1e5`` >= 1.0 — a hard gate
+in benchmarks/compare.py; the fused while_loop body keeps the O(chunks)
+ring buffers out of every ``lax.cond`` so XLA inserts no per-event
+copies)."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from .common import FAST, emit
@@ -55,3 +65,56 @@ def run():
     emit("flowsim/fig6_10x_chunks_wall_s", t_big * 1e6, round(t_big, 2))
     emit("flowsim/fig6_10x_events_per_s", t_big * 1e6,
          round(big.events / max(t_big, 1e-9)))
+
+    _jax_engine_arm(top)
+
+
+def _jax_engine_arm(top):
+    """jax engine vs numpy SoA engine through transfer.sim.simulate."""
+    from repro.core import direct_plan
+    from repro.transfer import TransferJob, simulate
+
+    def jobs_for(n_chunks):
+        # 64 MB chunks, so volume_gb * 1024 / 64 == n_chunks exactly
+        vol = n_chunks * 64 / 1024
+        return [TransferJob(
+            direct_plan(top, "aws:us-west-2", "aws:eu-central-1", vol,
+                        num_vms=2),
+            "bench",
+        )]
+
+    scales = ((1_000, 2), (20_000, 3)) if FAST else \
+        ((1_000, 2), (10_000, 2), (100_000, 3))
+    gate_scale = scales[-1][0]
+    mismatches = 0
+    speedup_at_gate = 0.0
+    for n_chunks, reps in scales:
+        rates = {}
+        results = {}
+        for eng in ("soa", "jax"):
+            best = 0.0
+            simulate(jobs_for(n_chunks), [], engine=eng, seed=0)  # warm
+            for _ in range(reps):
+                jobs = jobs_for(n_chunks)
+                t0 = time.time()
+                res = simulate(jobs, [], engine=eng, seed=0)
+                best = max(best, res.events / max(time.time() - t0, 1e-9))
+            rates[eng], results[eng] = best, res
+        for a, b in zip(results["soa"].jobs, results["jax"].jobs):
+            if dataclasses.asdict(a) != dataclasses.asdict(b):
+                mismatches += 1
+        speedup = rates["jax"] / rates["soa"]
+        tag = f"{n_chunks // 1000}e3"
+        emit(f"flowsim_jax/events_per_s_soa_{tag}", 0.0,
+             round(rates["soa"]))
+        emit(f"flowsim_jax/events_per_s_jax_{tag}", 0.0,
+             round(rates["jax"]))
+        emit(f"flowsim_jax/speedup_vs_soa_{tag}", 0.0, round(speedup, 2))
+        if n_chunks == gate_scale:
+            speedup_at_gate = speedup
+
+    emit("flowsim_jax/parity_mismatches", 0.0, mismatches)
+    emit("flowsim_jax/speedup_vs_soa_at_1e5", 0.0,
+         round(speedup_at_gate, 2))
+    assert mismatches == 0, (
+        f"jax engine diverged bitwise from SoA on {mismatches} job(s)")

@@ -22,12 +22,7 @@ FLOOR = 2.0
 def run():
     from repro.core import PlanSpec, default_topology
     from repro.core.planner import Planner
-    from repro.transfer import (
-        TransferJob,
-        VMFailure,
-        simulate_multi,
-        simulate_multi_reference,
-    )
+    from repro.transfer import TransferJob, VMFailure, simulate
 
     top = default_topology()
     planner = Planner(top, max_relays=6)
@@ -86,10 +81,10 @@ def run():
     kill_region = next(int(d) for d in mc.dsts if mc.N[d] >= 1)
     faults = [VMFailure(t_s=1.5, job=0, region=kill_region, count=1)]
     t0 = time.time()
-    new = simulate_multi([job], faults, seed=0)
+    new = simulate([job], faults, seed=0)
     t_new = time.time() - t0
     t0 = time.time()
-    ref = simulate_multi_reference([job], faults, seed=0)
+    ref = simulate([job], faults, seed=0, engine="ref")
     t_ref = time.time() - t0
     a, b = new.jobs[0], ref.jobs[0]
     assert a.per_dst_delivered == b.per_dst_delivered, (

@@ -18,8 +18,7 @@ def run():
         TransferRequest,
         TransferService,
         VMFailure,
-        simulate_multi,
-        simulate_multi_reference,
+        simulate,
     )
 
     top = default_topology()
@@ -39,11 +38,11 @@ def run():
     ]
 
     t0 = time.time()
-    new = simulate_multi(jobs, faults, seed=0, link_capacity_scale=0.8)
+    new = simulate(jobs, faults, seed=0, link_capacity_scale=0.8)
     t_new = time.time() - t0
     t0 = time.time()
-    ref = simulate_multi_reference(jobs, faults, seed=0,
-                                   link_capacity_scale=0.8)
+    ref = simulate(jobs, faults, seed=0, link_capacity_scale=0.8,
+                   engine="ref")
     t_ref = time.time() - t0
     assert [j.chunks_delivered for j in new.jobs] == [
         j.chunks_delivered for j in ref.jobs

@@ -48,14 +48,13 @@ def _scenario():
 def run():
     from repro.obs.metrics import REGISTRY
     from repro.obs.trace import disable, enable
-    from repro.transfer import simulate_multi
+    from repro.transfer import simulate
 
     planner, specs, jobs, sc = _scenario()
     faults = sc.events(len(jobs))
 
     def once():
-        return simulate_multi(jobs, faults, seed=0, horizon_s=12.0,
-                              drain=True)
+        return simulate(jobs, faults, seed=0, horizon_s=12.0, drain=True)
 
     once()  # warm the vectorized kernels before timing
     reps = 3 if FAST else 5

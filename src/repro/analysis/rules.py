@@ -10,12 +10,14 @@ the self-tests exercise them against synthetic mini-trees under
 | SKY001 | determinism: seeded RNG only, no wall-clock in sim/planner    |
 | SKY002 | cache safety: LP structures built only by milp.py factories   |
 | SKY003 | frozen grids: Topology arrays mutate via with_tput only       |
-| SKY004 | sim parity: flowsim / flowsim_ref signatures + dispatch match |
+| SKY004 | sim parity: the three engine entry points stay signature-     |
+|        | pinned behind sim.simulate and dispatch every event class     |
 | SKY005 | report protocol: *Report classes expose kind/to_dict/summary  |
 | SKY006 | deprecated API: first-party code uses Planner.plan(PlanSpec)  |
 | SKY007 | shared state: registered counters + lock-guarded workers only |
 | SKY008 | format drift: 88-col lines, double quotes, no tabs            |
 | SKY009 | counter discipline: obs.metrics instruments, no `global`      |
+| SKY010 | deprecated sim API: first-party code uses sim.simulate        |
 """
 
 from __future__ import annotations
@@ -221,12 +223,14 @@ def _signature(fn: ast.FunctionDef) -> list[tuple[str, str | None]]:
     return sig
 
 
-def _dispatch_names(fn: ast.FunctionDef) -> set[str]:
-    """Names a sim's event loop dispatches on: the second argument of every
-    ``isinstance(ev, ...)`` call under ``fn`` (tuples contribute each
-    member)."""
+def _dispatch_names(root: ast.AST) -> set[str]:
+    """Names a sim dispatches on: the second argument of every
+    ``isinstance(ev, ...)`` call under ``root`` (tuples contribute each
+    member). ``root`` may be a whole module — since the jax engine splits
+    event application out of its entry point into a host helper, parity is
+    checked module-wide, not per-function."""
     names: set[str] = set()
-    for node in ast.walk(fn):
+    for node in ast.walk(root):
         if not (
             isinstance(node, ast.Call)
             and isinstance(node.func, ast.Name)
@@ -248,34 +252,49 @@ class SimParityRule(Rule):
     id = "SKY004"
     severity = "error"
     description = (
-        "flowsim.simulate_multi and flowsim_ref.simulate_multi_reference "
-        "keep identical signatures, and every event class in events.py is "
-        "dispatched by both event loops"
+        "the three sim engines (flowsim / flowsim_ref / flowsim_jax) keep "
+        "signature-pinned entry points behind transfer.sim.simulate, and "
+        "every event class in events.py is dispatched by all three"
     )
-    hint = "mirror the change in the sibling simulator"
+    hint = "mirror the change in the sibling engines and the dispatcher"
 
     ANCHOR = "src/repro/transfer/flowsim.py"
     REF = "src/repro/transfer/flowsim_ref.py"
+    JAX = "src/repro/transfer/flowsim_jax.py"
+    DISPATCHER = "src/repro/transfer/sim.py"
     EVENTS = "src/repro/transfer/events.py"
 
     def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
         if ctx.current.relpath != self.ANCHOR:
             return []
-        ref_sf = ctx.file(self.REF)
-        ev_sf = ctx.file(self.EVENTS)
-        if ref_sf is None or ref_sf.tree is None:
+        trees: dict[str, ast.Module] = {self.ANCHOR: tree}
+        absent = []
+        for rel in (self.REF, self.JAX, self.DISPATCHER):
+            sf = ctx.file(rel)
+            if sf is None or sf.tree is None:
+                absent.append(rel)
+            else:
+                trees[rel] = sf.tree
+        if absent:
             return [ctx.finding(
-                self, 1, f"cannot check sim parity: {self.REF} not in the "
-                "scanned tree", hint="scan src/ as a whole",
+                self, 1, "cannot check sim parity: "
+                f"{', '.join(absent)} not in the scanned tree",
+                hint="scan src/ as a whole",
             )]
+        ev_sf = ctx.file(self.EVENTS)
         out = []
         fast = _func(tree, "simulate_multi")
-        ref = _func(ref_sf.tree, "simulate_multi_reference")
-        if fast is None or ref is None:
-            missing = "simulate_multi" if fast is None else (
-                "simulate_multi_reference"
-            )
-            return [ctx.finding(self, 1, f"{missing} not found")]
+        ref = _func(trees[self.REF], "simulate_multi_reference")
+        jx = _func(trees[self.JAX], "simulate_multi_jax")
+        disp_fn = _func(trees[self.DISPATCHER], "simulate")
+        lost = [name for name, fn in (
+            ("simulate_multi", fast),
+            ("simulate_multi_reference", ref),
+            ("simulate_multi_jax", jx),
+            ("sim.simulate", disp_fn),
+        ) if fn is None]
+        if lost:
+            return [ctx.finding(self, 1, f"{', '.join(lost)} not found")]
 
         sig_fast, sig_ref = _signature(fast), _signature(ref)
         if sig_fast != sig_ref:
@@ -284,11 +303,35 @@ class SimParityRule(Rule):
                 "simulate_multi and simulate_multi_reference signatures "
                 f"differ: {sig_fast} vs {sig_ref}",
             ))
+        # The jax entry extends the pinned surface with private knobs only
+        # (e.g. _rate_solver) — anything public belongs on SimConfig.
+        sig_jax = _signature(jx)
+        extras = sig_jax[len(sig_fast):]
+        if sig_jax[:len(sig_fast)] != sig_fast or not all(
+            name.lstrip("*").startswith("_") for name, _ in extras
+        ):
+            out.append(ctx.finding(
+                self, fast,
+                "simulate_multi_jax must extend the pinned legacy "
+                f"signature with private knobs only: {sig_jax} vs "
+                f"{sig_fast}",
+            ))
+        # The dispatcher is the legacy surface plus a trailing engine knob.
+        sig_disp = _signature(disp_fn)
+        if sig_disp[:-1] != sig_fast or sig_disp[-1] != (
+            "engine", "'soa'",
+        ):
+            out.append(ctx.finding(
+                self, fast,
+                "sim.simulate must take the pinned legacy signature plus "
+                f"a trailing engine=\"soa\": {sig_disp} vs {sig_fast}",
+            ))
 
         # Expand RATE_EVENTS through events.py so dispatching on the tuple
         # covers its members.
         groups: dict[str, set[str]] = {}
         universe: set[str] = set()
+        ev_classes: set[str] = set()
         if ev_sf is not None and ev_sf.tree is not None:
             for node in ev_sf.tree.body:
                 if isinstance(node, ast.Assign) and isinstance(
@@ -301,6 +344,7 @@ class SimParityRule(Rule):
                                 if _tail(e) is not None
                             }
                 if isinstance(node, ast.ClassDef):
+                    ev_classes.add(node.name)
                     fields = {
                         s.target.id for s in node.body
                         if isinstance(s, ast.AnnAssign)
@@ -317,37 +361,42 @@ class SimParityRule(Rule):
                 flat |= groups.get(n, {n})
             return flat
 
-        disp_fast = expand(_dispatch_names(fast))
-        disp_ref = expand(_dispatch_names(ref))
-        for side, disp, fn in (
-            ("flowsim", disp_fast, fast), ("flowsim_ref", disp_ref, ref),
-        ):
-            if "int" not in disp:
+        engines = (
+            ("flowsim", self.ANCHOR),
+            ("flowsim_ref", self.REF),
+            ("flowsim_jax", self.JAX),
+        )
+        disp = {
+            side: expand(_dispatch_names(trees[rel]))
+            for side, rel in engines
+        }
+        for side, _ in engines:
+            if "int" not in disp[side]:
                 out.append(ctx.finding(
-                    self, fn,
+                    self, fast,
                     f"{side} event loop has no job-arrival (int) dispatch "
                     "branch",
                 ))
         for ev in sorted(universe):
-            for side, disp, fn in (
-                ("flowsim", disp_fast, fast),
-                ("flowsim_ref", disp_ref, ref),
-            ):
-                if ev not in disp:
+            for side, _ in engines:
+                if ev not in disp[side]:
                     out.append(ctx.finding(
-                        self, fn,
+                        self, fast,
                         f"event class {ev} from events.py has no dispatch "
                         f"branch in {side}",
                     ))
-        for ev in sorted(disp_fast ^ disp_ref):
-            if ev == "int" or ev in universe:
-                continue  # already reported above
-            side = "flowsim" if ev in disp_fast else "flowsim_ref"
-            other = "flowsim_ref" if side == "flowsim" else "flowsim"
-            out.append(ctx.finding(
-                self, fast,
-                f"{side} dispatches on {ev} but {other} does not",
-            ))
+        # An events.py class outside the t_s universe dispatched by one
+        # engine must be dispatched by all (isinstance checks on foreign
+        # classes like MulticastPlan are not parity-relevant).
+        union = set().union(*disp.values())
+        for ev in sorted((union & ev_classes) - universe):
+            behind = [s for s, _ in engines if ev not in disp[s]]
+            if behind:
+                out.append(ctx.finding(
+                    self, fast,
+                    f"{ev} is dispatched by some engines but not by "
+                    f"{', '.join(behind)}",
+                ))
         return out
 
 
@@ -693,4 +742,47 @@ class CounterDisciplineRule(Rule):
                         f"zero-seeded module counter {t.id!r} — register "
                         "it as an obs.metrics instrument",
                     ))
+        return out
+
+
+# --------------------------------------------------------------------- SKY010
+@register
+class DeprecatedSimEntryRule(Rule):
+    id = "SKY010"
+    severity = "error"
+    description = (
+        "first-party code simulates through transfer.sim.simulate with an "
+        "engine selector, not the per-engine entry points (tests exempt: "
+        "they pin shim equality)"
+    )
+    hint = 'transfer.sim.simulate(jobs, faults, engine="soa"|"ref"|"jax")'
+
+    ENTRIES = {
+        "simulate_multi", "simulate_multi_reference", "simulate_multi_jax",
+        "_simulate_multi_impl", "_simulate_multi_reference_impl",
+    }
+    SCOPE = ("src", "benchmarks", "examples")
+    # the engines' own homes and the dispatcher that fronts them
+    HOMES = {
+        "src/repro/transfer/flowsim.py",
+        "src/repro/transfer/flowsim_ref.py",
+        "src/repro/transfer/flowsim_jax.py",
+        "src/repro/transfer/sim.py",
+    }
+
+    def visit(self, tree: ast.Module, ctx: Context) -> list[Finding]:
+        if not ctx.under(*self.SCOPE):
+            return []
+        if ctx.current.relpath in self.HOMES:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            t = _tail(node.func)
+            if t in self.ENTRIES:
+                out.append(ctx.finding(
+                    self, node,
+                    f"{t}(...) bypasses the sim-engine dispatcher",
+                ))
         return out

@@ -443,14 +443,14 @@ class CalibratedTransferService(TransferService):
         Scripted ``faults`` are not supported here — incidents belong to
         the DriftModel (the service must *discover* them through probes
         and telemetry, which is the whole point)."""
-        from repro.transfer.flowsim import simulate_multi
+        from repro.transfer.sim import simulate
 
         if faults:
             raise ValueError(
                 "CalibratedTransferService takes no scripted faults; "
                 "script incidents on the DriftModel instead"
             )
-        sim = sim or simulate_multi
+        sim = sim or simulate
         if link_capacity_scale is None:
             link_capacity_scale = self.link_capacity_scale
         states = self._admit_queue()

@@ -1,0 +1,84 @@
+"""Masked max-min water-filling — pure-jnp oracle for the Pallas kernel.
+
+``masked_maxmin_rates`` is a full-array (masked) transliteration of
+``flowsim._maxmin_rates_arr``: instead of compacting to the active
+connections it runs the same iterative bottleneck-saturation rounds over
+every padded lane, with inactive lanes pinned at rate 0 and excluded from
+every count, share, threshold, and capacity subtraction. Under float64 it
+is **bitwise identical** to the numpy oracle on the active lanes — every
+round's arithmetic touches the same values in the same order (segment
+sums add interspersed +0.0 weights, which cannot change an IEEE sum; the
+masked threshold min pads with +inf, which never wins) — so
+``flowsim_jax`` uses it as the parity-grade rate solver on CPU. The
+Pallas kernel (``waterfill.py``) is the same algorithm in one-hot matmul
+form for the accelerator, checked against this oracle in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12  # flowsim._EPS — saturation tolerance of the numpy oracle
+
+
+def masked_maxmin_rates(caps, src, dst, eg_cap, in_cap, eid, ed_cap,
+                        active, *, n_vms: int, n_edges: int,
+                        n_edges_bound: int | None = None):
+    """Max-min fair rates over the ``active`` lanes of a padded conn set.
+
+    caps/src/dst/eid/active are per-connection lanes (padded); eg_cap and
+    in_cap are per-VM egress/ingress budgets sized ``n_vms``; ed_cap is
+    the shared per-edge budget sized ``n_edges`` or None when link
+    contention is disabled. Returns per-lane rates, 0.0 on inactive
+    lanes. Bitwise-equal to ``_maxmin_rates_arr`` on the active lanes
+    under float64. ``n_edges_bound`` overrides the edge term of the
+    round bound (callers that feed BIG edge budgets in place of "no
+    contention" pass 0 so the trip count still matches the oracle's
+    edge-free bound).
+    """
+    # The numpy oracle bounds its rounds by the *compacted* VM count; the
+    # masked form recovers it from the active lanes so the trip count (and
+    # therefore the clamp-to-zero history of the budgets) matches exactly.
+    nv = jnp.max(jnp.where(active, jnp.maximum(src, dst), -1)) + 1
+    if n_edges_bound is None:
+        n_edges_bound = n_edges if ed_cap is not None else 0
+    bound = 2 * nv + n_edges_bound + 4
+    rate = jnp.zeros_like(caps)
+    fixed = ~active
+
+    def cond(c):
+        k, rate, fixed, eg, inn, ed = c
+        return (k < bound) & jnp.any(~fixed & active)
+
+    def step(c):
+        k, rate, fixed, eg, inn, ed = c
+        un = active & ~fixed
+        unf = un.astype(caps.dtype)
+        cnt_out = jax.ops.segment_sum(unf, src, n_vms)
+        cnt_in = jax.ops.segment_sum(unf, dst, n_vms)
+        share_out = jnp.where(cnt_out > 0, eg / jnp.maximum(cnt_out, 1),
+                              jnp.inf)
+        share_in = jnp.where(cnt_in > 0, inn / jnp.maximum(cnt_in, 1),
+                             jnp.inf)
+        share = jnp.minimum(share_out[src], share_in[dst])
+        if ed_cap is not None:
+            cnt_ed = jax.ops.segment_sum(unf, eid, n_edges)
+            share_ed = jnp.where(cnt_ed > 0, ed / jnp.maximum(cnt_ed, 1),
+                                 jnp.inf)
+            share = jnp.minimum(share, share_ed[eid])
+        cap_hit = un & (caps <= share + _EPS)
+        anyc = jnp.any(cap_hit)
+        thresh = jnp.min(jnp.where(un, share, jnp.inf))
+        newly = jnp.where(anyc, cap_hit, un & (share <= thresh + _EPS))
+        rate = jnp.where(newly, jnp.where(anyc, caps, share), rate)
+        w = jnp.where(newly, rate, 0.0)
+        eg = jnp.maximum(eg - jax.ops.segment_sum(w, src, n_vms), 0.0)
+        inn = jnp.maximum(inn - jax.ops.segment_sum(w, dst, n_vms), 0.0)
+        if ed_cap is not None:
+            ed = jnp.maximum(ed - jax.ops.segment_sum(w, eid, n_edges), 0.0)
+        return (k + 1, rate, fixed | newly, eg, inn, ed)
+
+    init = (jnp.int32(0), rate, fixed, eg_cap, in_cap, ed_cap)
+    return jax.lax.while_loop(cond, step, init)[1]

@@ -1,0 +1,129 @@
+"""Max-min water-filling Pallas kernel (one-hot matmul form).
+
+One round of the iterative bottleneck-link saturation step per grid
+iteration (grid = (n_iters,), cribbing the scratch-across-grid pattern
+from ``kernels/ssd_scan``): the per-VM / per-edge segment sums and the
+per-connection gathers both become one-hot matmuls on the MXU —
+``counts = un @ S`` and ``share_per_conn = share_per_vm @ S^T`` for a
+one-hot scatter matrix ``S [NCp, NVp]``. All per-lane vectors ride in
+``[8, X]`` row-replicated tiles (f32 min tile is 8 x 128); the running
+rate / fixed / residual-budget state lives in VMEM scratch, initialized
+on grid step 0 and emitted on the last step. Saturated rounds past
+convergence are natural no-ops (no unfixed lanes -> zero counts -> no
+newly-fixed lanes), so the static iteration bound just burns empty
+steps.
+
+``BIG`` stands in for +inf: infinities would turn the gather matmuls
+into NaN (inf * 0), while BIG survives them (BIG * 0 == 0). The f32
+saturation tolerance is correspondingly looser than the f64 oracle's
+(1e-6 vs 1e-12) — this kernel is the accelerator fast path, checked
+against ``ref.masked_maxmin_rates`` at f32 tolerance, not bitwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30  # finite stand-in for +inf (survives `* 0.0` in matmuls)
+_EPS32 = 1e-6  # f32 saturation tolerance (oracle uses 1e-12 in f64)
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _waterfill_kernel(caps_ref, act_ref, eg_ref, in_ref, ed_ref,
+                      s_src_ref, s_src_t_ref, s_dst_ref, s_dst_t_ref,
+                      s_ed_ref, s_ed_t_ref, rate_out_ref,
+                      rate_s, fixed_s, eg_s, in_s, ed_s, *, n_iters: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        rate_s[...] = jnp.zeros_like(rate_s)
+        fixed_s[...] = 1.0 - act_ref[...]
+        eg_s[...] = eg_ref[...]
+        in_s[...] = in_ref[...]
+        ed_s[...] = ed_ref[...]
+
+    caps = caps_ref[...]  # [8, NCp]
+    un = act_ref[...] * (1.0 - fixed_s[...])  # [8, NCp], 0/1
+
+    cnt_out = _dot(un, s_src_ref[...])  # [8, NVp]
+    cnt_in = _dot(un, s_dst_ref[...])  # [8, NVp]
+    cnt_ed = _dot(un, s_ed_ref[...])  # [8, NEp]
+    share_out = jnp.where(cnt_out > 0, eg_s[...] / jnp.maximum(cnt_out, 1.0),
+                          BIG)
+    share_in = jnp.where(cnt_in > 0, in_s[...] / jnp.maximum(cnt_in, 1.0),
+                         BIG)
+    share_ed = jnp.where(cnt_ed > 0, ed_s[...] / jnp.maximum(cnt_ed, 1.0),
+                         BIG)
+    share = jnp.minimum(_dot(share_out, s_src_t_ref[...]),
+                        _dot(share_in, s_dst_t_ref[...]))
+    share = jnp.minimum(share, _dot(share_ed, s_ed_t_ref[...]))
+    # gather-matmuls zero out padding lanes; restore their BIG sentinel so
+    # the threshold min below never sees a spurious 0
+    share = jnp.where(un > 0, share, BIG)
+
+    cap_hit = jnp.where((un > 0) & (caps <= share + _EPS32), 1.0, 0.0)
+    anyc = jnp.max(cap_hit)  # 1.0 when any lane saturated its own cap
+    thresh = jnp.min(share)
+    th_hit = jnp.where((un > 0) & (share <= thresh + _EPS32), 1.0, 0.0)
+    newly = anyc * cap_hit + (1.0 - anyc) * th_hit
+    chosen = anyc * caps + (1.0 - anyc) * share
+    rate = jnp.where(newly > 0, chosen, rate_s[...])
+    w = jnp.where(newly > 0, rate, 0.0)
+    rate_s[...] = rate
+    fixed_s[...] = jnp.minimum(fixed_s[...] + newly, 1.0)
+    eg_s[...] = jnp.maximum(eg_s[...] - _dot(w, s_src_ref[...]), 0.0)
+    in_s[...] = jnp.maximum(in_s[...] - _dot(w, s_dst_ref[...]), 0.0)
+    ed_s[...] = jnp.maximum(ed_s[...] - _dot(w, s_ed_ref[...]), 0.0)
+
+    @pl.when(i == n_iters - 1)
+    def _emit():
+        rate_out_ref[...] = rate_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
+def waterfill_8x(caps8, act8, eg8, in8, ed8, s_src, s_src_t, s_dst,
+                 s_dst_t, s_ed, s_ed_t, *, n_iters: int,
+                 interpret: bool = False):
+    """Padded-tile water-filling: caps8/act8 [8, NCp], eg8/in8 [8, NVp],
+    ed8 [8, NEp], one-hot scatter matrices s_* [NCp, NVp|NEp] (+ their
+    transposes) -> rates [8, NCp] (rows identical)."""
+    r, ncp = caps8.shape
+    nvp = eg8.shape[1]
+    nep = ed8.shape[1]
+    def full(*shape):
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    kernel = functools.partial(_waterfill_kernel, n_iters=n_iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_iters,),
+        in_specs=[
+            full(r, ncp), full(r, ncp), full(r, nvp), full(r, nvp),
+            full(r, nep), full(ncp, nvp), full(nvp, ncp), full(ncp, nvp),
+            full(nvp, ncp), full(ncp, nep), full(nep, ncp),
+        ],
+        out_specs=full(r, ncp),
+        out_shape=jax.ShapeDtypeStruct((r, ncp), jnp.float32),
+        scratch_shapes=[
+            _vmem((r, ncp)), _vmem((r, ncp)), _vmem((r, nvp)),
+            _vmem((r, nvp)), _vmem((r, nep)),
+        ],
+        interpret=interpret,
+    )(caps8, act8, eg8, in8, ed8, s_src, s_src_t, s_dst, s_dst_t, s_ed,
+      s_ed_t)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -3,8 +3,8 @@
     PYTHONPATH=src python -m repro.obs [--seed N] [--out trace.json] [--text]
 
 Plans two jobs on the default topology, compiles a seeded
-``ChaosScenario`` against their routes, runs ``simulate_multi`` (or the
-reference oracle with ``--sim ref``) with the tracer enabled, and writes
+``ChaosScenario`` against their routes, runs ``transfer.sim.simulate``
+(the reference oracle with ``--sim ref``) with the tracer enabled, and writes
 the Chrome-trace JSON — load it at https://ui.perfetto.dev or
 ``chrome://tracing``. The tracer is enabled AFTER planning, so the
 exported trace contains only sim-time events and the same ``--seed``
@@ -34,12 +34,7 @@ def trace_chaos_scenario(
 ) -> list:
     """Run the seeded chaos scenario under tracing; returns the events."""
     from repro.core import Planner, PlanSpec, default_topology
-    from repro.transfer import (
-        ChaosScenario,
-        TransferJob,
-        simulate_multi,
-        simulate_multi_reference,
-    )
+    from repro.transfer import ChaosScenario, TransferJob, simulate
 
     top = default_topology()
     planner = Planner(top, max_relays=6)
@@ -65,11 +60,11 @@ def trace_chaos_scenario(
         n_brownouts=1, n_gray=1, n_flapping=1,
         links=[(s, d), (s2, d)],
     )
-    sim = simulate_multi_reference if reference else simulate_multi
+    engine = "ref" if reference else "soa"
     tr = enable(capacity=capacity)
     try:
-        sim(jobs, sc.events(len(jobs)), seed=seed,
-            horizon_s=horizon_s, drain=True)
+        simulate(jobs, sc.events(len(jobs)), seed=seed,
+                 horizon_s=horizon_s, drain=True, engine=engine)
         return tr.events()
     finally:
         disable()

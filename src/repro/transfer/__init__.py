@@ -1,5 +1,6 @@
 from .chunk import Chunk, chunk_manifest, chunk_object, checksum  # noqa: F401
 from .simconfig import SimConfig  # noqa: F401
+from .sim import simulate  # noqa: F401
 from .flowsim import SimResult, simulate_multi, simulate_transfer  # noqa: F401
 from .flowsim_ref import (  # noqa: F401
     simulate_multi_reference,
@@ -101,6 +102,7 @@ __all__ = [
     "compile_archetypes",
     "execute_plan",
     "execute_service_model",
+    "simulate",
     "simulate_multi",
     "simulate_multi_reference",
     "simulate_transfer",

@@ -204,6 +204,13 @@ class MultiSetup:
 
     top: object  # Topology of jobs[0] (shared link grid / prices)
     arrivals: np.ndarray  # [J]
+    # job indices sorted by (arrival_s, job id). Padded-array engines lay
+    # jobs out in THIS order, so it must be deterministic under tied
+    # arrivals: a bare ``np.argsort(arrivals)`` (introsort) may permute
+    # equal keys differently across runs/platforms, silently reshuffling
+    # the padded layout between engines. The job id in the sort key pins
+    # the tie-break.
+    arrival_order: np.ndarray  # [J]
     n_chunks: np.ndarray  # [J] chunks per job
     chunk_gbit: np.ndarray  # [J] chunk size per job (Gbit)
     chunk_path: list[np.ndarray]  # per job: chunk id -> path/tree id
@@ -474,6 +481,10 @@ def materialize_jobs(
     return MultiSetup(
         top=exec_top if exec_top is not None else top0,
         arrivals=arrivals,
+        arrival_order=np.asarray(
+            sorted(range(len(jobs)), key=lambda j: (float(arrivals[j]), j)),
+            dtype=np.int64,
+        ),
         n_chunks=n_chunks,
         chunk_gbit=chunk_gbit,
         chunk_path=chunk_path,

@@ -847,7 +847,7 @@ class TransferService:
         ``faults`` are service-level events (events.LinkDegrade /
         events.LinkRestore / events.GrayFailure / events.VMFailure with
         absolute times); ``sim`` overrides the simulator entry point
-        (defaults to flowsim.simulate_multi — the reference oracle drops
+        (defaults to transfer.sim.simulate — the reference oracle drops
         in for cross-checks).
 
         Visible events segment the timeline and fold into the degraded
@@ -856,9 +856,9 @@ class TransferService:
         planner's view, never a segment boundary, never a re-plan. That
         asymmetry is the whole gray-failure story: only telemetry (or a
         breaker fed by it) can catch what the control plane cannot see."""
-        from .flowsim import simulate_multi
+        from .sim import simulate
 
-        sim = sim or simulate_multi
+        sim = sim or simulate
         states = self._admit_queue()
         visible = [f for f in faults if not isinstance(f, GrayFailure)]
         silent = sorted(

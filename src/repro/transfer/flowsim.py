@@ -39,6 +39,7 @@ from repro.obs.trace import get_tracer
 
 from .simconfig import SimConfig
 from .simconfig import resolve as resolve_sim_config
+from .simconfig import warn_deprecated_entry as _warn_deprecated_entry
 
 _EPS = 1e-12
 
@@ -463,6 +464,35 @@ def simulate_transfer(
 
 # --------------------------------------------------------------------- multi
 def simulate_multi(
+    jobs,
+    faults=(),
+    *,
+    config: SimConfig | None = None,
+    link_capacity_scale: float | None = 2.0,
+    straggler_prob: float = 0.05,
+    straggler_speed: tuple[float, float] = (0.15, 0.5),
+    relay_buffer_chunks: int = 64,
+    seed: int = 0,
+    horizon_s: float | None = None,
+    exec_top=None,
+    drain: bool = False,
+):
+    """Deprecated alias for ``transfer.sim.simulate(engine="soa")``.
+
+    Kept (signature-pinned, bitwise-equal) for backward compatibility;
+    new code goes through the dispatcher, which is the one place the
+    ``engine`` knob is honored. SKY010 bans fresh first-party calls."""
+    _warn_deprecated_entry("flowsim.simulate_multi")
+    return _simulate_multi_impl(
+        jobs, faults, config=config,
+        link_capacity_scale=link_capacity_scale,
+        straggler_prob=straggler_prob, straggler_speed=straggler_speed,
+        relay_buffer_chunks=relay_buffer_chunks, seed=seed,
+        horizon_s=horizon_s, exec_top=exec_top, drain=drain,
+    )
+
+
+def _simulate_multi_impl(
     jobs,
     faults=(),
     *,

@@ -1,0 +1,77 @@
+"""transfer.sim — the one sanctioned multi-job simulation entry point.
+
+``simulate`` fronts the three engines behind one signature (the legacy
+kwargs of the historical per-engine functions, plus ``engine``):
+
+  * ``"ref"`` — object-per-connection oracle (``flowsim_ref``), the
+    semantics ground truth; dict/list bookkeeping, slowest;
+  * ``"soa"`` — vectorized numpy event loop (``flowsim``), the default;
+  * ``"jax"`` — fixed-shape accelerator-resident loop (``flowsim_jax``):
+    the event loop runs under ``lax.while_loop`` with a masked
+    water-filling solver (Pallas kernel on TPU backends), chunk-for-chunk
+    identical to the other two.
+
+The per-engine entry points (``flowsim.simulate_multi``,
+``flowsim_ref.simulate_multi_reference``) are deprecated shims kept for
+backward compatibility; ``analysis.rules`` SKY010 bans new first-party
+calls to them. The registry is a plain if/elif chain on purpose — a
+module-level dict of engine callables would be mutable import-time state
+(SKY007) and would force eager imports of every engine (the jax engine
+pulls in the accelerator stack, which the numpy paths must not pay for).
+"""
+
+from __future__ import annotations
+
+from .simconfig import ENGINE_NAMES, SimConfig
+from .simconfig import resolve as resolve_sim_config
+
+__all__ = ["simulate"]
+
+
+def simulate(
+    jobs,
+    faults=(),
+    *,
+    config: SimConfig | None = None,
+    link_capacity_scale: float | None = 2.0,
+    straggler_prob: float = 0.05,
+    straggler_speed: tuple[float, float] = (0.15, 0.5),
+    relay_buffer_chunks: int = 64,
+    seed: int = 0,
+    horizon_s: float | None = None,
+    exec_top=None,
+    drain: bool = False,
+    engine: str = "soa",
+):
+    """Run a multi-job transfer scenario on the selected engine.
+
+    Accepts either a :class:`SimConfig` (``config=...``, which carries
+    ``engine`` too) or the legacy individual kwargs — passing a knob both
+    ways raises. Every engine consumes the same materialized scenario
+    (``events.materialize_jobs``) and returns ``events.MultiSimResult``;
+    per-job chunk counts, retries, statuses and Skytrace streams are
+    pinned identical across engines by tests/test_sim_engines.py.
+    """
+    cfg = resolve_sim_config(
+        config, link_capacity_scale=link_capacity_scale,
+        straggler_prob=straggler_prob, straggler_speed=straggler_speed,
+        relay_buffer_chunks=relay_buffer_chunks, seed=seed,
+        horizon_s=horizon_s, exec_top=exec_top, drain=drain, engine=engine,
+    )
+    if cfg.engine == "soa":
+        from .flowsim import _simulate_multi_impl
+
+        return _simulate_multi_impl(jobs, faults, config=cfg)
+    elif cfg.engine == "ref":
+        from .flowsim_ref import _simulate_multi_reference_impl
+
+        return _simulate_multi_reference_impl(jobs, faults, config=cfg)
+    elif cfg.engine == "jax":
+        # lazy: the accelerator stack loads only when asked for
+        from .flowsim_jax import simulate_multi_jax
+
+        return simulate_multi_jax(jobs, faults, config=cfg)
+    raise ValueError(  # unreachable: SimConfig validates eagerly
+        f"unknown sim engine {cfg.engine!r}; registered engines: "
+        f"{', '.join(ENGINE_NAMES)}"
+    )

@@ -14,12 +14,22 @@ silently broke the chunk-for-chunk parity the oracle exists to pin.
     again.
 
 This module is import-leaf (numpy only) so both sims and ``events.py``
-can use it without circularity.
+can use it without circularity. The registered engine NAMES live here for
+the same reason: ``transfer.sim`` (the dispatcher) asserts its registry
+matches ``ENGINE_NAMES``, while ``SimConfig`` can validate eagerly without
+importing any engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
+
+# The sanctioned simulation engines, in oracle -> fast -> accelerator order:
+#   "ref" — object-per-connection oracle (flowsim_ref)
+#   "soa" — vectorized numpy event loop (flowsim)
+#   "jax" — fixed-shape accelerator-resident loop (flowsim_jax)
+ENGINE_NAMES = ("ref", "soa", "jax")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,9 +49,30 @@ class SimConfig:
     exec_top: object | None = None  # execute on a different grid (TRUE vs
     # believed — the calibration plane's split)
     drain: bool = False  # graceful horizon: in-flight chunks complete
+    # which event loop runs the scenario; only transfer.sim.simulate (the
+    # dispatcher) reads it — the deprecated per-engine entry points ignore
+    # it by design (each IS one engine)
+    engine: str = "soa"
+
+    def __post_init__(self):
+        if self.engine not in ENGINE_NAMES:
+            raise ValueError(
+                f"unknown sim engine {self.engine!r}; registered engines: "
+                f"{', '.join(ENGINE_NAMES)}"
+            )
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)
+
+
+def warn_deprecated_entry(name: str) -> None:
+    """One deprecation message for the per-engine sim entry points."""
+    warnings.warn(
+        f"{name}() is deprecated; call transfer.sim.simulate(...) with "
+        'SimConfig(engine=...) or engine="..." (see README "Sim engines")',
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def resolve(config: SimConfig | None, **kwargs) -> SimConfig:

@@ -22,7 +22,8 @@ import repro.transfer as transfer
 from repro.core import PlanSpec, Planner, default_topology
 from repro.transfer.flowsim import simulate_multi
 from repro.transfer.flowsim_ref import simulate_multi_reference
-from repro.transfer.simconfig import SimConfig, resolve
+from repro.transfer.sim import simulate
+from repro.transfer.simconfig import ENGINE_NAMES, SimConfig, resolve
 
 SRC, DST = "aws:us-west-2", "aws:eu-central-1"
 DSTS = ("aws:eu-central-1", "gcp:us-central1")
@@ -48,7 +49,7 @@ TRANSFER_ALL = {
     "ServiceReport", "SimConfig", "SimResult", "TenantReport", "TenantSpec",
     "TransferJob", "TransferRequest", "TransferService", "VMFailure",
     "checksum", "chunk_manifest", "chunk_object", "compile_archetypes",
-    "execute_plan", "execute_service_model", "simulate_multi",
+    "execute_plan", "execute_service_model", "simulate", "simulate_multi",
     "simulate_multi_reference", "simulate_transfer",
     "simulate_transfer_reference", "transfer_objects",
     "transfer_objects_multicast",
@@ -93,6 +94,7 @@ PLANSPEC_FIELDS = {
 SIMCONFIG_FIELDS = {
     "link_capacity_scale", "straggler_prob", "straggler_speed",
     "relay_buffer_chunks", "seed", "horizon_s", "exec_top", "drain",
+    "engine",
 }
 
 
@@ -119,10 +121,63 @@ def test_sim_signatures_identical():
 
 
 def test_simconfig_knobs_cover_both_sims():
-    """Every SimConfig field is a keyword of both simulators."""
+    """Every SimConfig field except ``engine`` is a keyword of both
+    per-engine entry points (each IS one engine, so they take no engine
+    knob); the dispatcher carries the full set."""
     for fn in (simulate_multi, simulate_multi_reference):
         params = set(inspect.signature(fn).parameters)
-        assert SIMCONFIG_FIELDS <= params
+        assert SIMCONFIG_FIELDS - {"engine"} <= params
+    assert SIMCONFIG_FIELDS <= set(inspect.signature(simulate).parameters)
+
+
+def test_dispatcher_signature_is_legacy_plus_engine():
+    """transfer.sim.simulate = the pinned per-engine signature plus a
+    trailing ``engine`` kwarg — callers migrate by renaming the function,
+    never by reshuffling arguments."""
+    legacy = inspect.signature(simulate_multi)
+    disp = inspect.signature(simulate)
+    names = list(disp.parameters)
+    assert names[:-1] == list(legacy.parameters)
+    assert names[-1] == "engine"
+    assert disp.parameters["engine"].default == "soa"
+    for name in legacy.parameters:
+        pl, pd = legacy.parameters[name], disp.parameters[name]
+        assert pl.kind == pd.kind, name
+        assert pl.default == pd.default or pl.default is pd.default, name
+
+
+def test_engine_registry_pinned():
+    assert ENGINE_NAMES == ("ref", "soa", "jax")
+    assert SimConfig().engine == "soa"
+    with pytest.raises(ValueError, match="unknown sim engine"):
+        SimConfig(engine="numpy")
+    with pytest.raises(ValueError, match="both"):
+        resolve(SimConfig(engine="jax"), engine="ref")
+
+
+def test_deprecated_sim_shims_bitwise_equal_dispatcher():
+    """The shims warn and return results bitwise-equal to the dispatcher
+    (same impl underneath — this pins the delegation wiring)."""
+    from repro.core import direct_plan
+    from repro.transfer import LinkDegrade, TransferJob
+
+    top = default_topology()
+    jobs = [TransferJob(direct_plan(top, SRC, DST, 0.5, num_vms=2), "a")]
+    faults = [LinkDegrade(t_s=0.5, src=top.index(SRC), dst=top.index(DST),
+                          factor=0.5)]
+    for shim, engine in (
+        (simulate_multi, "soa"), (simulate_multi_reference, "ref"),
+    ):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            legacy = shim(jobs, faults, seed=1)
+        fresh = simulate(jobs, faults, seed=1, engine=engine)
+        assert legacy.time_s == fresh.time_s
+        assert legacy.events == fresh.events
+        for a, b in zip(legacy.jobs, fresh.jobs):
+            assert a.time_s == b.time_s
+            assert a.chunks_delivered == b.chunks_delivered
+            assert a.total_cost == b.total_cost
+            assert a.per_edge_gb == b.per_edge_gb
 
 
 # ------------------------------------------------------- PlanSpec validation

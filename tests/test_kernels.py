@@ -139,3 +139,79 @@ def test_quantize_zero_block():
     assert np.all(np.asarray(q) == 0)
     xr = dequantize_int8(q.reshape(-1), s[:, 0])
     assert np.all(np.asarray(xr) == 0)
+
+
+# ------------------------------------------------------------------ waterfill
+def _waterfill_case(seed, *, with_edges):
+    """A padded max-min scenario: nc live lanes scattered across ncp slots,
+    junk caps/indices in the dead lanes (the mask must neutralize them)."""
+    rng = np.random.default_rng(seed)
+    nv = int(rng.integers(2, 10))
+    nc = int(rng.integers(1, 40))
+    ncp = nc + int(rng.integers(0, 17))
+    active = np.zeros(ncp, dtype=bool)
+    active[rng.permutation(ncp)[:nc]] = True
+    caps = np.where(active, rng.uniform(0.5, 8.0, ncp), 123.0)
+    src = rng.integers(0, nv, ncp)
+    dst = rng.integers(0, nv, ncp)
+    eg = rng.uniform(1.0, 12.0, nv)
+    inn = rng.uniform(1.0, 12.0, nv)
+    if with_edges:
+        ne = int(rng.integers(1, 5))
+        eid = rng.integers(0, ne, ncp)
+        ed = rng.uniform(2.0, 20.0, ne)
+    else:
+        ne, eid, ed = 0, np.zeros(ncp, dtype=np.int64), None
+    return caps, src, dst, eg, inn, eid, ed, active, nv, ne
+
+
+@pytest.mark.parametrize("with_edges", [False, True])
+@pytest.mark.parametrize("seed", range(4))
+def test_masked_waterfill_bitwise_vs_flowsim_oracle(seed, with_edges):
+    """ref.masked_maxmin_rates on padded lanes is BITWISE the flowsim
+    numpy water-filler on the compacted set (the f64 parity contract the
+    jax sim engine stands on), and dead lanes come back exactly 0.0."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.waterfill.ref import masked_maxmin_rates
+    from repro.transfer.flowsim import _maxmin_rates_arr
+
+    caps, src, dst, eg, inn, eid, ed, active, nv, ne = _waterfill_case(
+        seed, with_edges=with_edges,
+    )
+    want = _maxmin_rates_arr(
+        caps[active], src[active], dst[active], eg, inn,
+        eid[active] if ed is not None else None, ed,
+    )
+    with enable_x64():
+        got = np.asarray(masked_maxmin_rates(
+            jnp.asarray(caps), jnp.asarray(src), jnp.asarray(dst),
+            jnp.asarray(eg), jnp.asarray(inn), jnp.asarray(eid),
+            None if ed is None else jnp.asarray(ed),
+            jnp.asarray(active), n_vms=nv, n_edges=ne,
+        ))
+    assert np.array_equal(got[active], want)
+    assert np.all(got[~active] == 0.0)
+
+
+@pytest.mark.parametrize("with_edges", [False, True])
+@pytest.mark.parametrize("seed", range(3))
+def test_pallas_waterfill_matches_oracle_f32(seed, with_edges):
+    """The Pallas one-hot-matmul kernel (interpret mode off-TPU) tracks the
+    f64 oracle to f32 tolerance, masked lanes included."""
+    from repro.kernels.waterfill.ops import waterfill_rates
+    from repro.transfer.flowsim import _maxmin_rates_arr
+
+    caps, src, dst, eg, inn, eid, ed, active, nv, ne = _waterfill_case(
+        seed, with_edges=with_edges,
+    )
+    want = _maxmin_rates_arr(
+        caps[active], src[active], dst[active], eg, inn,
+        eid[active] if ed is not None else None, ed,
+    )
+    got = np.asarray(waterfill_rates(
+        caps, src, dst, eg, inn,
+        eid if ed is not None else None, ed, active,
+    ))
+    np.testing.assert_allclose(got[active], want, rtol=5e-3, atol=5e-3)
+    assert np.all(got[~active] == 0.0)

@@ -22,7 +22,7 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 
 EXPECTED_RULES = (
     "SKY001", "SKY002", "SKY003", "SKY004",
-    "SKY005", "SKY006", "SKY007", "SKY008", "SKY009",
+    "SKY005", "SKY006", "SKY007", "SKY008", "SKY009", "SKY010",
 )
 
 
@@ -41,7 +41,7 @@ def rule_ids(report):
     return [f.rule for f in report.findings]
 
 
-# A minimal parity-clean simulator pair every SKY004 fixture starts from.
+# A minimal parity-clean engine trio every SKY004 fixture starts from.
 EVENTS_SRC = """\
     import dataclasses
 
@@ -78,13 +78,29 @@ FLOWSIM_REF_SRC = (
     "    def simulate_multi_reference(jobs, faults=(), *, seed=0):\n"
     + SIM_BODY
 )
+# The jax engine applies events in a host helper, not the entry point —
+# dispatch coverage is checked module-wide, so this must lint clean.
+FLOWSIM_JAX_SRC = (
+    "    def _host_apply_due(faults):\n" + SIM_BODY + "\n\n"
+    "    def simulate_multi_jax(jobs, faults=(), *, seed=0, "
+    '_rate_solver="auto"):\n'
+    "        _host_apply_due(faults)\n"
+)
+SIM_SRC = """\
+    def simulate(jobs, faults=(), *, seed=0, engine="soa"):
+        if engine == "soa":
+            pass
+"""
 
 
-def parity_tree(flowsim=FLOWSIM_SRC, ref=FLOWSIM_REF_SRC):
+def parity_tree(flowsim=FLOWSIM_SRC, ref=FLOWSIM_REF_SRC,
+                jax=FLOWSIM_JAX_SRC, sim=SIM_SRC):
     return {
         "src/repro/transfer/events.py": EVENTS_SRC,
         "src/repro/transfer/flowsim.py": flowsim,
         "src/repro/transfer/flowsim_ref.py": ref,
+        "src/repro/transfer/flowsim_jax.py": jax,
+        "src/repro/transfer/sim.py": sim,
     }
 
 
@@ -199,6 +215,54 @@ def test_sky004_fires_on_missing_dispatch_branch(tmp_path):
     assert "flowsim_ref" in rep.findings[0].message
 
 
+def test_sky004_jax_dispatch_is_checked_module_wide(tmp_path):
+    # entry point + helper with no VMFailure branch anywhere in the module
+    jax_no_vmfail = (
+        "    def _host_apply_due(faults):\n"
+        "        for ev in faults:\n"
+        "            if isinstance(ev, int):\n"
+        "                pass\n"
+        "            elif isinstance(ev, RATE_EVENTS):\n"
+        "                pass\n\n\n"
+        "    def simulate_multi_jax(jobs, faults=(), *, seed=0, "
+        '_rate_solver="auto"):\n'
+        "        _host_apply_due(faults)\n"
+    )
+    rep = lint(tmp_path, parity_tree(jax=jax_no_vmfail))
+    assert rule_ids(rep) == ["SKY004"]
+    assert "VMFailure" in rep.findings[0].message
+    assert "flowsim_jax" in rep.findings[0].message
+
+
+def test_sky004_fires_on_public_jax_knob(tmp_path):
+    jax_public = (
+        "    def simulate_multi_jax(jobs, faults=(), *, seed=0, "
+        'solver="auto"):\n' + SIM_BODY
+    )
+    rep = lint(tmp_path, parity_tree(jax=jax_public))
+    assert rule_ids(rep) == ["SKY004"]
+    assert "private" in rep.findings[0].message
+
+
+def test_sky004_fires_on_dispatcher_drift(tmp_path):
+    # engine must be the TRAILING knob with default "soa"
+    drifted = """\
+        def simulate(jobs, faults=(), *, engine="soa", seed=0):
+            pass
+    """
+    rep = lint(tmp_path, parity_tree(sim=drifted))
+    assert rule_ids(rep) == ["SKY004"]
+    assert "sim.simulate" in rep.findings[0].message
+
+
+def test_sky004_fires_when_an_engine_file_is_missing(tmp_path):
+    tree = parity_tree()
+    del tree["src/repro/transfer/sim.py"]
+    rep = lint(tmp_path, tree)
+    assert rule_ids(rep) == ["SKY004"]
+    assert "sim.py" in rep.findings[0].message
+
+
 # ------------------------------------------------------------------- SKY005
 def test_sky005_fires_on_protocol_gaps(tmp_path):
     rep = lint(tmp_path, {"src/repro/transfer/x.py": """\
@@ -259,6 +323,34 @@ def test_sky006_fires_in_first_party_code_not_tests(tmp_path):
     })
     assert rule_ids(rep) == ["SKY006"]
     assert rep.findings[0].path == "benchmarks/x.py"
+
+
+# ------------------------------------------------------------------- SKY010
+def test_sky010_fires_on_direct_engine_entry_calls(tmp_path):
+    rep = lint(tmp_path, {"src/repro/calibrate/x.py": """\
+        from repro.transfer.flowsim import simulate_multi
+
+
+        def go(jobs, flowsim_ref):
+            a = simulate_multi(jobs)
+            b = flowsim_ref.simulate_multi_reference(jobs)
+            return a, b
+    """})
+    assert rule_ids(rep) == ["SKY010", "SKY010"]
+    assert "dispatcher" in rep.findings[0].message
+
+
+def test_sky010_exempts_tests_and_engine_homes(tmp_path):
+    rep = lint(tmp_path, {
+        # tests pin shim equality: exempt
+        "tests/test_x.py": "r = simulate_multi([])\n",
+        # the dispatcher itself calls the impls: exempt
+        "src/repro/transfer/sim.py": """\
+            def simulate(jobs, faults=(), *, seed=0, engine="soa"):
+                return _simulate_multi_impl(jobs, faults)
+        """,
+    })
+    assert rep.ok, rep.to_text()
 
 
 # ------------------------------------------------------------------- SKY007
